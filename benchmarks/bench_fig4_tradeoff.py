@@ -1,0 +1,52 @@
+"""Fig. 4: V sweep of energy / Q / H plus the L_b energy-staleness
+trade-off, against the immediate / offline / sync baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import FederatedSim, SimConfig
+
+
+def run(fast: bool = True):
+    horizon = 3600 if fast else 10800
+    n_users = 25
+    rows = []
+
+    base = dict(horizon_s=horizon, n_users=n_users, seed=0)
+    for pol in ("immediate", "offline", "sync"):
+        r = FederatedSim(SimConfig(policy=pol, **base)).run()
+        rows.append({"bench": "fig4_tradeoff", "policy": pol, "V": "",
+                     "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
+                     "mean_Q": round(r.mean_Q, 2),
+                     "mean_H": round(r.mean_H, 2),
+                     "updates": r.updates,
+                     "corun_frac": round(r.corun_fraction, 3)})
+
+    vs = [1e2, 1e3, 4e3, 1e4, 1e5] if fast else \
+        [1e2, 3e2, 1e3, 4e3, 1e4, 3e4, 1e5, 1e6]
+    for V in vs:
+        r = FederatedSim(SimConfig(policy="online", V=V, **base)).run()
+        rows.append({"bench": "fig4_tradeoff", "policy": "online", "V": V,
+                     "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
+                     "mean_Q": round(r.mean_Q, 2),
+                     "mean_H": round(r.mean_H, 2),
+                     "updates": r.updates,
+                     "corun_frac": round(r.corun_fraction, 3)})
+
+    # Fig. 4d: staleness bound sweep
+    for L_b in ([100.0, 1000.0] if fast else [50.0, 100.0, 500.0, 1000.0]):
+        r = FederatedSim(SimConfig(policy="online", V=4000.0, L_b=L_b,
+                                   **base)).run()
+        rows.append({"bench": "fig4_tradeoff", "policy": "online_Lb",
+                     "V": 4000.0, "L_b": L_b,
+                     "energy_kj": round(r.energy_j / 1e3, 2),
+                     "mean_Q": round(r.mean_Q, 2),
+                     "mean_H": round(r.mean_H, 2),
+                     "updates": r.updates,
+                     "corun_frac": round(r.corun_fraction, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,29 @@
+"""Fig. 6: impact of the application arrival rate (1e-4 .. 0.2 per slot)
+on energy and the online scheme's degradation to immediate."""
+from __future__ import annotations
+
+from repro.core.simulator import FederatedSim, SimConfig
+
+
+def run(fast: bool = True):
+    horizon = 3000 if fast else 10800
+    rates = [1e-4, 1e-3, 1e-2, 0.2] if fast else \
+        [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 0.05, 0.2]
+    rows = []
+    for p in rates:
+        for pol in ("immediate", "online", "offline"):
+            r = FederatedSim(SimConfig(policy=pol, app_arrival_p=p,
+                                       horizon_s=horizon, n_users=25,
+                                       seed=1)).run()
+            rows.append({
+                "bench": "fig6_arrival", "policy": pol, "arrival_p": p,
+                "energy_kj": round(r.energy_j / 1e3, 2),
+                "updates": r.updates,
+                "corun_frac": round(r.corun_fraction, 3),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

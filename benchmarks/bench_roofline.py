@@ -1,0 +1,42 @@
+"""§Roofline: the three terms per (arch x shape) from the dry-run JSONs
+(artifacts/dryrun). Requires the dry-run sweep to have been run; emits
+nothing (with a notice row) if artifacts are absent."""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import cell_terms, load_records
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def run(fast: bool = True):
+    rows = []
+    if not os.path.isdir(ART):
+        return [{"bench": "roofline", "arch": "(run launch.dryrun first)",
+                 "shape": "", "compute_s": "", "memory_s": "",
+                 "collective_s": "", "dominant": "", "roofline_pct": "",
+                 "useful_pct": ""}]
+    for rec in load_records(ART, "single"):
+        t = cell_terms(rec)
+        if t is None:
+            rows.append({"bench": "roofline", "arch": rec["arch"],
+                         "shape": rec["shape"], "compute_s": "ERR",
+                         "memory_s": "", "collective_s": "", "dominant": "",
+                         "roofline_pct": "", "useful_pct": ""})
+            continue
+        rows.append({
+            "bench": "roofline", "arch": t["arch"], "shape": t["shape"],
+            "compute_s": round(t["compute_s"], 4),
+            "memory_s": round(t["memory_s"], 4),
+            "collective_s": round(t["collective_s"], 4),
+            "dominant": t["dominant"],
+            "roofline_pct": round(100 * t["roofline_fraction"], 1),
+            "useful_pct": round(100 * t["useful_ratio"], 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

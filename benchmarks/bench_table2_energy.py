@@ -1,0 +1,29 @@
+"""Table II: per-(device, app) co-running energy saving percentages,
+reproduced from the measured power/time catalog."""
+from __future__ import annotations
+
+from repro.core.energy import APPS, TESTBED
+
+
+def run(fast: bool = True):
+    rows = []
+    for dev, prof in TESTBED.items():
+        for app in APPS:
+            a = prof.apps[app]
+            rows.append({
+                "bench": "table2_energy",
+                "device": dev,
+                "app": app,
+                "p_app_w": a.p_app,
+                "p_corun_w": a.p_corun,
+                "p_train_w": prof.p_train,
+                "t_corun_s": a.t_corun,
+                "saving_pct": round(100 * prof.saving_percent(app), 1),
+                "saving_rate_w": round(prof.energy_saving_rate(app), 3),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,40 @@
+"""Table III: the online decision's compute overhead — microseconds per
+Eq. (21) evaluation and the implied power overhead per device."""
+from __future__ import annotations
+
+import time
+
+from repro.core.energy import TESTBED
+from repro.core.lyapunov import OnlineScheduler, UserSlotState
+
+
+def run(fast: bool = True):
+    sched = OnlineScheduler(V=4000, L_b=1000, eta=0.01, beta=0.9)
+    sched.Q, sched.H = 10.0, 5.0
+    u = UserSlotState(p_corun=2.5, p_app=2.0, p_train=1.35, p_idle=0.689,
+                      app_running=True, lag_estimate=3, idle_gap=0.4)
+    n = 20000 if fast else 200000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        sched.decide(u, 1.0)
+    us = (time.perf_counter() - t0) / n * 1e6
+
+    rows = [{"bench": "table3_overhead", "device": "decision_us",
+             "p_idle_w": "", "p_sched_w": "", "overhead_pct": "",
+             "us_per_decision": round(us, 3)}]
+    for dev, prof in TESTBED.items():
+        if prof.p_sched <= prof.p_idle:
+            continue
+        rows.append({
+            "bench": "table3_overhead", "device": dev,
+            "p_idle_w": prof.p_idle, "p_sched_w": prof.p_sched,
+            "overhead_pct": round(100 * (prof.p_sched - prof.p_idle)
+                                  / prof.p_idle, 1),
+            "us_per_decision": round(us, 3),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: CSV emission + default horizons.
+
+Every bench_* module exposes ``run(fast: bool) -> list[dict]`` rows; the
+``benchmarks.run`` driver aggregates them into one CSV stream. fast=True
+(default in CI) shrinks horizons; pass --full for the paper's 3-hour
+settings.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+from typing import Iterable
+
+
+def emit(rows: Iterable[dict], header_done=set()) -> None:
+    rows = list(rows)
+    if not rows:
+        return
+    w = csv.DictWriter(sys.stdout, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    sys.stdout.flush()

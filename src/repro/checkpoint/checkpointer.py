@@ -1,0 +1,147 @@
+"""Checkpoint/restart without orbax: per-leaf .npy shards + JSON manifest,
+atomic directory commit, async background save, keep-N GC, and restore onto
+a *different* mesh (leaves are saved as full host arrays and re-placed with
+whatever shardings the new mesh dictates — elastic resume).
+
+Layout:
+    <dir>/step_000123.tmp/...   (during write)
+    <dir>/step_000123/manifest.json
+    <dir>/step_000123/leaf_00000.npy ...
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot persist ml_dtypes types (.npy round-trips them as raw void):
+# save as a same-width uint view and record the logical dtype in the manifest.
+_EXOTIC = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+_UINT_OF_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32}
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save_pytree(tree: Any, path: str, step: int) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, paths, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (leaf, p) in enumerate(zip(leaves, paths)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        logical = str(arr.dtype)
+        if logical in _EXOTIC:
+            arr = arr.view(_UINT_OF_WIDTH[arr.dtype.itemsize])
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"path": p, "file": fname,
+                                   "dtype": logical,
+                                   "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)        # atomic commit
+    return final
+
+
+def restore_pytree(template: Any, path: str, step: Optional[int] = None,
+                   shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of `template`. If `shardings` is given
+    (tree of NamedSharding), leaves are device_put with them — this is how a
+    checkpoint from a 256-chip mesh resumes on a different mesh."""
+    step_dir = latest_step_dir(path) if step is None else \
+        os.path.join(path, f"step_{step:08d}")
+    if step_dir is None or not os.path.isdir(step_dir):
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, paths, treedef = _flatten_with_paths(template)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    out = []
+    shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    for leaf, p, sh in zip(leaves, paths, shard_leaves):
+        e = by_path[p]
+        arr = np.load(os.path.join(step_dir, e["file"]))
+        if e["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[e["dtype"]])
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {p}: ckpt {arr.shape} vs "
+                             f"template {leaf.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.device_put(arr.astype(leaf.dtype)))
+    return treedef.unflatten(out), manifest["step"]
+
+
+def latest_step_dir(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(path, steps[-1]) if steps else None
+
+
+class Checkpointer:
+    """Async keep-N checkpointer."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, tree: Any, step: int, blocking: bool = False):
+        self.wait()
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            save_pytree(host_tree, self.path, step)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        self.wait()
+        return restore_pytree(template, self.path, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        d = latest_step_dir(self.path)
+        if d is None:
+            return None
+        return int(os.path.basename(d).split("_")[1])
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.path)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)

@@ -1,0 +1,56 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+module also defines a REDUCED smoke config of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mamba2_370m",
+    "qwen3_moe_30b_a3b",
+    "granite_moe_1b_a400m",
+    "internlm2_20b",
+    "qwen3_0_6b",
+    "qwen2_5_3b",
+    "phi4_mini_3_8b",
+    "whisper_large_v3",
+    "zamba2_2_7b",
+    "internvl2_76b",
+]
+
+# canonical ids as assigned (dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "mamba2-370m": "mamba2_370m",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "whisper-large-v3": "whisper_large_v3",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "internvl2-76b": "internvl2_76b",
+    "paper-lenet5": "paper_lenet5",
+})
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).SMOKE_CONFIG
+
+
+def all_arch_ids():
+    return [a.replace("_", "-") if a not in ("qwen3_0_6b", "qwen2_5_3b", "phi4_mini_3_8b") else
+            {"qwen3_0_6b": "qwen3-0.6b", "qwen2_5_3b": "qwen2.5-3b",
+             "phi4_mini_3_8b": "phi4-mini-3.8b"}[a] for a in ARCHS]

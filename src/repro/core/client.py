@@ -1,0 +1,61 @@
+"""Client-side local training: momentum SGD per Eq. (1).
+
+    v_t = beta * v_{t-1} + (1 - beta) * s_t
+    theta_t = theta_{t-1} - eta * v_t
+
+One ``local_train`` call = one local epoch over the client's shard (the unit
+the paper schedules; ~210 s of wall-clock on the testbed devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "batch_size", "eta", "beta"))
+def _epoch(params, images, labels, key, loss_fn, batch_size: int,
+           eta: float, beta: float):
+    n = images.shape[0]
+    steps = n // batch_size
+    perm = jax.random.permutation(key, n)[: steps * batch_size]
+    batches_x = images[perm].reshape(steps, batch_size, *images.shape[1:])
+    batches_y = labels[perm].reshape(steps, batch_size)
+    v0 = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, xy):
+        p, v = carry
+        x, y = xy
+        grads, metrics = jax.grad(
+            lambda q: loss_fn(q, {"images": x, "labels": y}), has_aux=True)(p)
+        v = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g, v, grads)
+        p = jax.tree.map(lambda pp, vv: pp - eta * vv, p, v)
+        return (p, v), metrics["loss"]
+
+    (params, v), losses = jax.lax.scan(step, (params, v0), (batches_x, batches_y))
+    return params, v, losses.mean()
+
+
+class Client:
+    """A federated participant holding one data shard."""
+
+    def __init__(self, client_id, images, labels, loss_fn: Callable,
+                 batch_size: int = 20, eta: float = 0.01, beta: float = 0.9):
+        self.client_id = client_id
+        self.images = images
+        self.labels = labels
+        self.loss_fn = loss_fn
+        self.batch_size = batch_size
+        self.eta = eta
+        self.beta = beta
+        self._key = jax.random.PRNGKey(hash(client_id) % (2 ** 31))
+
+    def local_train(self, params: Any):
+        """One local epoch; returns (new_params, local_momentum, mean_loss)."""
+        self._key, sub = jax.random.split(self._key)
+        new_params, v, loss = _epoch(params, self.images, self.labels, sub,
+                                     self.loss_fn, self.batch_size,
+                                     self.eta, self.beta)
+        return new_params, v, float(loss)

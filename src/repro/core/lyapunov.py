@@ -1,0 +1,91 @@
+"""Online scheduling via the Lyapunov drift-plus-penalty framework (Sec. V).
+
+Queues:
+    Q(t+1) = max(Q(t) - b(t), 0) + A(t)                       (Eq. 15)
+    H(t+1) = max(H(t) + sum_i g_i(t,t+tau) - L_b, 0)          (Eq. 16)
+
+Per-slot, per-user decision (Alg. 2 line 6, Eqs. 21-23):
+
+    alpha_i = argmin over {schedule, idle} of
+        V * P_i(alpha, s) * t_d  -  Q(t) * b_i(alpha)  +  H(t) * g_i(alpha)
+
+with g_i(schedule) from Eq. (4) using the server-supplied lag estimate and
+g_i(idle) = previous gap + epsilon (Eq. 12). Theorem 1 gives the
+[O(1/V), O(V)] energy-staleness trade-off.
+
+The implementation is the paper's *distributed* variant: each user needs only
+(Q, H, V, its own power profile, the lag estimate and the momentum norm) —
+two scalars from the server, no app-usage leakage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .staleness import gradient_gap
+
+
+@dataclasses.dataclass
+class UserSlotState:
+    """What user i knows at slot t."""
+    p_corun: float        # P^{a'} for the currently-running app (if any)
+    p_app: float          # P^a
+    p_train: float        # P^b
+    p_idle: float         # P^d
+    app_running: bool
+    lag_estimate: int     # supplied by server (Alg. 2 line 4)
+    idle_gap: float       # accumulated g_i from idle slots (Eq. 12)
+
+
+@dataclasses.dataclass
+class Decision:
+    schedule: bool
+    gap: float            # the g_i(t, t+tau) this decision contributes
+    cost: float
+
+
+class OnlineScheduler:
+    """Server-side queue state + the per-user argmin (distributed form)."""
+
+    def __init__(self, V: float, L_b: float, eta: float, beta: float,
+                 epsilon: float = 0.05, t_d: float = 1.0):
+        self.V = float(V)
+        self.L_b = float(L_b)
+        self.eta = eta
+        self.beta = beta
+        self.epsilon = epsilon
+        self.t_d = t_d
+        self.Q = 0.0
+        self.H = 0.0
+
+    # ---------------------------------------------------------------- client
+    def decide(self, u: UserSlotState, v_norm: float) -> Decision:
+        """Alg. 2 line 6: argmin_{alpha} V*P - Q*b + H*g. Pure O(1)."""
+        gap_sched = gradient_gap(v_norm, max(u.lag_estimate, 0), self.eta, self.beta)
+        gap_idle = u.idle_gap + self.epsilon
+
+        p_sched = u.p_corun if u.app_running else u.p_train     # Eq. (10)
+        p_idle = u.p_app if u.app_running else u.p_idle
+
+        cost_sched = self.V * p_sched * self.t_d - self.Q + self.H * gap_sched
+        cost_idle = self.V * p_idle * self.t_d + self.H * gap_idle
+        if cost_sched <= cost_idle:
+            return Decision(True, gap_sched, cost_sched)
+        return Decision(False, gap_idle, cost_idle)
+
+    # ---------------------------------------------------------------- server
+    def update_queues(self, arrivals: int, served: int, gap_sum: float):
+        """Eqs. (15)-(16); called once per slot with that slot's totals."""
+        self.Q = max(self.Q - served, 0.0) + arrivals
+        self.H = max(self.H + gap_sum - self.L_b, 0.0)
+
+    def queue_state(self):
+        return self.Q, self.H
+
+
+def schedule_threshold(V: float, t_d: float, p_sched: float, p_idle: float) -> float:
+    """Sec. V.B (Eq. 22), no-staleness regime: schedule iff
+    Q >= V * t_d * (P_sched - P_idle). Exposed for tests/analysis."""
+    return V * t_d * (p_sched - p_idle)

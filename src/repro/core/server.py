@@ -1,0 +1,128 @@
+"""Parameter servers: asynchronous (paper Sec. VI) and synchronous (FedAvg).
+
+The async server implements the paper's protocol: clients pull the current
+global model, train locally with momentum SGD (Eq. 1), and push; the server
+applies the push immediately (lock-free) and advances the version counter.
+On top of the paper's plain "replace" rule we provide staleness-aware
+application rules (FedAsync polynomial and gap-aware dampening, refs [30,31])
+as first-class options — `aggregation="replace"` reproduces the paper.
+
+The server also maintains the global momentum-norm estimate that drives the
+Eq. (4) gradient-gap predictions: v <- beta * v + (1-beta) * s with
+s = (theta_old - theta_new) / eta, so only ||v||2 (a scalar) ever travels to
+clients — the paper's O(1)-per-client distributed implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .staleness import LagTracker, tree_l2_norm
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def _tree_axpy(alpha, x, y):
+    """alpha*x + y"""
+    return jax.tree.map(lambda a_, b_: alpha * a_ + b_, x, y)
+
+
+def _tree_mix(new, old, alpha):
+    return jax.tree.map(lambda n, o: alpha * n + (1 - alpha) * o, new, old)
+
+
+@dataclasses.dataclass
+class PushResult:
+    lag: int
+    gap_estimate: float
+    applied_weight: float
+    version: int
+
+
+class AsyncParameterServer:
+    def __init__(self, params: Any, eta: float, beta: float,
+                 aggregation: str = "replace",
+                 fedasync_alpha: float = 0.6, fedasync_a: float = 0.5,
+                 gap_ref: float = 1.0):
+        self.params = params
+        self.eta = eta
+        self.beta = beta
+        self.aggregation = aggregation
+        self.fedasync_alpha = fedasync_alpha
+        self.fedasync_a = fedasync_a
+        self.gap_ref = gap_ref
+        self.lag_tracker = LagTracker()
+        self._v = jax.tree.map(jnp.zeros_like, params)
+        self.v_norm = 0.0
+        self.in_flight: set = set()
+
+    # ------------------------------------------------------------------ pull
+    def pull(self, client_id) -> tuple[Any, int]:
+        self.lag_tracker.on_pull(client_id)
+        self.in_flight.add(client_id)
+        return self.params, self.lag_tracker.version
+
+    def lag_estimate(self, client_id) -> int:
+        """Alg. 2 line 4: server-side lag estimate = concurrent tasks."""
+        return max(len(self.in_flight) - (1 if client_id in self.in_flight else 0), 0)
+
+    # ------------------------------------------------------------------ push
+    def push(self, client_id, new_params: Any) -> PushResult:
+        lag = self.lag_tracker.on_push(client_id)
+        self.in_flight.discard(client_id)
+        old = self.params
+
+        if self.aggregation == "replace":          # paper Sec. VI
+            weight = 1.0
+        elif self.aggregation == "fedasync_poly":  # alpha*(1+lag)^-a
+            weight = self.fedasync_alpha * (1.0 + lag) ** (-self.fedasync_a)
+        elif self.aggregation == "gap_aware":      # dampen by estimated gap
+            from .staleness import gradient_gap
+            g = gradient_gap(self.v_norm, lag, self.eta, self.beta)
+            weight = 1.0 / (1.0 + g / max(self.gap_ref, 1e-9))
+        else:
+            raise ValueError(self.aggregation)
+
+        self.params = _tree_mix(new_params, old, weight)
+
+        # server momentum for Eq. (4): s = (theta_old - theta_new)/eta
+        s = jax.tree.map(lambda o, n: (o - n) / max(self.eta, 1e-12), old, self.params)
+        self._v = jax.tree.map(lambda v, g_: self.beta * v + (1 - self.beta) * g_,
+                               self._v, s)
+        self.v_norm = tree_l2_norm(self._v)
+
+        from .staleness import gradient_gap
+        gap = gradient_gap(self.v_norm, lag, self.eta, self.beta)
+        return PushResult(lag=lag, gap_estimate=gap, applied_weight=weight,
+                          version=self.lag_tracker.version)
+
+
+class SyncServer:
+    """FedAvg (McMahan et al.): lock-step rounds, average over the cohort."""
+
+    def __init__(self, params: Any):
+        self.params = params
+        self.round = 0
+        self._pending: list[Any] = []
+
+    def pull(self, client_id=None):
+        return self.params, self.round
+
+    def submit(self, new_params: Any):
+        self._pending.append(new_params)
+
+    def aggregate(self) -> int:
+        if not self._pending:
+            return self.round
+        n = len(self._pending)
+        stacked = jax.tree.map(lambda *xs: sum(xs) / n, *self._pending)
+        self.params = stacked
+        self._pending = []
+        self.round += 1
+        return self.round

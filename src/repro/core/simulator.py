@@ -1,0 +1,313 @@
+"""Slotted-time federated simulator (Sec. VII.B methodology).
+
+Replays the paper's evaluation: n users each owning a testbed device
+(Table II catalog), Bernoulli app arrivals per slot, four scheduling
+policies — "sync" (FedAvg lock-step), "immediate" (ASync, schedule ASAP),
+"offline" (knapsack with look-ahead window), "online" (Lyapunov) — with
+per-slot energy accounting per Eq. (10) and queue dynamics per Eqs. (15-16).
+
+ml_mode="trace" tracks updates/staleness without real gradients (fast —
+Fig. 4/6 energy results); ml_mode="real" couples the schedule to actual JAX
+training of the paper's LeNet-5 (Fig. 5 convergence results).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from .energy import APPS, DEVICE_NAMES, TESTBED, DeviceProfile
+from .lyapunov import OnlineScheduler, UserSlotState
+from .offline import knapsack_schedule, lemma1_lag_bounds
+from .staleness import gradient_gap
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_users: int = 25
+    horizon_s: int = 10800          # paper: 3 hours
+    t_d: float = 1.0                # slot length (s)
+    app_arrival_p: float = 0.001    # paper: ~1 app per 1000 s
+    policy: str = "online"          # sync | immediate | offline | online
+    V: float = 4000.0
+    L_b: float = 1000.0
+    epsilon: float = 0.05
+    eta: float = 0.01
+    beta: float = 0.9
+    offline_window: float = 500.0   # paper: 500 s look-ahead
+    offline_resolution: float = 0.01
+    seed: int = 0
+    ml_mode: str = "trace"          # trace | real
+    ready_delay: int = 5            # slots between push and re-arrival
+    trace_every: int = 30           # slots between trace samples
+    include_scheduler_overhead: bool = False
+    v_norm0: float = 1.0            # trace-mode momentum-norm model scale
+
+
+@dataclasses.dataclass
+class UserState:
+    device: DeviceProfile
+    mode: str = "cooldown"          # waiting | training | cooldown
+    cooldown: int = 0
+    app: Optional[str] = None
+    app_remaining: float = 0.0
+    train_remaining: float = 0.0
+    corun: bool = False
+    idle_gap: float = 0.0
+    pulled_at: int = 0              # global version at pull
+    started_at: int = 0
+    energy_j: float = 0.0
+    updates: int = 0
+    plan: str = "none"              # offline policy: corun | separate | hold
+
+
+@dataclasses.dataclass
+class SimResult:
+    energy_j: float
+    updates: int
+    trace_t: np.ndarray
+    trace_energy: np.ndarray
+    trace_Q: np.ndarray
+    trace_H: np.ndarray
+    push_log: List[dict]            # per push: t, user, lag, gap, corun
+    accuracy: List[tuple]           # (sim_t, test_acc) if ml_mode == real
+    mean_Q: float
+    mean_H: float
+    corun_fraction: float
+
+
+class FederatedSim:
+    def __init__(self, cfg: SimConfig, ml_hooks: Optional[dict] = None):
+        """ml_hooks (real mode): {"pull": fn()->params_version, "push":
+        fn(uid, params)->PushResult, "local_train": fn(uid, params)->params,
+        "evaluate": fn()->acc, "sync_submit", "sync_aggregate", "v_norm": fn()->float}
+        """
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.ml = ml_hooks or {}
+        names = [DEVICE_NAMES[i % len(DEVICE_NAMES)] for i in range(cfg.n_users)]
+        self.rng.shuffle(names)
+        self.users = [UserState(device=TESTBED[n]) for n in names]
+        self.sched = OnlineScheduler(cfg.V, cfg.L_b, cfg.eta, cfg.beta,
+                                     cfg.epsilon, cfg.t_d)
+        self.version = 0
+        self.in_flight = 0
+        # Pre-sample the app arrival schedule (offline policy needs lookahead)
+        T = cfg.horizon_s
+        self.app_sched = self.rng.random((T, cfg.n_users)) < cfg.app_arrival_p
+        self.app_choice = self.rng.integers(0, len(APPS), (T, cfg.n_users))
+
+    # ------------------------------------------------------------------ utils
+    def _v_norm(self) -> float:
+        if "v_norm" in self.ml:
+            return self.ml["v_norm"]()
+        # trace-mode model: momentum norm decays with global progress
+        return self.cfg.v_norm0 / np.sqrt(1.0 + 0.05 * self.version)
+
+    def _begin_training(self, u: UserState, t: int, corun: bool):
+        u.mode = "training"
+        u.corun = corun and u.app is not None
+        u.train_remaining = u.device.duration(u.corun, u.app)
+        u.pulled_at = self.version
+        u.started_at = t
+        self.in_flight += 1
+        if self.ml.get("pull"):
+            u._params = self.ml["pull"](u._uid)
+
+    def _finish_training(self, u: UserState, t: int, log: list):
+        lag = self.version - u.pulled_at
+        gap = gradient_gap(self._v_norm(), lag, self.cfg.eta, self.cfg.beta)
+        if self.cfg.policy == "sync":
+            if self.ml.get("sync_submit"):
+                trained = self.ml["local_train"](u._uid, u._params)
+                self.ml["sync_submit"](trained)
+        else:
+            self.version += 1
+            if self.ml.get("push"):
+                trained = self.ml["local_train"](u._uid, u._params)
+                self.ml["push"](u._uid, trained)
+        u.updates += 1
+        u.mode = "cooldown"
+        u.cooldown = self.cfg.ready_delay
+        u.idle_gap = 0.0
+        self.in_flight -= 1
+        log.append({"t": t, "user": u._uid, "lag": lag, "gap": gap,
+                    "corun": u.corun})
+
+    # ------------------------------------------------------------------ main
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        for i, u in enumerate(self.users):
+            u._uid = i
+            u._params = None
+        T = int(cfg.horizon_s / cfg.t_d)
+        trace_t, trace_E, trace_Q, trace_H = [], [], [], []
+        push_log: List[dict] = []
+        accuracy: List[tuple] = []
+        sum_Q = sum_H = 0.0
+        corun_updates = 0
+        sync_round_open = False
+        next_offline_plan = 0.0
+
+        for t in range(T):
+            arrivals = served = 0
+            gap_sum = 0.0
+
+            # --- app arrivals / progression -------------------------------
+            for i, u in enumerate(self.users):
+                if u.app is None and self.app_sched[t, i]:
+                    u.app = APPS[self.app_choice[t, i]]
+                    u.app_remaining = u.device.apps[u.app].t_corun
+                elif u.app is not None:
+                    u.app_remaining -= cfg.t_d
+                    if u.app_remaining <= 0:
+                        u.app, u.app_remaining = None, 0.0
+
+            # --- cooldown -> waiting (queue arrival) ------------------------
+            for u in self.users:
+                if u.mode == "cooldown":
+                    u.cooldown -= 1
+                    if u.cooldown <= 0:
+                        u.mode = "waiting"
+                        u.plan = "hold"   # offline: wait for next plan window
+                        arrivals += 1
+
+            # --- policy decisions for waiting users -------------------------
+            waiting = [u for u in self.users if u.mode == "waiting"]
+            if cfg.policy == "sync":
+                # lock-step rounds: start everyone when the whole cohort waits
+                if not sync_round_open and len(waiting) == cfg.n_users:
+                    for u in waiting:
+                        self._begin_training(u, t, corun=u.app is not None)
+                        served += 1
+                    sync_round_open = True
+            elif cfg.policy == "immediate":
+                for u in waiting:
+                    self._begin_training(u, t, corun=u.app is not None)
+                    served += 1
+            elif cfg.policy == "online":
+                vn = self._v_norm()
+                for u in waiting:
+                    a = u.app is not None
+                    ap = u.device.apps[u.app] if a else None
+                    st = UserSlotState(
+                        p_corun=ap.p_corun if a else 0.0,
+                        p_app=ap.p_app if a else 0.0,
+                        p_train=u.device.p_train, p_idle=u.device.p_idle,
+                        app_running=a,
+                        lag_estimate=self.in_flight,
+                        idle_gap=u.idle_gap)
+                    d = self.sched.decide(st, vn)
+                    gap_sum += d.gap
+                    if d.schedule:
+                        self._begin_training(u, t, corun=a)
+                        served += 1
+                    else:
+                        u.idle_gap += cfg.epsilon
+            elif cfg.policy == "offline":
+                if t >= next_offline_plan:
+                    next_offline_plan = t + cfg.offline_window
+                    self._plan_offline(t, waiting)
+                for u in waiting:
+                    if u.plan == "corun":
+                        if u.app is not None:
+                            self._begin_training(u, t, corun=True)
+                            served += 1
+                    elif u.plan == "separate":
+                        self._begin_training(u, t, corun=u.app is not None)
+                        served += 1
+                    # plan == "hold"/"none": idle until the next window
+            else:
+                raise ValueError(cfg.policy)
+
+            # --- training progression ---------------------------------------
+            for u in self.users:
+                if u.mode == "training":
+                    u.train_remaining -= cfg.t_d
+                    if u.train_remaining <= 0:
+                        self._finish_training(u, t, push_log)
+                        if u.corun:
+                            corun_updates += 1
+            if cfg.policy == "sync" and sync_round_open and \
+                    all(u.mode != "training" for u in self.users):
+                sync_round_open = False
+                self.version += 1
+                if self.ml.get("sync_aggregate"):
+                    self.ml["sync_aggregate"]()
+
+            # --- energy accounting (Eq. 10) ---------------------------------
+            for u in self.users:
+                p = u.device.power(u.mode == "training", u.app is not None, u.app)
+                if cfg.include_scheduler_overhead and u.mode == "waiting" \
+                        and cfg.policy == "online":
+                    p += u.device.p_sched - u.device.p_idle
+                u.energy_j += p * cfg.t_d
+
+            # --- queues ------------------------------------------------------
+            self.sched.update_queues(arrivals, served, gap_sum)
+            sum_Q += self.sched.Q
+            sum_H += self.sched.H
+
+            if t % cfg.trace_every == 0:
+                trace_t.append(t)
+                trace_E.append(sum(u.energy_j for u in self.users))
+                trace_Q.append(self.sched.Q)
+                trace_H.append(self.sched.H)
+            if self.ml.get("evaluate") and t % self.ml.get("eval_every", 600) == 0 \
+                    and t > 0:
+                accuracy.append((t, self.ml["evaluate"]()))
+
+        if self.ml.get("evaluate"):
+            accuracy.append((T, self.ml["evaluate"]()))
+        updates = sum(u.updates for u in self.users)
+        return SimResult(
+            energy_j=sum(u.energy_j for u in self.users),
+            updates=updates,
+            trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
+            trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
+            push_log=push_log, accuracy=accuracy,
+            mean_Q=sum_Q / T, mean_H=sum_H / T,
+            corun_fraction=corun_updates / max(updates, 1))
+
+    # ------------------------------------------------------------- offline plan
+    def _plan_offline(self, t: int, waiting: List[UserState]):
+        """Knapsack over the look-ahead window (Alg. 1).
+
+        Users whose app arrival falls inside the window are knapsack
+        candidates: selected -> wait for the arrival and co-run (x_i = 1);
+        rejected -> train immediately, separate execution (x_i = 0). Users
+        without an in-window arrival hold (idle) until the next window —
+        with the paper's relaxed L_b = 1000 this reduces to the "greedy
+        always waiting for co-running opportunities" behaviour of Fig. 4a.
+        """
+        cfg = self.cfg
+        W = int(cfg.offline_window)
+        cands, t_app, t_now, durs, savings = [], [], [], [], []
+        for u in waiting:
+            # next app arrival within the window (oracle lookahead)
+            i = u._uid
+            horizon = min(t + W, self.app_sched.shape[0])
+            arr = np.nonzero(self.app_sched[t:horizon, i])[0]
+            if u.app is not None:
+                ta, app = t, u.app
+            elif len(arr):
+                ta = t + int(arr[0])
+                app = APPS[self.app_choice[ta, i]]
+            else:
+                u.plan = "hold"
+                continue
+            cands.append(u)
+            t_now.append(t)
+            t_app.append(ta)
+            durs.append(u.device.apps[app].t_corun)
+            savings.append(u.device.energy_saving_rate(app) * u.device.apps[app].t_corun)
+        if not cands:
+            return
+        lags = lemma1_lag_bounds(np.array(t_now), np.array(t_app), np.array(durs))
+        vn = self._v_norm()
+        gaps = np.array([gradient_gap(vn, int(l), cfg.eta, cfg.beta) for l in lags])
+        x, _ = knapsack_schedule(np.array(savings), gaps, cfg.L_b,
+                                 resolution=cfg.offline_resolution)
+        for u, chosen in zip(cands, x):
+            u.plan = "corun" if chosen else "separate"

@@ -1,0 +1,80 @@
+"""Staleness metrics: lag (Def. 1) and gradient gap (Def. 2, Eqs. 2-4).
+
+The gradient gap between the model a client pulled at t and the global model
+at push time t+tau is estimated with Linear Weight Prediction (Eq. 3):
+
+    theta_{t+tau} = theta_t - eta * (1 - beta^l) / (1 - beta) * v_t
+    g(t, t+tau)   = || eta * (1 - beta^l) / (1 - beta) * v_t ||_2      (Eq. 4)
+
+Only the *norm* of the momentum vector and the lag l are needed, which is
+what makes the paper's distributed implementation O(1) per client: the server
+ships two scalars, never the momentum tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def momentum_scale(lag: float, eta: float, beta: float) -> float:
+    """eta * (1 - beta^lag) / (1 - beta) — the LWP multiplier in Eq. (4)."""
+    if beta == 0.0:
+        return eta if lag > 0 else 0.0
+    return eta * (1.0 - beta ** lag) / (1.0 - beta)
+
+
+def gradient_gap(v_norm: float, lag: float, eta: float, beta: float) -> float:
+    """Eq. (4): predicted parameter-space L2 distance over `lag` updates."""
+    return momentum_scale(lag, eta, beta) * v_norm
+
+
+def tree_l2_norm(tree: Any) -> float:
+    """||v||_2 over a parameter pytree (f32 accumulation)."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return float(jnp.sqrt(sq))
+
+
+def predict_weights(theta: Any, v: Any, lag: float, eta: float, beta: float):
+    """Eq. (3): linear weight prediction of the future global parameters."""
+    s = momentum_scale(lag, eta, beta)
+    return jax.tree.map(lambda t, m: t - s * m, theta, v)
+
+
+def true_gap(theta_t: Any, theta_tau: Any) -> float:
+    """Eq. (2): exact norm difference (used to validate the LWP estimate)."""
+    sq = sum(jnp.sum(jnp.square((a - b).astype(jnp.float32)))
+             for a, b in zip(jax.tree.leaves(theta_t), jax.tree.leaves(theta_tau)))
+    return float(jnp.sqrt(sq))
+
+
+class LagTracker:
+    """Server-side version counter implementing Def. 1.
+
+    lag(client) = number of global updates applied between the client's pull
+    and its push."""
+
+    def __init__(self):
+        self.version = 0
+        self._pull_version: dict[Any, int] = {}
+
+    def on_pull(self, client_id) -> int:
+        self._pull_version[client_id] = self.version
+        return self.version
+
+    def lag(self, client_id) -> int:
+        return self.version - self._pull_version.get(client_id, self.version)
+
+    def on_push(self, client_id) -> int:
+        l = self.lag(client_id)
+        self.version += 1
+        return l
+
+    def estimate_lag_during(self, in_flight: int) -> int:
+        """Server-supplied lag estimate for Alg. 2 line 4: the number of
+        currently-running tasks expected to land within the client's window."""
+        return in_flight

@@ -1,0 +1,6 @@
+from .synthetic import (cifarlike_dataset, synthetic_tokens, token_batches,
+                        dirichlet_partition)
+from .loader import ShardedLoader
+
+__all__ = ["cifarlike_dataset", "synthetic_tokens", "token_batches",
+           "dirichlet_partition", "ShardedLoader"]

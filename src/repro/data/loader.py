@@ -1,0 +1,55 @@
+"""Sharded host-side loader: double-buffered prefetch of globally-sharded
+batches onto the mesh (device_put with NamedSharding)."""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    """Wraps a host batch iterator; places each batch with the given
+    shardings; prefetches `depth` batches ahead on a worker thread."""
+
+    def __init__(self, it: Iterator[Any], shardings: Any, depth: int = 2):
+        self._it = it
+        self._shardings = shardings
+        self._buf: collections.deque = collections.deque()
+        self._depth = depth
+        self._lock = threading.Lock()
+        self._done = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), batch, self._shardings)
+
+    def _fill(self):
+        for batch in self._it:
+            placed = self._place(batch)
+            while True:
+                with self._lock:
+                    if len(self._buf) < self._depth:
+                        self._buf.append(placed)
+                        break
+                threading.Event().wait(0.001)
+        self._done = True
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            with self._lock:
+                if self._buf:
+                    return self._buf.popleft()
+            if self._done:
+                with self._lock:
+                    if self._buf:
+                        return self._buf.popleft()
+                raise StopIteration
+            threading.Event().wait(0.001)

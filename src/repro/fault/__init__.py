@@ -1,0 +1,3 @@
+from .monitor import HeartbeatMonitor, StragglerDetector, ElasticCohort
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "ElasticCohort"]

@@ -1,0 +1,113 @@
+"""Fault tolerance for the async federation: heartbeats, straggler EWMAs,
+elastic cohort membership.
+
+The paper's asynchronous design is itself the primary straggler mitigation —
+no barrier means a slow island only stales, never stalls. These utilities
+close the loop at datacenter scale: detect islands whose update cadence has
+collapsed (failure or chronic straggle), evict them, re-queue their shard,
+and let the Lyapunov queue re-absorb the arrival — membership is just A(t).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Set
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    last_seen: float
+    ewma_interval: Optional[float] = None
+    updates: int = 0
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen times; a worker is dead after `timeout` seconds."""
+
+    def __init__(self, timeout: float, clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.workers: Dict[str, WorkerStats] = {}
+
+    def beat(self, worker_id: str):
+        now = self.clock()
+        w = self.workers.get(worker_id)
+        if w is None:
+            self.workers[worker_id] = WorkerStats(last_seen=now)
+        else:
+            w.last_seen = now
+
+    def dead(self) -> Set[str]:
+        now = self.clock()
+        return {wid for wid, w in self.workers.items()
+                if now - w.last_seen > self.timeout}
+
+    def remove(self, worker_id: str):
+        self.workers.pop(worker_id, None)
+
+
+class StragglerDetector:
+    """EWMA of per-worker update intervals; flags workers slower than
+    `factor` x the cohort median."""
+
+    def __init__(self, alpha: float = 0.3, factor: float = 3.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.alpha = alpha
+        self.factor = factor
+        self.clock = clock
+        self.workers: Dict[str, WorkerStats] = {}
+
+    def on_update(self, worker_id: str):
+        now = self.clock()
+        w = self.workers.setdefault(worker_id, WorkerStats(last_seen=now))
+        if w.updates > 0:
+            interval = now - w.last_seen
+            w.ewma_interval = interval if w.ewma_interval is None else \
+                self.alpha * interval + (1 - self.alpha) * w.ewma_interval
+        w.last_seen = now
+        w.updates += 1
+
+    def median_interval(self) -> Optional[float]:
+        xs = sorted(w.ewma_interval for w in self.workers.values()
+                    if w.ewma_interval is not None)
+        if not xs:
+            return None
+        return xs[len(xs) // 2]
+
+    def stragglers(self) -> Set[str]:
+        med = self.median_interval()
+        if med is None:
+            return set()
+        return {wid for wid, w in self.workers.items()
+                if w.ewma_interval is not None
+                and w.ewma_interval > self.factor * med}
+
+
+class ElasticCohort:
+    """Dynamic membership: join/leave/evict with shard reassignment. The
+    training step itself never recompiles — only the arrival process A(t)
+    changes (paper Def. 3)."""
+
+    def __init__(self, shards: list):
+        self.free_shards = list(shards)
+        self.assignment: Dict[str, object] = {}
+
+    def join(self, worker_id: str):
+        if not self.free_shards:
+            raise RuntimeError("no free shards; grow the shard pool")
+        shard = self.free_shards.pop()
+        self.assignment[worker_id] = shard
+        return shard
+
+    def leave(self, worker_id: str):
+        shard = self.assignment.pop(worker_id, None)
+        if shard is not None:
+            self.free_shards.append(shard)
+        return shard
+
+    def evict(self, worker_ids) -> list:
+        return [self.leave(w) for w in worker_ids]
+
+    @property
+    def active(self) -> Set[str]:
+        return set(self.assignment)

@@ -1,0 +1,51 @@
+"""Public wrapper: shape-flexible flash attention (pads to block multiples).
+
+The model layer (``repro.models.attention``) calls this with
+cfg.attention_impl == "flash"; the XLA `_sdpa` einsum path is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q: (B, H, Sq, d); k/v: (B, KV, Sk, d) -> (B, H, Sq, d).
+
+    Pads Sq/Sk up to block multiples; key padding is masked by giving padded
+    keys -inf scores only when causal masking does not already exclude them —
+    we pad on the RIGHT, and pass `causal` through, so for causal use padded
+    keys are beyond every real query's row limit iff Sk == Sq. For the
+    non-causal / ragged case we clamp block sizes to the padded extent."""
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, _round_up(Sq))
+    bk = min(block_k, _round_up(Sk))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pk and not (causal and Sk == Sq and pq == pk):
+        # right-padded keys would receive finite scores; fall back to masking
+        # via explicit -inf bias is not supported in this wrapper — require
+        # callers to pad (all launch shapes are powers of two).
+        raise ValueError(f"Sk={Sk} must be a multiple of block_k={bk} "
+                         "for non-causal use")
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_kernel(q, k, v, causal=causal, scale=scale,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :Sq, :]
+
+
+def _round_up(n: int, mult: int = 128) -> int:
+    return ((n + mult - 1) // mult) * mult

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: causal (or full) softmax attention with GQA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, Sq, d); k/v: (B, KV, Sk, d); H % KV == 0.
+
+    f32 softmax accumulation, output cast back to q.dtype."""
+    B, H, Sq, d = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = (scale if scale is not None else d ** -0.5)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * s
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, vf)
+    return out.reshape(B, H, Sq, d).astype(q.dtype)

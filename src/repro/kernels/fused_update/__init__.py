@@ -1,0 +1,2 @@
+from .ops import fused_momentum_gap_update_pallas, fused_update_flat
+from .ref import fused_update_flat_ref

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused momentum update + gradient-gap partial norm.
+
+The paper's per-push work over every parameter (Eq. 1 + Eq. 4) is three
+HBM-bound passes when written naively:
+
+    v'     = beta * v + (1 - beta) * g          (read v, g; write v')
+    theta' = theta - eta * v'                   (read theta, v'; write theta')
+    gap    = scale * ||v'||_2                   (read v')
+
+i.e. 5 reads + 2 writes of N floats. This kernel fuses them into ONE pass:
+3 reads (theta, v, g) + 2 writes (theta', v') and the sum-of-squares
+reduction accumulated on-chip — the arithmetic intensity is so low
+(~4 FLOPs / 20 bytes) that HBM traffic IS the cost, so the fusion is a
+~7/5 = 1.4x traffic cut vs. the best 2-pass schedule and ~2x vs. naive.
+
+Layout: the parameter pytree is flattened and concatenated to a single f32
+vector, padded and viewed as (rows, 128) — the last dim matches the TPU
+lane width, rows are tiled in VMEM-sized blocks. Grid is 1-D over row
+blocks; each step reduces its block's Sum(v'^2) into a (1,1) partial output
+(summed by the XLA epilogue in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 1024   # (1024, 128) f32 = 512 KiB per operand in VMEM
+
+
+def _kernel(theta_ref, v_ref, g_ref, eta_ref, beta_ref,
+            theta_out_ref, v_out_ref, partial_ref):
+    eta = eta_ref[0]
+    beta = beta_ref[0]
+    v_new = beta * v_ref[...] + (1.0 - beta) * g_ref[...]
+    theta_out_ref[...] = theta_ref[...] - eta * v_new
+    v_out_ref[...] = v_new
+    partial_ref[0, 0] = jnp.sum(v_new * v_new)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_update_2d(theta, v, g, eta, beta, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = False):
+    """theta/v/g: (rows, 128) f32, rows % block_rows == 0.
+
+    Returns (theta', v', sumsq) with sumsq = Sum(v'^2) (f32 scalar)."""
+    rows, lanes = theta.shape
+    assert lanes == LANES and rows % block_rows == 0, (rows, lanes)
+    nblk = rows // block_rows
+    eta = jnp.asarray([eta], jnp.float32)
+    beta = jnp.asarray([beta], jnp.float32)
+
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec(memory_space=pltpu.SMEM)
+    theta_o, v_o, partials = pl.pallas_call(
+        _kernel,
+        grid=(nblk,),
+        in_specs=[block, block, block, scalar, scalar],
+        out_specs=[block, block,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0),
+                                memory_space=pltpu.SMEM)],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="fused_momentum_gap_update",
+    )(theta, v, g, eta, beta)
+    return theta_o, v_o, jnp.sum(partials)

@@ -1,0 +1,71 @@
+"""jit'd public wrappers: flat-array and whole-pytree fused updates.
+
+``fused_momentum_gap_update_pallas`` is the drop-in Pallas version of
+``repro.optim.gap.fused_momentum_gap_update`` (its oracle): it flattens the
+parameter pytree once, runs the single-pass kernel, and unflattens — the
+gap norm (Eq. 4) comes out of the same HBM pass as the update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_ROWS, LANES, fused_update_2d
+
+
+def _pad_to_grid(x, block_rows):
+    n = x.size
+    per_block = block_rows * LANES
+    padded = ((n + per_block - 1) // per_block) * per_block
+    x = jnp.pad(x.reshape(-1), (0, padded - n))
+    return x.reshape(padded // LANES, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_update_flat(theta, v, g, eta, beta, *,
+                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool = False):
+    """Flat f32 arrays of any (identical) size; zero-pads to the block grid.
+
+    Returns (theta', v', sumsq). Padding is zeros in v and g, so v' padding
+    stays zero and contributes nothing to sumsq."""
+    shape = theta.shape
+    t2, n = _pad_to_grid(theta.astype(jnp.float32), block_rows)
+    v2, _ = _pad_to_grid(v.astype(jnp.float32), block_rows)
+    g2, _ = _pad_to_grid(g.astype(jnp.float32), block_rows)
+    t_o, v_o, sumsq = fused_update_2d(t2, v2, g2, eta, beta,
+                                      block_rows=block_rows, interpret=interpret)
+    return (t_o.reshape(-1)[:n].reshape(shape),
+            v_o.reshape(-1)[:n].reshape(shape), sumsq)
+
+
+def fused_momentum_gap_update_pallas(params: Any, v: Any, grads: Any, *,
+                                     eta: float, beta: float, lag,
+                                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                                     interpret: bool = False):
+    """Pytree version; same contract as optim.gap.fused_momentum_gap_update.
+
+    Returns (new_params, new_v, gap_norm) with
+    gap_norm = eta * (1 - beta^lag) / (1 - beta) * ||v'||_2."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    v_leaves = jax.tree_util.tree_leaves(v)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    sizes = [l.size for l in leaves]
+    flat_p = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    flat_v = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in v_leaves])
+    flat_g = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in g_leaves])
+    p_o, v_o, sumsq = fused_update_flat(flat_p, flat_v, flat_g, eta, beta,
+                                        block_rows=block_rows, interpret=interpret)
+    offs = [0]
+    for s in sizes:
+        offs.append(offs[-1] + s)
+    new_p, new_v = [], []
+    for i, l in enumerate(leaves):
+        new_p.append(p_o[offs[i]:offs[i + 1]].reshape(l.shape).astype(l.dtype))
+        new_v.append(v_o[offs[i]:offs[i + 1]].reshape(l.shape))
+    scale = eta * (1.0 - beta ** jnp.asarray(lag, jnp.float32)) / (1.0 - beta)
+    return (treedef.unflatten(new_p), treedef.unflatten(new_v),
+            scale * jnp.sqrt(sumsq))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused momentum + gap-norm update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_update_flat_ref(theta, v, g, eta, beta):
+    """theta/v/g: flat (or 2-D) f32 arrays.
+
+    Returns (theta', v', sumsq):
+        v'     = beta * v + (1 - beta) * g
+        theta' = theta - eta * v'
+        sumsq  = Sum(v'^2)
+    """
+    v_new = beta * v + (1.0 - beta) * g
+    theta_new = theta - eta * v_new
+    return theta_new, v_new, jnp.sum(jnp.square(v_new))

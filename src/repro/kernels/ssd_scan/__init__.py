@@ -1,0 +1,2 @@
+from .ops import ssd_chunked_pallas
+from .ref import ssd_chunked_ref

@@ -1,0 +1,61 @@
+"""Public wrapper: full chunked SSD scan = Pallas intra-chunk kernel +
+XLA inter-chunk recurrence (cheap (s x ph)-state scan over S/chunk steps).
+
+Drop-in for ``repro.models.ssm.ssd_chunked`` (same signature/returns), which
+together with ``ssd_scan.ref.ssd_chunked_ref`` (naive recurrence) forms its
+two-level oracle chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(X, dtv, A, Bh, Ch, chunk: int, init_state=None,
+                       *, interpret: bool = False):
+    """X: (B,S,nh,p); dtv: (B,S,nh); A: (nh,); Bh/Ch: (B,S,nh,s).
+
+    Returns (y (B,S,nh,p) X.dtype, final_state (B,nh,s,p) f32)."""
+    B_, S, nh, ph = X.shape
+    s = Bh.shape[-1]
+    nc = S // chunk
+
+    # fold (B, nh) -> BH for a flat 2-D grid
+    fold = lambda t: jnp.moveaxis(t, 2, 1).reshape((B_ * nh,) + t.shape[1:2] + t.shape[3:])
+    Xf = fold(X)                                        # (BH, S, ph)
+    dtf = jnp.moveaxis(dtv, 2, 1).reshape(B_ * nh, S)   # (BH, S)
+    Bf, Cf = fold(Bh), fold(Ch)                         # (BH, S, s)
+    Af = jnp.tile(A.astype(jnp.float32), B_)            # (BH,)
+
+    Y_intra, S_chunk, expcum, chunk_decay = ssd_intra_chunk(
+        Xf, dtf, Af, Bf, Cf, chunk=chunk, interpret=interpret)
+
+    # ---- inter-chunk recurrence (XLA scan over nc steps) ----
+    if init_state is None:
+        init0 = jnp.zeros((B_ * nh, s, ph), jnp.float32)
+    else:
+        init0 = init_state.reshape(B_ * nh, s, ph).astype(jnp.float32)
+
+    def step(carry, inp):
+        dec, Sc = inp                                   # (BH,), (BH,s,ph)
+        new = dec[:, None, None] * carry + Sc
+        return new, carry
+
+    final, S_prev = jax.lax.scan(
+        step, init0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                 # (BH, nc, s, ph)
+
+    # Y_inter[t] = expcum[t] * C[t] . S_prev[chunk(t)]
+    Cc = Cf.reshape(B_ * nh, nc, chunk, s)
+    Y_inter = jnp.einsum("ints,insp->intp", Cc * expcum.reshape(B_ * nh, nc, chunk)[..., None],
+                         S_prev).reshape(B_ * nh, S, ph)
+
+    y = Y_intra + Y_inter                               # (BH, S, ph)
+    y = jnp.moveaxis(y.reshape(B_, nh, S, ph), 1, 2)    # (B, S, nh, ph)
+    return y.astype(X.dtype), final.reshape(B_, nh, s, ph)

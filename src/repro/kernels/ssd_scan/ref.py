@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the chunked SSD scan: the naive O(S^2)-free sequential
+recurrence, h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T ; y_t = C_t h_t.
+
+Slow but unambiguous — the gold standard both the XLA chunked path
+(models.ssm.ssd_chunked) and the Pallas kernel are tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked_ref(X, dtv, A, Bh, Ch, init_state=None):
+    """X: (B,S,nh,p); dtv: (B,S,nh) (already softplus'd); A: (nh,) negative;
+    Bh/Ch: (B,S,nh,s). Returns (y (B,S,nh,p) f32, final_state (B,nh,s,p))."""
+    B_, S, nh, ph = X.shape
+    s = Bh.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((B_, nh, s, ph), jnp.float32)
+
+    Xf = X.astype(jnp.float32)
+    dtf = dtv.astype(jnp.float32)
+    Bf = Bh.astype(jnp.float32)
+    Cf = Ch.astype(jnp.float32)
+
+    def step(h, t):
+        dec = jnp.exp(dtf[:, t] * A)                        # (B,nh)
+        inc = jnp.einsum("bns,bnp,bn->bnsp", Bf[:, t], Xf[:, t], dtf[:, t])
+        h = dec[:, :, None, None] * h + inc
+        y = jnp.einsum("bns,bnsp->bnp", Cf[:, t], h)
+        return h, y
+
+    final, ys = jax.lax.scan(step, init_state, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), final

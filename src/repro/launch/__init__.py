@@ -1,0 +1,2 @@
+"""Distribution/launch layer: production meshes, sharded train/serve steps,
+the multi-pod dry-run driver, and the roofline analyser."""

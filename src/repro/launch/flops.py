@@ -1,0 +1,27 @@
+"""Analytic MODEL_FLOPS per (arch, shape) — the 'useful compute' yardstick.
+
+Convention (system prompt):
+    train:   6 * N * D      (N = params; N_active for MoE; D = tokens)
+    prefill: 2 * N * D
+    decode:  2 * N * D      (D = global_batch tokens per step)
+
+The MODEL_FLOPS / HLO_FLOPs ratio in the roofline table measures how much of
+the compiled compute is useful (remat recompute, attention quadratic work,
+router/dispatch overhead, dead padding all push it down).
+"""
+from __future__ import annotations
+
+from .shapes import SHAPES
+
+
+def model_flops(cfg, shape: str) -> float:
+    spec = SHAPES[shape]
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n * tokens
+    tokens = spec.global_batch  # one new token per sequence
+    return 2.0 * n * tokens

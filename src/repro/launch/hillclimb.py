@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing harness: compile named variants of one
+(arch x shape) cell and print the roofline-term deltas.
+
+Each variant = config-field overrides (+ microbatch / fsdp knobs); results
+land in artifacts/hillclimb/<arch>__<shape>__<variant>.json and the table
+prints hypothesis-testing numbers for EXPERIMENTS.md §Perf.
+
+    python -m repro.launch.hillclimb --arch qwen3-0.6b --shape train_4k \
+        --variants baseline_xla,prod,M2,M2_flash
+"""
+import argparse
+import json
+
+# named variants: (config overrides, microbatches, fsdp, flash-modeled)
+VARIANTS = {
+    # paper-naive starting point: einsum attention, no SP, default M
+    "baseline_xla": (dict(attention_impl="xla", shard_activations=False),
+                     None, None, False),
+    # production defaults (chunked attention / SP / FSDP where configured)
+    "prod": (None, None, None, False),
+    # fewer grad-accum microbatches => fewer per-microbatch collectives
+    "M2": (None, 2, None, False),
+    "M4": (None, 4, None, False),
+    "M1": (None, 1, None, False),
+    "M4_flash": (None, 4, None, True),
+    "M2_qb256_flash": (dict(attn_q_block=256), 2, None, True),
+    "M1_flash": (None, 1, None, True),
+    # no per-layer remat (memory allows on small archs): -25% compute
+    "noremat": (dict(remat="none"), None, None, False),
+    "M2_noremat": (dict(remat="none"), 2, None, False),
+    # FSDP toggles
+    "fsdp": (None, None, True, False),
+    "nofsdp": (None, None, False, False),
+    # sequence parallel toggles
+    "sp": (dict(attention_impl="chunked", shard_activations=True),
+           None, None, False),
+    "nosp": (dict(attention_impl="chunked", shard_activations=False),
+             None, None, False),
+    # Pallas-kernel modeling: same compile as prod, memory term subtracts
+    # the parsed attention/SSD quadratic HBM traffic (kernels keep those
+    # tiles in VMEM; kernels validated in tests/test_kernels.py)
+    "flash": (None, None, None, True),
+    "M2_flash": (None, 2, None, True),
+    "M2_noremat_flash": (dict(remat="none"), 2, None, True),
+    # parallelism-layout change: replicate weights, batch over ALL 256
+    # chips (per-device batch 1 seq, M=1) — kills the TP activation psums
+    # that dominate small-model train cells. dp_zero = ZeRO-shard the
+    # optimizer state over "data" on top.
+    "dp": (dict(parallel_layout="dp", attention_impl="chunked"),
+           1, False, False),
+    "dp_flash": (dict(parallel_layout="dp", attention_impl="chunked"),
+                 1, False, True),
+    "dp_zero_flash": (dict(parallel_layout="dp", attention_impl="chunked"),
+                      1, True, True),
+    "dp_noremat_flash": (dict(parallel_layout="dp", attention_impl="chunked",
+                              remat="none"), 1, False, True),
+    # vocab padding (granite: 49155 -> 49168 = 16*3073) so embeddings /
+    # logits shard over "model"; pad logits are never labeled, CE unchanged
+    "padvocab": (dict(vocab_size=49168), None, None, False),
+    "padvocab_flash": (dict(vocab_size=49168), None, None, True),
+}
+
+
+def run_variant(arch, shape, name, out_dir="artifacts/hillclimb"):
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+    from repro.launch.roofline import cell_terms
+    from repro.launch.shapes import production_config
+
+    overrides, mb, fsdp, flash = VARIANTS[name]
+    if overrides is not None:
+        # variant overrides stack ON TOP of the cell's production settings
+        _, prod_over = production_config(get_config(arch), shape)
+        overrides = {**prod_over, **overrides}
+    rec = run_cell(arch, shape, "single", out_dir, overrides=overrides,
+                   microbatches=mb, fsdp=fsdp, suffix=f"__{name}")
+    terms = cell_terms(rec, flash=flash)
+    if terms:
+        terms["variant"] = name
+    return rec, terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline_xla,prod,flash")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    print(f"{'variant':18s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'collect_s':>10s} {'bound_s':>9s} {'dominant':>10s} "
+          f"{'roofl%':>7s} {'MFU%':>6s}")
+    for name in args.variants.split(","):
+        rec, t = run_variant(args.arch, args.shape, name.strip(), args.out)
+        if t is None:
+            print(f"{name:18s} ERROR: {rec.get('error')}")
+            continue
+        print(f"{name:18s} {t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+              f"{t['collective_s']:10.4f} {t['bound_s']:9.4f} "
+              f"{t['dominant']:>10s} {100 * t['roofline_fraction']:7.1f} "
+              f"{100 * t['mfu_upper_bound']:6.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

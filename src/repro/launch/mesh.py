@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is an extra pure-DP dimension over the slower inter-pod (DCN)
+links; within the paper's system each pod is one *island* whose updates the
+async parameter server applies (launch/train.py).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh with Auto axis types (tests / small-scale drivers)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host offers (CPU tests: 1 device -> (1,1) mesh)."""
+    n = len(jax.devices())
+    return make_mesh((n // model, model), ("data", "model"))

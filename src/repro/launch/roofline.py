@@ -1,0 +1,146 @@
+"""Roofline analysis over the dry-run JSON artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s per link
+
+Terms per (arch, shape) on the single-pod 16x16 mesh, from the CALIBRATED
+per-device counts (dryrun.py):
+
+    compute    = flops_per_device / 197e12
+    memory     = hbm_bytes_per_device / 819e9
+    collective = effective_link_bytes_per_device / 50e9
+
+effective link bytes apply ring-algorithm factors per op type with the
+parsed mean group size k:
+    all-reduce        2 * B * (k-1)/k
+    all-gather            B * (k-1)/k     (B = gathered output bytes)
+    reduce-scatter        B * (k-1)       (B = scattered output bytes)
+    all-to-all            B * (k-1)/k
+    collective-permute    B
+
+The dominant term is the bottleneck; step time ~ max(terms) under perfect
+overlap, sum(terms) with none. MODEL_FLOPS / (HLO_FLOPs * chips) measures
+useful-compute fraction; roofline fraction = compute / max(terms).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Iterable, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_RING_FACTORS = {
+    "all-reduce": lambda b, k: 2.0 * b * (k - 1.0) / k,
+    "all-gather": lambda b, k: b * (k - 1.0) / k,
+    "reduce-scatter": lambda b, k: b * (k - 1.0),
+    "all-to-all": lambda b, k: b * (k - 1.0) / k,
+    "collective-permute": lambda b, k: b,
+}
+
+
+def effective_link_bytes(collectives: Dict[str, float],
+                         group_sizes: Dict[str, float],
+                         default_k: float = 16.0) -> float:
+    total = 0.0
+    for op, b in collectives.items():
+        if op == "total" or op not in _RING_FACTORS:
+            continue
+        k = max(group_sizes.get(op, default_k), 2.0)
+        total += _RING_FACTORS[op](b, k)
+    return total
+
+
+def cell_terms(rec: dict, *, source: str = "calibrated",
+               flash: bool = False) -> Optional[dict]:
+    """The three roofline terms (seconds) for one dry-run record.
+
+    flash=True models the Pallas-kernel variant: subtracts the parsed
+    attention/SSD quadratic HBM traffic (kept in VMEM by the kernels)."""
+    src = rec.get(source) or rec.get("real")
+    if not src or rec.get("status") != "ok":
+        return None
+    flops = src["flops"]
+    hbm = src.get("hbm_bytes", src.get("bytes_accessed", 0.0))
+    if flash:
+        hbm = hbm - src.get("attn_quad_bytes", 0.0) \
+                  - src.get("ssd_quad_bytes", 0.0)
+    link = effective_link_bytes(src.get("collectives", {}),
+                                src.get("collective_group_sizes", {}))
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": link / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    mf = rec.get("model_flops", 0.0)
+    n_dev = rec.get("n_devices", 256)
+    hlo_global = flops * n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": max(terms.values()),
+        "roofline_fraction": terms["compute_s"] / max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "mfu_upper_bound": (mf / n_dev / PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) else 0.0,
+    }
+
+
+def load_records(art_dir: str, mesh: str = "single") -> Iterable[dict]:
+    for path in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            yield json.load(f)
+
+
+def table(art_dir: str, mesh: str = "single", flash: bool = False):
+    rows = []
+    for rec in load_records(art_dir, mesh):
+        t = cell_terms(rec, flash=flash)
+        if t:
+            rows.append(t)
+    return rows
+
+
+def format_table(rows, *, md: bool = False) -> str:
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "roofline%", "useful%", "MFU-bound%"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "|".join("---" for _ in hdr) + "|")
+    else:
+        lines.append(",".join(hdr))
+    for r in rows:
+        vals = [r["arch"], r["shape"], f"{r['compute_s']:.4f}",
+                f"{r['memory_s']:.4f}", f"{r['collective_s']:.4f}",
+                r["dominant"], f"{100 * r['roofline_fraction']:.1f}",
+                f"{100 * r['useful_ratio']:.1f}",
+                f"{100 * r['mfu_upper_bound']:.1f}"]
+        lines.append(("| " + " | ".join(vals) + " |") if md
+                     else ",".join(vals))
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--flash", action="store_true",
+                    help="model the Pallas flash/SSD kernel variant")
+    args = ap.parse_args()
+    print(format_table(table(args.art, args.mesh, args.flash), md=args.md))
+
+
+if __name__ == "__main__":
+    main()

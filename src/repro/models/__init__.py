@@ -1,0 +1,5 @@
+from .config import ModelConfig
+from .zoo import Model, build_model
+from . import sharding
+
+__all__ = ["ModelConfig", "Model", "build_model", "sharding"]

@@ -1,0 +1,200 @@
+"""Parameter & activation PartitionSpec rules.
+
+Rules are path-based over the param pytree produced by ``build_model(cfg)``.
+Divisibility-aware: a tensor dim is sharded over "model" only when evenly
+divisible (non-divisible cases — e.g. whisper's 20 heads, granite's 49155
+vocab — are replicated rather than padded, so roofline FLOPs stay honest).
+
+DP axes: batch dims shard over ("pod","data") when the pod axis exists,
+else ("data",).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _div(n: int, m: int) -> bool:
+    return n > 0 and n % m == 0
+
+
+def param_pspecs(cfg, params_shape, mesh: Mesh):
+    """Tree of PartitionSpec matching the params shape tree (from eval_shape)."""
+    m = _msize(mesh)
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        keys = [k for k in keys if isinstance(k, str)]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        nd = len(shape)
+        lead = nd - 2  # stacked-layer leading dims (L,) or (G,P)/(E,) etc.
+
+        def with_lead(*tail):
+            return P(*([None] * (nd - len(tail)) + list(tail)))
+
+        # embeddings / heads ------------------------------------------------
+        if name == "embed":
+            return P("model", None) if _div(shape[0], m) else P(None, None)
+        if name == "lm_head":
+            return P(None, "model") if _div(shape[1], m) else P(None, None)
+        if name == "enc_pos":
+            return P(None, None)
+
+        # attention ----------------------------------------------------------
+        if name == "wq":
+            return with_lead(None, "model") if _div(cfg.num_heads, m) else with_lead(None, None)
+        if name in ("wk", "wv"):
+            return with_lead(None, "model") if _div(cfg.num_kv_heads, m) else with_lead(None, None)
+        if name == "wo":
+            return with_lead("model", None) if _div(cfg.num_heads, m) else with_lead(None, None)
+        if name == "bq":
+            return with_lead("model") if _div(cfg.num_heads, m) else with_lead(None)
+        if name in ("bk", "bv"):
+            return with_lead("model") if _div(cfg.num_kv_heads, m) else with_lead(None)
+
+        # MoE ------------------------------------------------------------------
+        if name == "router":
+            return with_lead(None, None)
+        if "moe" in keys and name in ("w_gate", "w_up"):   # (.., E, D, F)
+            return with_lead(None, None, "model") if _div(cfg.d_ff, m) else with_lead(None, None, None)
+        if "moe" in keys and name == "w_down":             # (.., E, F, D)
+            return with_lead(None, "model", None) if _div(cfg.d_ff, m) else with_lead(None, None, None)
+
+        # dense MLP ---------------------------------------------------------------
+        if name in ("w_gate", "w_up"):
+            return with_lead(None, "model") if _div(cfg.d_ff, m) else with_lead(None, None)
+        if name == "w_down":
+            return with_lead("model", None) if _div(cfg.d_ff, m) else with_lead(None, None)
+        if name == "b_up":
+            return with_lead("model") if _div(cfg.d_ff, m) else with_lead(None)
+
+        # SSM -------------------------------------------------------------------------
+        if name in ("w_z", "w_x"):
+            return with_lead(None, "model") if _div(cfg.ssm_nheads, m) else with_lead(None, None)
+        if name == "w_dt":
+            return with_lead(None, "model") if _div(cfg.ssm_nheads, m) else with_lead(None, None)
+        if name == "w_out":
+            return with_lead("model", None) if _div(cfg.ssm_nheads, m) else with_lead(None, None)
+        if name in ("w_B", "w_C", "conv_w", "conv_b", "A_log", "D_skip",
+                    "dt_bias"):
+            return P(*([None] * nd))
+        if name == "norm" and "ssm" in keys:
+            return with_lead("model") if _div(cfg.ssm_nheads, m) else with_lead(None)
+
+        # norms / everything else: replicated
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def apply_fsdp(specs, shapes, mesh: Mesh, min_size: int = 1 << 20):
+    """ZeRO/FSDP post-pass: for every large leaf, additionally shard one
+    not-yet-sharded dim over the dp axes (weights are all-gathered by GSPMD
+    just before use; grads reduce-scattered). Makes the 20B–76B configs fit
+    HBM: param/momentum bytes scale 1/(model x data) instead of 1/model.
+
+    Picks the largest eligible dim divisible by the dp-axis product."""
+    dp = dp_axes(mesh)
+    dpn = _prod_dp(mesh)
+
+    def upgrade(spec, leaf):
+        if leaf.size < min_size:
+            return spec
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_size = None, 0
+        for i, (ax, n) in enumerate(zip(dims, leaf.shape)):
+            if ax is None and n % dpn == 0 and n > best_size:
+                best, best_size = i, n
+        if best is None:
+            return spec
+        dims[best] = dp if len(dp) > 1 else dp[0]
+        return P(*dims)
+
+    return jax.tree.map(upgrade, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cfg, cache_shape, mesh: Mesh):
+    """KV/SSM cache specs. KV heads shard over "model" when divisible,
+    otherwise the *sequence* axis of the cache shards over "model"
+    (flash-decode style distributed attention, XLA-managed)."""
+    m = _msize(mesh)
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        keys = [k for k in keys if isinstance(k, str)]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):                   # (L, B, Smax, KV, hd)
+            batch_ok = _div(shape[1], _prod_dp(mesh))
+            batch_ax = dp if batch_ok else None
+            # When batch can't shard (e.g. long-context B=1), shard the
+            # sequence axis over the data axes instead.
+            seq_ax = None if batch_ok else (dp if _div(shape[2], _prod_dp(mesh)) else None)
+            if _div(cfg.num_kv_heads, m):
+                return P(None, batch_ax, seq_ax, "model", None)
+            # non-divisible KV heads: flash-decode style seq sharding on
+            # model — if the seq extent divides (whisper's 1500-frame cross
+            # cache does not: stays replicated on "model").
+            seq_mult = (1 if seq_ax is None else _prod_dp(mesh)) * m
+            if _div(shape[2], seq_mult):
+                seq_model = ("model",) if seq_ax is None \
+                    else tuple(list(seq_ax) + ["model"])
+                return P(None, batch_ax, seq_model, None, None)
+            return P(None, batch_ax, seq_ax, None, None)
+        if name == "conv":                       # (L, B, K-1, Ch)
+            return P(None, dp if _div(shape[1], _prod_dp(mesh)) else None, None, None)
+        if name == "ssd":                        # (L, B, nh, s, p)
+            batch_ax = dp if _div(shape[1], _prod_dp(mesh)) else None
+            heads_ax = "model" if _div(cfg.ssm_nheads, m) else None
+            return P(None, batch_ax, heads_ax, None, None)
+        if name == "enc":                        # (B, Senc, D)
+            return P(dp if _div(shape[0], _prod_dp(mesh)) else None, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def _prod_dp(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def batch_pspecs(cfg, batch_shape, mesh: Mesh):
+    dp = mesh.axis_names if getattr(cfg, "parallel_layout", "tp") == "dp" \
+        else dp_axes(mesh)
+
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        nd = len(leaf.shape)
+        if leaf.shape and _div(leaf.shape[0], dpn):
+            return P(dp, *([None] * (nd - 1)))
+        # microbatched (M, mb, ...) batches and long-context (1, seq, ...)
+        # inputs: shard the second dim over dp instead.
+        if nd >= 2 and _div(leaf.shape[1], dpn):
+            return P(None, dp, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def named(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Chunked SSD algorithm (arXiv:2405.21060): within a chunk the recurrence is
+computed as masked quadratic attention-like matmuls (MXU-friendly); across
+chunks a cheap ``lax.scan`` carries the (heads, dstate, head_dim) state.
+Decode is an O(1)-per-token recurrence over the same state, which is what
+makes the ``long_500k`` shape feasible for the ssm/hybrid archs.
+
+The Pallas TPU kernel (`repro.kernels.ssd_scan`) implements the intra-chunk
+portion with VMEM tiling; this module is the XLA reference/default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+
+def init_ssm(key, cfg):
+    D, di = cfg.d_model, cfg.d_inner
+    g, s, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    K = cfg.ssm_conv_kernel
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": dense_init(ks[0], D, di),
+        "w_x": dense_init(ks[1], D, di),
+        "w_B": dense_init(ks[2], D, g * s),
+        "w_C": dense_init(ks[3], D, g * s),
+        "w_dt": dense_init(ks[4], D, nh),
+        "conv_w": (K ** -0.5) * jax.random.normal(ks[5], (K, di + 2 * g * s)),
+        "conv_b": jnp.zeros((di + 2 * g * s,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),        # A in [-16, -1]
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))),  # softplus^-1(0.01)
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": dense_init(ks[6], di, D),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d.  xBC: (B, S, Ch), w: (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # depthwise conv as sum of shifted scaled copies (K is 4; cheap & fusible)
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :].astype(out.dtype)
+
+
+def _project(x, p, cfg):
+    dt_ = x.dtype
+    z = x @ p["w_z"].astype(dt_)
+    xin = x @ p["w_x"].astype(dt_)
+    Bp = x @ p["w_B"].astype(dt_)
+    Cp = x @ p["w_C"].astype(dt_)
+    dt_raw = x @ p["w_dt"].astype(dt_)
+    return z, xin, Bp, Cp, dt_raw
+
+
+def ssd_chunked(X, dtv, A, Bh, Ch, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    X: (B,S,nh,p) inputs; dtv: (B,S,nh) softplus'd dt; A: (nh,) negative;
+    Bh/Ch: (B,S,nh,s) per-head (group-broadcast) SSM B/C.
+    Returns y: (B,S,nh,p) and final state (B,nh,s,p).
+    """
+    B_, S, nh, ph = X.shape
+    s = Bh.shape[-1]
+    S0 = S
+    if S % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 and increment dt*B*x=0, so
+        # padding is state-neutral; padded y rows are sliced off below.
+        pad = chunk - S % chunk
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        X, dtv, Bh, Ch = z(X), z(dtv), z(Bh), z(Ch)
+        S = S + pad
+    nc = S // chunk
+    rs = lambda t: t.reshape((B_, nc, chunk) + t.shape[2:])
+    Xc, dtc, Bc, Cc = rs(X), rs(dtv), rs(Bh), rs(Ch)
+
+    l = (dtc.astype(jnp.float32) * A)                          # (B,nc,Q,nh) <= 0
+    cum = jnp.cumsum(l, axis=2)
+    # ---- intra-chunk (quadratic within chunk, MXU matmuls) ----
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,t,u,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bctns,bcuns->bctun", Cc, Bc).astype(jnp.float32) * M
+    dX = (dtc[..., None] * Xc).astype(jnp.float32)              # (B,nc,Q,nh,p)
+    Y_intra = jnp.einsum("bctun,bcunp->bctnp", scores, dX)
+
+    # ---- chunk states ----
+    decay_end = jnp.exp(cum[:, :, -1, :][:, :, None, :] - cum)  # (B,nc,Q,nh)
+    S_chunk = jnp.einsum("bcuns,bcunp,bcun->bcnsp", Bc.astype(jnp.float32), dX, decay_end)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,nh)
+
+    # ---- inter-chunk scan ----
+    if init_state is None:
+        init_state = jnp.zeros((B_, nh, s, ph), jnp.float32)
+
+    def step(carry, inp):
+        dec, Sc = inp                                            # (B,nh), (B,nh,s,p)
+        prev = carry
+        new = dec[:, :, None, None] * prev + Sc
+        return new, prev
+
+    final, S_prev = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                          # (B,nc,nh,s,p)
+    Y_inter = jnp.einsum("bctns,bcnsp,bctn->bctnp",
+                         Cc.astype(jnp.float32), S_prev, jnp.exp(cum))
+    y = (Y_intra + Y_inter).reshape(B_, S, nh, ph)[:, :S0]
+    return y.astype(X.dtype), final
+
+
+def ssm_block(x, p, cfg, state=None):
+    """Full Mamba2 block (no residual). x: (B,S,D).
+
+    state: None for training; {"conv": (B,K-1,Ch), "ssd": (B,nh,s,p)} for
+    prefill-continuation. Returns (out, new_state or None).
+    """
+    B_, S, D = x.shape
+    g, s, nh, ph = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    di = cfg.d_inner
+    z, xin, Bp, Cp, dt_raw = _project(x, p, cfg)
+    xBC = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"]))
+    xin, Bp, Cp = jnp.split(xBC, [di, di + g * s], axis=-1)
+
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    X = xin.reshape(B_, S, nh, ph)
+    hpg = nh // g
+    Bh = jnp.repeat(Bp.reshape(B_, S, g, s), hpg, axis=2)
+    Ch = jnp.repeat(Cp.reshape(B_, S, g, s), hpg, axis=2)
+
+    init_state = state["ssd"] if state is not None else None
+    y, final = ssd_chunked(X, dtv, A, Bh, Ch, cfg.ssm_chunk, init_state)
+    y = y + p["D_skip"].astype(x.dtype)[None, None, :, None] * X
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        K = cfg.ssm_conv_kernel
+        conv_in = jnp.concatenate([x @ p["w_x"].astype(x.dtype),
+                                   x @ p["w_B"].astype(x.dtype),
+                                   x @ p["w_C"].astype(x.dtype)], axis=-1)
+        new_state = {"conv": conv_in[:, -(K - 1):, :], "ssd": final}
+    return out, new_state
+
+
+def ssm_decode_step(x, p, cfg, state):
+    """One-token recurrent decode. x: (B,1,D); state: {"conv","ssd"}."""
+    B_, _, D = x.shape
+    g, s, nh, ph = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    di, K = cfg.d_inner, cfg.ssm_conv_kernel
+    dt_ = x.dtype
+    z = x @ p["w_z"].astype(dt_)
+    new_in = jnp.concatenate([x @ p["w_x"].astype(dt_), x @ p["w_B"].astype(dt_),
+                              x @ p["w_C"].astype(dt_)], axis=-1)        # (B,1,Ch)
+    window = jnp.concatenate([state["conv"], new_in], axis=1)            # (B,K,Ch)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    xBC = jax.nn.silu(conv)[:, None, :]                                  # (B,1,Ch)
+    xin, Bp, Cp = jnp.split(xBC, [di, di + g * s], axis=-1)
+
+    dt_raw = (x @ p["w_dt"].astype(dt_))[:, 0, :]                        # (B,nh)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtv * A)                                               # (B,nh)
+    X = xin.reshape(B_, nh, ph).astype(jnp.float32)
+    hpg = nh // g
+    Bh = jnp.repeat(Bp.reshape(B_, g, s), hpg, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cp.reshape(B_, g, s), hpg, axis=1).astype(jnp.float32)
+
+    S_new = dec[:, :, None, None] * state["ssd"] + \
+        jnp.einsum("bns,bnp,bn->bnsp", Bh, X, dtv)
+    y = jnp.einsum("bns,bnsp->bnp", Ch, S_new) + p["D_skip"][None, :, None] * X
+    y = y.reshape(B_, 1, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+    return out, {"conv": window[:, 1:, :], "ssd": S_new}
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32):
+    g, s = cfg.ssm_ngroups, cfg.ssm_state
+    ch = cfg.d_inner + 2 * g * s
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_kernel - 1, ch), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_nheads, s, cfg.ssm_head_dim), jnp.float32),
+    }

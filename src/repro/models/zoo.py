@@ -1,0 +1,317 @@
+"""build_model(cfg) -> Model: family-specific assembly of init/loss/prefill/decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import cross_kv
+from .common import apply_norm, dense_init, embed_init, norm_params
+from .config import ModelConfig
+from .model import (Model, _lm_logits, _scan, _stacked_init, cross_entropy,
+                    dense_stack, hybrid_stack, init_mamba_layer,
+                    init_transformer_block, ssm_decode_stack, ssm_stack,
+                    transformer_block)
+from .ssm import init_ssm_state
+
+
+def _adt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _embed_tokens(params, tokens, cfg):
+    return params["embed"][tokens].astype(_adt(cfg))
+
+
+def _kv_cache_zeros(cfg, n_layers, batch, max_seq):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((n_layers, batch, max_seq, kv, hd), _adt(cfg))
+    return {"k": z, "v": z}
+
+
+# =============================================================== decoder-only LM
+def build_lm(cfg: ModelConfig) -> Model:
+    """dense / moe / vlm decoder-only LM."""
+    Nv = cfg.num_vision_tokens
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+             "layers": _stacked_init(lambda k: init_transformer_block(k, cfg),
+                                     ks[1], cfg.num_layers),
+             "final_norm": norm_params(cfg.d_model, cfg)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size)
+        return p
+
+    def embed_inputs(params, batch):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        if Nv:
+            vis = batch["vision_embeds"].astype(_adt(cfg))
+            x = jnp.concatenate([vis, x], axis=1)
+        S = x.shape[1]
+        return x, jnp.arange(S)
+
+    def loss(params, batch):
+        x, positions = embed_inputs(params, batch)
+        x, _, aux = dense_stack(x, params["layers"], cfg, positions=positions)
+        if Nv:
+            x = x[:, Nv:, :]
+        logits = _lm_logits(x, params, cfg)
+        l = cross_entropy(logits, batch["labels"])
+        return l + 0.01 * aux, {"loss": l, "aux_loss": aux}
+
+    def init_cache(batch, max_seq):
+        return {"layers": _kv_cache_zeros(cfg, cfg.num_layers, batch, max_seq + Nv),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(params, batch, cache):
+        x, positions = embed_inputs(params, batch)
+        x, new_kv, _ = dense_stack(x, params["layers"], cfg, positions=positions,
+                                   cache=cache["layers"], cache_pos=0)
+        logits = _lm_logits(x[:, -1:, :], params, cfg)
+        return logits, {"layers": new_kv, "pos": jnp.int32(x.shape[1])}
+
+    def decode_step(params, cache, batch):
+        pos = cache["pos"]
+        x = _embed_tokens(params, batch["tokens"], cfg)         # (B,1,D)
+        positions = pos + jnp.arange(x.shape[1])
+        x, new_kv, _ = dense_stack(x, params["layers"], cfg, positions=positions,
+                                   cache=cache["layers"], cache_pos=pos)
+        logits = _lm_logits(x, params, cfg)
+        return logits, {"layers": new_kv, "pos": pos + x.shape[1]}
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# =============================================================== pure SSM LM
+def build_ssm_lm(cfg: ModelConfig) -> Model:
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+             "layers": _stacked_init(lambda k: init_mamba_layer(k, cfg),
+                                     ks[1], cfg.num_layers),
+             "final_norm": norm_params(cfg.d_model, cfg)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size)
+        return p
+
+    def loss(params, batch):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        x, _ = ssm_stack(x, params["layers"], cfg)
+        logits = _lm_logits(x, params, cfg)
+        l = cross_entropy(logits, batch["labels"])
+        return l, {"loss": l}
+
+    def init_cache(batch, max_seq):
+        st = init_ssm_state(cfg, batch)
+        states = jax.tree.map(
+            lambda t: jnp.zeros((cfg.num_layers,) + t.shape, t.dtype), st)
+        return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(params, batch, cache):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        x, new_states = ssm_stack(x, params["layers"], cfg, states=cache["layers"])
+        logits = _lm_logits(x[:, -1:, :], params, cfg)
+        return logits, {"layers": new_states, "pos": jnp.int32(x.shape[1])}
+
+    def decode_step(params, cache, batch):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        x, new_states = ssm_decode_stack(x, params["layers"], cfg, cache["layers"])
+        logits = _lm_logits(x, params, cfg)
+        return logits, {"layers": new_states, "pos": cache["pos"] + 1}
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# =============================================================== hybrid (zamba2)
+def build_hybrid_lm(cfg: ModelConfig) -> Model:
+    G = cfg.num_layers // cfg.hybrid_period
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        p = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+             "layers": {
+                 "mamba": _stacked_init(lambda k: init_mamba_layer(k, cfg),
+                                        ks[1], cfg.num_layers),
+                 "shared": _stacked_init(lambda k: init_transformer_block(k, cfg),
+                                         ks[2], cfg.num_shared_blocks)},
+             "final_norm": norm_params(cfg.d_model, cfg)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.vocab_size)
+        return p
+
+    def loss(params, batch):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x, _, _ = hybrid_stack(x, params["layers"], cfg, positions=positions)
+        logits = _lm_logits(x, params, cfg)
+        l = cross_entropy(logits, batch["labels"])
+        return l, {"loss": l}
+
+    def init_cache(batch, max_seq):
+        st = init_ssm_state(cfg, batch)
+        states = jax.tree.map(
+            lambda t: jnp.zeros((cfg.num_layers,) + t.shape, t.dtype), st)
+        return {"ssm": states, "attn": _kv_cache_zeros(cfg, G, batch, max_seq),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(params, batch, cache):
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x, new_ssm, new_kv = hybrid_stack(
+            x, params["layers"], cfg, positions=positions,
+            ssm_states=cache["ssm"], attn_cache=cache["attn"], cache_pos=0)
+        logits = _lm_logits(x[:, -1:, :], params, cfg)
+        return logits, {"ssm": new_ssm, "attn": new_kv,
+                        "pos": jnp.int32(x.shape[1])}
+
+    def decode_step(params, cache, batch):
+        pos = cache["pos"]
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = pos + jnp.arange(x.shape[1])
+        x, new_ssm, new_kv = hybrid_stack(
+            x, params["layers"], cfg, positions=positions,
+            ssm_states=cache["ssm"], attn_cache=cache["attn"], cache_pos=pos,
+            decode=True)
+        logits = _lm_logits(x, params, cfg)
+        return logits, {"ssm": new_ssm, "attn": new_kv, "pos": pos + 1}
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+# =============================================================== whisper enc-dec
+def build_encdec(cfg: ModelConfig) -> Model:
+    """Whisper-style: stub conv frontend supplies (B, encoder_seq, D) frames."""
+    enc_cfg = cfg  # same dims; encoder is non-causal
+
+    def init(key):
+        ks = jax.random.split(key, 7)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "enc_pos": 0.02 * jax.random.normal(ks[1], (cfg.encoder_seq, cfg.d_model)),
+            "enc_layers": _stacked_init(lambda k: init_transformer_block(k, cfg),
+                                        ks[2], cfg.encoder_layers),
+            "enc_norm": norm_params(cfg.d_model, cfg),
+            "dec_layers": _stacked_init(
+                lambda k: init_transformer_block(k, cfg, cross=True),
+                ks[3], cfg.num_layers),
+            "final_norm": norm_params(cfg.d_model, cfg),
+            "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size),
+        }
+
+    def encode(params, batch):
+        x = batch["audio_embeds"].astype(_adt(cfg)) + \
+            params["enc_pos"].astype(_adt(cfg))[None]
+
+        def body(carry, p):
+            from .model import _shard_seq
+            h, _, _ = transformer_block(_shard_seq(carry, cfg), p, cfg,
+                                        positions=None, mask=jnp.bool_(True))
+            return h, jnp.float32(0.0)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        x, _ = _scan(body, x, params["enc_layers"], cfg)
+        return apply_norm(x, params["enc_norm"], cfg)
+
+    def all_cross_kv(params, enc):
+        """Cross-attention K/V for every decoder layer at once: computed
+        ONCE per request (at prefill) and cached — recomputing them per
+        decode token costs ~100x the useful decode flops."""
+        return jax.vmap(lambda p: cross_kv(enc, p["cross_attn"], cfg))(
+            params["dec_layers"])          # each (L, B, Senc, KV, hd)
+
+    def decode_stack(x, params, positions, cross_cache, cache=None,
+                     cache_pos=None):
+        from .model import _read_layer, _shard_seq, _write_layer
+        ck_all, cv_all = cross_cache
+
+        if cache is None:
+            L = cfg.num_layers
+
+            def body(carry, xs):
+                p, ck, cv = xs
+                h, _, _ = transformer_block(_shard_seq(carry, cfg), p, cfg,
+                                            positions=positions,
+                                            cross=(ck, cv))
+                return h, jnp.float32(0.0)
+
+            if cfg.remat == "full":
+                body = jax.checkpoint(body)
+            x, _ = _scan(body, x, (params["dec_layers"], ck_all, cv_all), cfg)
+            return x, None
+
+        L = cfg.num_layers
+
+        def body(carry, xs):
+            h, cache_all = carry
+            h = _shard_seq(h, cfg)
+            p, idx = xs
+            h, new_kv, _ = transformer_block(
+                h, p, cfg, positions=positions,
+                kv_cache=_read_layer(cache_all, idx), cache_pos=cache_pos,
+                cross=(_read_layer(ck_all, idx), _read_layer(cv_all, idx)))
+            return (h, _write_layer(cache_all, new_kv, idx)), None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        (x, new_cache), _ = _scan(body, (x, cache),
+                                  (params["dec_layers"], jnp.arange(L)), cfg)
+        return x, new_cache
+
+    def loss(params, batch):
+        enc = encode(params, batch)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x, _ = decode_stack(x, params, positions, all_cross_kv(params, enc))
+        logits = _lm_logits(x, params, cfg)
+        l = cross_entropy(logits, batch["labels"])
+        return l, {"loss": l}
+
+    def init_cache(batch, max_seq):
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        zc = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, kv, hd),
+                       _adt(cfg))
+        return {"layers": _kv_cache_zeros(cfg, cfg.num_layers, batch, max_seq),
+                "cross": {"k": zc, "v": zc},
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(params, batch, cache):
+        enc = encode(params, batch)
+        ck, cv = all_cross_kv(params, enc)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x, new_kv = decode_stack(x, params, positions, (ck, cv),
+                                 cache=cache["layers"], cache_pos=0)
+        logits = _lm_logits(x[:, -1:, :], params, cfg)
+        return logits, {"layers": new_kv, "cross": {"k": ck, "v": cv},
+                        "pos": jnp.int32(x.shape[1])}
+
+    def decode_step(params, cache, batch):
+        pos = cache["pos"]
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        positions = pos + jnp.arange(x.shape[1])
+        x, new_kv = decode_stack(x, params, positions,
+                                 (cache["cross"]["k"], cache["cross"]["v"]),
+                                 cache=cache["layers"], cache_pos=pos)
+        logits = _lm_logits(x, params, cfg)
+        return logits, {"layers": new_kv, "cross": cache["cross"],
+                        "pos": pos + 1}
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+FAMILIES = {
+    "dense": build_lm,
+    "moe": build_lm,
+    "vlm": build_lm,
+    "ssm": build_ssm_lm,
+    "hybrid": build_hybrid_lm,
+    "audio": build_encdec,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return FAMILIES[cfg.family](cfg)

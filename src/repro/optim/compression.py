@@ -1,0 +1,71 @@
+"""Gradient compression for async federated pushes over slow links:
+top-k sparsification with error feedback, and int8 symmetric quantization.
+
+At datacenter scale these shrink the cross-island (pod-to-server) update
+traffic — the analogue of the paper's 2.5 MB LeNet model push over 4G.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopK(NamedTuple):
+    values: jnp.ndarray      # (k,)
+    indices: jnp.ndarray     # (k,) int32 into the flattened tensor
+    shape: tuple
+
+
+def topk_compress(x: jnp.ndarray, k: int) -> TopK:
+    flat = x.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return TopK(flat[idx], idx.astype(jnp.int32), x.shape)
+
+
+def topk_decompress(t: TopK) -> jnp.ndarray:
+    flat = jnp.zeros(int(jnp.prod(jnp.array(t.shape))), jnp.float32)
+    flat = flat.at[t.indices].set(t.values)
+    return flat.reshape(t.shape)
+
+
+def int8_quantize(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedback:
+    """Stateful error-feedback wrapper: compress(residual + update), carry
+    the quantization error forward so the compression is unbiased over time."""
+
+    def __init__(self, ratio: float = 0.01, min_k: int = 1):
+        self.ratio = ratio
+        self.min_k = min_k
+        self.residual: Any = None
+
+    def compress(self, tree: Any):
+        if self.residual is None:
+            self.residual = jax.tree.map(
+                lambda x: jnp.zeros_like(x, jnp.float32), tree)
+        corrected = jax.tree.map(lambda x, r: x.astype(jnp.float32) + r,
+                                 tree, self.residual)
+        payload = jax.tree.map(
+            lambda x: topk_compress(x, max(int(x.size * self.ratio), self.min_k)),
+            corrected)
+        # `corrected` is a structural prefix of `payload` (TopK subtrees sit at
+        # its leaf positions), so tree.map hands us the whole TopK per leaf.
+        self.residual = jax.tree.map(
+            lambda x, t: x - topk_decompress(t), corrected, payload)
+        return payload
+
+    @staticmethod
+    def decompress(payload: Any):
+        return jax.tree.map(topk_decompress, payload,
+                            is_leaf=lambda x: isinstance(x, TopK))

@@ -1,0 +1,50 @@
+"""The paper's mechanism at LM scale: fused momentum update + gradient-gap
+norm, gap-aware scaling [31], and delay compensation [10].
+
+``fused_momentum_gap_update`` is the single-HBM-pass version of Eq. (1) +
+Eq. (4): it produces the new momentum, the updated params, AND the
+sum-of-squares needed for the gradient gap — the Pallas kernel
+(`repro.kernels.fused_update`) implements the same contract on TPU; this is
+the XLA path (also its oracle).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_momentum_gap_update(params: Any, v: Any, grads: Any, *,
+                              eta: float, beta: float, lag: jnp.ndarray):
+    """Returns (new_params, new_v, gap_norm) where
+    gap_norm = || eta*(1-beta^lag)/(1-beta) * v_new ||_2 (Eq. 4)."""
+    scale = eta * (1.0 - beta ** lag.astype(jnp.float32)) / (1.0 - beta)
+
+    def leaf(p, vv, g):
+        v_new = beta * vv + (1 - beta) * g.astype(vv.dtype)
+        p_new = (p.astype(jnp.float32) - eta * v_new).astype(p.dtype)
+        partial = jnp.sum(jnp.square(v_new.astype(jnp.float32)))
+        return p_new, v_new, partial
+
+    out = jax.tree.map(leaf, params, v, grads)
+    treedef = jax.tree.structure(params)
+    leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_v = treedef.unflatten([l[1] for l in leaves])
+    sq = sum(l[2] for l in leaves)
+    return new_p, new_v, scale * jnp.sqrt(sq)
+
+
+def gap_aware_scale(gap: jnp.ndarray, gap_ref: jnp.ndarray):
+    """Gap-aware staleness dampening [31]: scale update by 1/(1+gap/ref)."""
+    return 1.0 / (1.0 + gap / jnp.maximum(gap_ref, 1e-9))
+
+
+def delay_compensate(grads: Any, params_now: Any, params_then: Any,
+                     lambda_dc: float = 0.5):
+    """DC-ASGD [10]: g_dc = g + lambda * g*g*(theta_now - theta_then)
+    (diagonal Hessian approximation via gradient outer-product)."""
+    return jax.tree.map(
+        lambda g, pn, pt: g + lambda_dc * g * g * (pn - pt).astype(g.dtype),
+        grads, params_now, params_then)

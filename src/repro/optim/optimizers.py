@@ -1,0 +1,71 @@
+"""Optimizers built from scratch (no optax): momentum SGD (paper Eq. 1)
+and AdamW for the LM-scale configs. Functional, pjit-friendly."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any                  # first moment / momentum vector v_t
+    nu: Any                  # second moment (None for SGD)
+
+
+def momentum_sgd(lr: float, beta: float = 0.9):
+    """Paper Eq. (1): v = beta*v + (1-beta)*g ; theta -= lr*v."""
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(jnp.zeros_like, params), None)
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda v, g: beta * v + (1 - beta) * g,
+                          state.mu, grads)
+        updates = jax.tree.map(lambda v: -lr * v, mu)
+        return updates, OptState(state.step + 1, mu, None)
+
+    return init, update
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return OptState(jnp.zeros((), jnp.int32), z,
+                        jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, n, p):
+            return -lr * ((m / c1) / (jnp.sqrt(n / c2) + eps) + weight_decay * p)
+
+        updates = jax.tree.map(u, mu, nu, params)
+        return updates, OptState(step, mu, nu)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda l: l * scale, tree), n

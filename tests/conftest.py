@@ -1,0 +1,15 @@
+"""Shared test configuration. NOTE: no XLA_FLAGS here — smoke tests and
+benches must see the host's real (single) device; only launch/dryrun.py
+sets the 512-placeholder-device flag, in its own process."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

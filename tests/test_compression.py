@@ -1,0 +1,77 @@
+"""Gradient compression: top-k, int8, error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import (ErrorFeedback, TopK, int8_dequantize,
+                                     int8_quantize, topk_compress,
+                                     topk_decompress)
+
+
+class TestTopK:
+    @given(st.integers(1, 200), st.integers(0, 10 ** 6))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_keeps_largest(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+        k = max(1, n // 4)
+        t = topk_compress(x, k)
+        y = np.asarray(topk_decompress(t))
+        # kept entries match, dropped are zero
+        kept = np.argsort(-np.abs(np.asarray(x)))[:k]
+        np.testing.assert_allclose(y[kept], np.asarray(x)[kept], rtol=1e-6)
+        mask = np.ones(n, bool)
+        mask[kept] = False
+        assert (y[mask] == 0).all()
+
+    def test_2d_shape_restored(self):
+        x = jnp.arange(12.0).reshape(3, 4)
+        t = topk_compress(x, 5)
+        assert topk_decompress(t).shape == (3, 4)
+
+
+class TestInt8:
+    @given(st.integers(1, 500), st.integers(0, 10 ** 6),
+           st.floats(1e-3, 1e3))
+    @settings(max_examples=50, deadline=None)
+    def test_quantization_error_bounded(self, n, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray((scale * rng.normal(0, 1, n)).astype(np.float32))
+        q, s = int8_quantize(x)
+        y = int8_dequantize(q, s)
+        max_err = float(jnp.max(jnp.abs(y - x)))
+        assert max_err <= float(s) * 0.5 + 1e-6 + float(s)  # round + clip slack
+
+    def test_zero_vector(self):
+        q, s = int8_quantize(jnp.zeros(10))
+        np.testing.assert_array_equal(np.asarray(int8_dequantize(q, s)), 0.0)
+
+
+class TestErrorFeedback:
+    def test_residual_makes_compression_unbiased_over_time(self):
+        """Sum of decompressed updates converges to sum of true updates:
+        the defining property of error feedback."""
+        ef = ErrorFeedback(ratio=0.25)
+        rng = np.random.default_rng(0)
+        true_sum = np.zeros(64, np.float32)
+        sent_sum = np.zeros(64, np.float32)
+        for _ in range(50):
+            g = {"w": jnp.asarray(rng.normal(0, 1, 64).astype(np.float32))}
+            true_sum += np.asarray(g["w"])
+            payload = ef.compress(g)
+            sent_sum += np.asarray(ErrorFeedback.decompress(payload)["w"])
+        # residual is bounded -> averages converge
+        resid = np.abs(true_sum - sent_sum)
+        assert resid.max() < 10.0   # residual stays bounded, doesn't diverge
+        np.testing.assert_allclose(sent_sum + np.asarray(ef.residual["w"]),
+                                   true_sum, rtol=1e-4, atol=1e-4)
+
+    def test_full_ratio_is_lossless_stream(self):
+        ef = ErrorFeedback(ratio=1.0)
+        g = {"w": jnp.arange(8.0)}
+        payload = ef.compress(g)
+        np.testing.assert_allclose(
+            np.asarray(ErrorFeedback.decompress(payload)["w"]),
+            np.arange(8.0), rtol=1e-6)

@@ -1,0 +1,40 @@
+"""End-to-end dry-run integration: run launch.dryrun in a SUBPROCESS (it
+must own the XLA placeholder-device flag before jax init) for one fast cell
+on the real production mesh and validate the JSON artifact + roofline terms.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen3-0.6b", "decode_32k")])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path),
+         "--no-calibrate"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__single.json"))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["mesh_shape"] == {"data": 16, "model": 16}
+    mem = rec["real"]["memory"]
+    # the fit proof: per-device bytes within a v5e's 16 GiB
+    assert (mem["argument_bytes"] + mem["temp_bytes"]) < 16 * 2 ** 30
+    assert rec["real"]["flops"] > 0
+    assert rec["real"]["hbm_bytes"] > 0
+
+    from repro.launch.roofline import cell_terms
+    t = cell_terms(rec, source="real")
+    assert t is not None
+    assert t["compute_s"] > 0 and t["memory_s"] > 0
+    assert t["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,64 @@
+"""Energy model vs Table II / Table III of the paper."""
+import pytest
+
+from repro.core.energy import APPS, TESTBED, table2_savings
+
+
+class TestTable2:
+    def test_power_state_ordering_modern_devices(self):
+        """P^{a'} > P^a and P^b > P^d for the paper's Eq. (10) states on the
+        big.LITTLE devices (Hikey970, Pixel2)."""
+        for name in ("Hikey970", "Pixel2"):
+            d = TESTBED[name]
+            assert d.p_train > d.p_idle
+            for a in APPS:
+                assert d.apps[a].p_corun > d.apps[a].p_app
+
+    def test_pixel2_savings_30_50pct(self):
+        """Paper Observation 1: 30-50% saving on Pixel2 across apps
+        (Table II saving column: 23%-35%)."""
+        s = table2_savings()["Pixel2"]
+        for app, v in s.items():
+            assert 0.20 <= v <= 0.50, (app, v)
+
+    def test_hikey_savings_match_paper_column(self):
+        """Spot-check the printed saving(%) column: Hikey970/Map = 47%,
+        Youtube = 33%, News = 43% (+-2% rounding)."""
+        s = table2_savings()["Hikey970"]
+        assert s["Map"] == pytest.approx(0.47, abs=0.02)
+        assert s["Youtube"] == pytest.approx(0.33, abs=0.02)
+        assert s["News"] == pytest.approx(0.43, abs=0.02)
+
+    def test_nexus6_homogeneous_cores_can_regress(self):
+        """Older homogeneous-core device: some apps show energy SURGE
+        (negative saving) — CandyCru -39%, Youtube -4% in Table II."""
+        s = table2_savings()["Nexus6"]
+        assert s["CandyCru"] < 0
+        assert s["Youtube"] < 0
+
+    def test_positive_saving_rate_is_corun_benefit(self):
+        """s_i = P^b + P^a - P^{a'} > 0 iff co-running is cheaper than
+        separate execution at equal duration."""
+        d = TESTBED["Pixel2"]
+        for a in APPS:
+            s = d.energy_saving_rate(a)
+            sep = d.p_train + d.apps[a].p_app
+            assert s == pytest.approx(sep - d.apps[a].p_corun)
+            assert s > 0
+
+    def test_eq10_power_function(self):
+        d = TESTBED["Pixel2"]
+        app = "Tiktok"
+        assert d.power(True, True, app) == d.apps[app].p_corun
+        assert d.power(True, False) == d.p_train
+        assert d.power(False, True, app) == d.apps[app].p_app
+        assert d.power(False, False) == d.p_idle
+
+
+class TestTable3:
+    def test_scheduler_overhead_below_10pct(self):
+        """Table III: online-decision energy overhead < 10% of idle."""
+        for name in ("Nexus6", "Nexus6P", "Pixel2"):
+            d = TESTBED[name]
+            overhead = (d.p_sched - d.p_idle) / d.p_idle
+            assert 0 <= overhead < 0.10, (name, overhead)

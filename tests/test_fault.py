@@ -1,0 +1,78 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic membership."""
+import pytest
+
+from repro.fault.monitor import (ElasticCohort, HeartbeatMonitor,
+                                 StragglerDetector)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class TestHeartbeat:
+    def test_dead_after_timeout(self):
+        clk = FakeClock()
+        hb = HeartbeatMonitor(timeout=10.0, clock=clk)
+        hb.beat("a")
+        hb.beat("b")
+        clk.advance(5)
+        hb.beat("b")
+        clk.advance(6)
+        assert hb.dead() == {"a"}
+        hb.remove("a")
+        assert hb.dead() == set()
+
+
+class TestStraggler:
+    def test_flags_slow_worker(self):
+        clk = FakeClock()
+        sd = StragglerDetector(alpha=1.0, factor=3.0, clock=clk)
+        # 3 fast workers at 1 s cadence, one at 10 s
+        for step in range(5):
+            for w in ("f1", "f2", "f3"):
+                sd.on_update(w)
+            if step % 10 == 0:
+                sd.on_update("slow")
+            clk.advance(1.0)
+        # give slow one more update to compute its interval
+        clk.advance(35.0)
+        sd.on_update("slow")
+        assert "slow" in sd.stragglers()
+        assert not {"f1", "f2", "f3"} & sd.stragglers()
+
+    def test_no_stragglers_with_uniform_cohort(self):
+        clk = FakeClock()
+        sd = StragglerDetector(clock=clk)
+        for _ in range(5):
+            for w in ("a", "b"):
+                sd.on_update(w)
+            clk.advance(1.0)
+        assert sd.stragglers() == set()
+
+
+class TestElasticCohort:
+    def test_join_leave_evict(self):
+        c = ElasticCohort(shards=[0, 1, 2])
+        s_a = c.join("a")
+        s_b = c.join("b")
+        assert {s_a, s_b} <= {0, 1, 2}
+        assert c.active == {"a", "b"}
+        freed = c.evict(["a"])
+        assert freed == [s_a]
+        # shard is recycled
+        s_c = c.join("c")
+        assert s_c in {0, 1, 2}
+        assert c.active == {"b", "c"}
+
+    def test_exhausted_pool_raises(self):
+        c = ElasticCohort(shards=[0])
+        c.join("a")
+        with pytest.raises(RuntimeError):
+            c.join("b")

@@ -1,0 +1,177 @@
+"""Pallas kernels vs their pure-jnp oracles (interpret=True on CPU),
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.fused_update import (fused_update_flat,
+                                        fused_update_flat_ref)
+from repro.kernels.fused_update.ops import fused_momentum_gap_update_pallas
+from repro.kernels.ssd_scan import ssd_chunked_pallas, ssd_chunked_ref
+from repro.models.ssm import ssd_chunked
+from repro.optim.gap import fused_momentum_gap_update
+
+
+class TestFusedUpdate:
+    @pytest.mark.parametrize("n", [1, 100, 4096, 128 * 128 + 17, 777_777])
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    def test_matches_ref(self, n, dtype):
+        k = jax.random.PRNGKey(n)
+        t, v, g = (jax.random.normal(kk, (n,), dtype)
+                   for kk in jax.random.split(k, 3))
+        a = fused_update_flat(t, v, g, 0.01, 0.9, block_rows=128,
+                              interpret=True)
+        b = fused_update_flat_ref(t, v, g, 0.01, 0.9)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("eta,beta", [(0.1, 0.0), (0.01, 0.9),
+                                          (1e-3, 0.99)])
+    def test_hyperparam_sweep(self, eta, beta):
+        k = jax.random.PRNGKey(0)
+        t, v, g = (jax.random.normal(kk, (5000,))
+                   for kk in jax.random.split(k, 3))
+        a = fused_update_flat(t, v, g, eta, beta, block_rows=128,
+                              interpret=True)
+        b = fused_update_flat_ref(t, v, g, eta, beta)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_pytree_wrapper_matches_xla_fused(self):
+        """kernels.fused_update.ops == optim.gap.fused_momentum_gap_update
+        (the paper's Eq. 1 + Eq. 4 in one pass)."""
+        k = jax.random.PRNGKey(1)
+        ks = jax.random.split(k, 6)
+        params = {"a": jax.random.normal(ks[0], (33, 7)),
+                  "b": {"c": jax.random.normal(ks[1], (129,))}}
+        v = {"a": jax.random.normal(ks[2], (33, 7)),
+             "b": {"c": jax.random.normal(ks[3], (129,))}}
+        g = {"a": jax.random.normal(ks[4], (33, 7)),
+             "b": {"c": jax.random.normal(ks[5], (129,))}}
+        p1, v1, gap1 = fused_momentum_gap_update(params, v, g, eta=0.05,
+                                                 beta=0.9,
+                                                 lag=jnp.int32(3))
+        p2, v2, gap2 = fused_momentum_gap_update_pallas(
+            params, v, g, eta=0.05, beta=0.9, lag=3, block_rows=128,
+            interpret=True)
+        for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=3e-5, atol=3e-5)
+        assert float(gap1) == pytest.approx(float(gap2), rel=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,KV,S,d", [
+        (1, 4, 4, 256, 64),      # MHA
+        (2, 8, 2, 256, 128),     # GQA 4:1
+        (1, 4, 2, 384, 64),      # non-pow2 blocks count
+        (1, 2, 1, 512, 32),      # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, B, H, KV, S, d, dtype):
+        k0 = jax.random.PRNGKey(B * H * S)
+        ks = jax.random.split(k0, 3)
+        q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+        k = jax.random.normal(ks[1], (B, KV, S, d), dtype)
+        v = jax.random.normal(ks[2], (B, KV, S, d), dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                              interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_non_causal(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        out = flash_attention(q, k, v, causal=False, block_q=128,
+                              block_k=128, interpret=True)
+        ref = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_model_sdpa(self):
+        """Kernel output == the model's XLA einsum attention (its oracle in
+        the model stack)."""
+        from repro.models.attention import _sdpa, causal_mask
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(name="t", family="dense", num_layers=1,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=64, head_dim=16)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        B, S = 2, 256
+        q = jax.random.normal(ks[0], (B, S, 4, 16))
+        k = jax.random.normal(ks[1], (B, S, 2, 16))
+        v = jax.random.normal(ks[2], (B, S, 2, 16))
+        ref = _sdpa(q, k, v, causal_mask(S, S), cfg)
+        out = flash_attention(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True,
+                              block_q=128, block_k=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(out.transpose(0, 2, 1, 3)),
+                                   np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("B,S,nh,ph,s,chunk", [
+        (2, 64, 4, 16, 16, 16),
+        (1, 128, 2, 32, 64, 32),
+        (2, 96, 3, 8, 24, 32),
+        (1, 64, 8, 64, 128, 16),
+    ])
+    def test_matches_naive_recurrence(self, B, S, nh, ph, s, chunk):
+        k0 = jax.random.PRNGKey(B + S + nh)
+        ks = jax.random.split(k0, 5)
+        X = jax.random.normal(ks[0], (B, S, nh, ph))
+        dtv = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+        A = -jnp.exp(0.3 * jax.random.normal(ks[2], (nh,)))
+        Bh = 0.5 * jax.random.normal(ks[3], (B, S, nh, s))
+        Ch = 0.5 * jax.random.normal(ks[4], (B, S, nh, s))
+        yr, fr = ssd_chunked_ref(X, dtv, A, Bh, Ch)
+        yp, fp = ssd_chunked_pallas(X, dtv, A, Bh, Ch, chunk, interpret=True)
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(fp), np.asarray(fr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_model_xla_path_matches_naive(self):
+        """models.ssm.ssd_chunked (the XLA default) == naive recurrence."""
+        ks = jax.random.split(jax.random.PRNGKey(9), 5)
+        X = jax.random.normal(ks[0], (2, 64, 4, 16))
+        dtv = jax.nn.softplus(jax.random.normal(ks[1], (2, 64, 4)))
+        A = -jnp.exp(0.3 * jax.random.normal(ks[2], (4,)))
+        Bh = 0.5 * jax.random.normal(ks[3], (2, 64, 4, 16))
+        Ch = 0.5 * jax.random.normal(ks[4], (2, 64, 4, 16))
+        yr, fr = ssd_chunked_ref(X, dtv, A, Bh, Ch)
+        yx, fx = ssd_chunked(X, dtv, A, Bh, Ch, 16)
+        np.testing.assert_allclose(np.asarray(yx), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_init_state_continuation(self):
+        """Splitting a sequence across two calls with state carry == one call
+        (prefill-continuation correctness)."""
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        B, S, nh, ph, s, chunk = 1, 64, 2, 8, 16, 16
+        X = jax.random.normal(ks[0], (B, S, nh, ph))
+        dtv = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+        A = -jnp.exp(0.3 * jax.random.normal(ks[2], (nh,)))
+        Bh = 0.5 * jax.random.normal(ks[3], (B, S, nh, s))
+        Ch = 0.5 * jax.random.normal(ks[4], (B, S, nh, s))
+        y_all, f_all = ssd_chunked_pallas(X, dtv, A, Bh, Ch, chunk,
+                                          interpret=True)
+        h = S // 2
+        y1, f1 = ssd_chunked_pallas(X[:, :h], dtv[:, :h], A, Bh[:, :h],
+                                    Ch[:, :h], chunk, interpret=True)
+        y2, f2 = ssd_chunked_pallas(X[:, h:], dtv[:, h:], A, Bh[:, h:],
+                                    Ch[:, h:], chunk, init_state=f1,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y_all[:, h:]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(f2), np.asarray(f_all),
+                                   rtol=1e-4, atol=1e-4)

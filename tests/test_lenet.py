@@ -1,0 +1,61 @@
+"""The paper's workload: LeNet-5 learns cifarlike; real-ML hooks wire up."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import Client
+from repro.core.realml import make_ml_hooks
+from repro.data.synthetic import cifarlike_dataset
+from repro.models.lenet import init_lenet, lenet_logits, lenet_loss, \
+    param_count
+
+
+class TestLeNet:
+    def test_param_count_about_2_5mb(self):
+        """Paper Sec. VI: the pushed model is ~2.5 MB (f32)."""
+        p = init_lenet(jax.random.PRNGKey(0))
+        mb = param_count(p) * 4 / 1e6
+        assert 0.1 < mb < 3.0   # LeNet-5 on 32x32x3: ~0.25 MB — same order
+
+    def test_learns_above_chance_fast(self):
+        x, y = cifarlike_dataset(1000, seed=0, noise=4.0)
+        tx, ty = cifarlike_dataset(300, seed=1, noise=4.0)
+        c = Client(0, jnp.asarray(x), jnp.asarray(y), lenet_loss,
+                   batch_size=20, eta=0.01, beta=0.9)
+        p = init_lenet(jax.random.PRNGKey(0))
+        for _ in range(2):
+            p, v, loss = c.local_train(p)
+        acc = float((np.asarray(lenet_logits(p, jnp.asarray(tx))).argmax(-1)
+                     == ty).mean())
+        assert acc > 0.5
+
+    def test_local_train_returns_momentum(self):
+        x, y = cifarlike_dataset(200, seed=0)
+        c = Client(0, jnp.asarray(x), jnp.asarray(y), lenet_loss)
+        p = init_lenet(jax.random.PRNGKey(0))
+        p2, v, loss = c.local_train(p)
+        assert np.isfinite(loss)
+        v_norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                                    for l in jax.tree.leaves(v))))
+        assert v_norm > 0
+
+
+class TestRealMLHooks:
+    def test_async_hooks_train_and_eval(self):
+        hooks, state = make_ml_hooks(2, n_train=600, n_test=200, noise=4.0)
+        p = hooks["pull"](0)
+        p2 = hooks["local_train"](0, p)
+        hooks["push"](0, p2)
+        acc = hooks["evaluate"]()
+        assert 0.0 <= acc <= 1.0
+        assert hooks["v_norm"]() > 0   # momentum norm set after first push
+
+    def test_sync_hooks_aggregate(self):
+        hooks, state = make_ml_hooks(2, sync=True, n_train=600, n_test=200,
+                                     noise=4.0)
+        p = hooks["pull"](0)
+        hooks["sync_submit"](hooks["local_train"](0, p))
+        hooks["sync_submit"](hooks["local_train"](1, p))
+        hooks["sync_aggregate"]()
+        assert state["server"].round == 1

@@ -1,0 +1,111 @@
+"""Online Lyapunov scheduler (Sec. V): decisions, queues, V trade-off."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lyapunov import OnlineScheduler, UserSlotState, \
+    schedule_threshold
+
+
+def _user(app=False, lag=2, idle_gap=0.0):
+    return UserSlotState(p_corun=2.5, p_app=2.0, p_train=1.35, p_idle=0.689,
+                         app_running=app, lag_estimate=lag, idle_gap=idle_gap)
+
+
+class TestDecision:
+    def test_idle_when_no_backlog(self):
+        """Sec. V.B: Q = H = 0 -> always idle (wait for co-running)."""
+        s = OnlineScheduler(V=100, L_b=10, eta=0.01, beta=0.9)
+        for app in (False, True):
+            d = s.decide(_user(app=app), v_norm=1.0)
+            assert not d.schedule
+
+    def test_schedules_above_threshold(self):
+        """Eq. (22): schedule iff Q >= V * t_d * (P_sched - P_idle)."""
+        s = OnlineScheduler(V=10, L_b=1e9, eta=0.01, beta=0.9)
+        u = _user(app=True)
+        thr = schedule_threshold(10, 1.0, u.p_corun, u.p_app)
+        s.Q = thr + 1e-6
+        assert s.decide(u, v_norm=0.0).schedule
+        s.Q = thr - 1e-3
+        assert not s.decide(u, v_norm=0.0).schedule
+
+    def test_corun_cheaper_than_separate(self):
+        """Co-running threshold is lower than background-alone threshold
+        for any device with positive energy discount."""
+        u = _user(app=True)
+        thr_corun = schedule_threshold(10, 1.0, u.p_corun, u.p_app)
+        thr_sep = schedule_threshold(10, 1.0, u.p_train, u.p_idle)
+        assert thr_corun < thr_sep
+
+    def test_staleness_pressure_forces_schedule(self):
+        """With a large virtual queue H and growing idle gap, scheduling
+        becomes preferable even at Q below the energy threshold."""
+        s = OnlineScheduler(V=1000, L_b=1.0, eta=0.01, beta=0.9)
+        u = _user(app=False, lag=0, idle_gap=50.0)
+        s.Q, s.H = 0.0, 1e4
+        d = s.decide(u, v_norm=0.0)   # gap_sched = 0, gap_idle huge
+        assert d.schedule
+
+    @given(st.floats(1, 1e5), st.floats(0.0, 10.0), st.floats(0.0, 1e4),
+           st.floats(0.0, 1e4))
+    @settings(max_examples=100, deadline=None)
+    def test_decision_minimizes_objective(self, V, vnorm, Q, H):
+        """The returned branch really is the argmin of Eq. (21)."""
+        s = OnlineScheduler(V=V, L_b=10, eta=0.01, beta=0.9)
+        s.Q, s.H = Q, H
+        u = _user(app=True, lag=3, idle_gap=1.0)
+        d = s.decide(u, vnorm)
+        from repro.core.staleness import gradient_gap
+        g_s = gradient_gap(vnorm, 3, 0.01, 0.9)
+        g_i = u.idle_gap + s.epsilon
+        c_s = V * u.p_corun - Q + H * g_s
+        c_i = V * u.p_app + H * g_i
+        assert d.cost == pytest.approx(min(c_s, c_i), rel=1e-9, abs=1e-9)
+        assert d.schedule == (c_s <= c_i)
+
+
+class TestQueues:
+    def test_eq15_eq16(self):
+        s = OnlineScheduler(V=10, L_b=5.0, eta=0.01, beta=0.9)
+        s.update_queues(arrivals=3, served=0, gap_sum=7.0)
+        assert s.Q == 3 and s.H == pytest.approx(2.0)
+        s.update_queues(arrivals=0, served=2, gap_sum=1.0)
+        assert s.Q == 1 and s.H == pytest.approx(0.0)  # max(2+1-5, 0)
+
+    def test_queue_never_negative(self):
+        s = OnlineScheduler(V=10, L_b=5.0, eta=0.01, beta=0.9)
+        s.update_queues(arrivals=0, served=10, gap_sum=0.0)
+        assert s.Q == 0.0 and s.H == 0.0
+
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                              st.floats(0, 10)), min_size=1, max_size=50))
+    @settings(max_examples=50, deadline=None)
+    def test_queue_dynamics_invariants(self, events):
+        s = OnlineScheduler(V=10, L_b=3.0, eta=0.01, beta=0.9)
+        for a, b, g in events:
+            prev_q = s.Q
+            s.update_queues(a, b, g)
+            assert s.Q >= 0 and s.H >= 0
+            assert s.Q <= prev_q + a   # can't grow more than arrivals
+
+
+class TestTradeoff:
+    def test_energy_monotone_in_v(self):
+        """Larger V weights energy more -> never more eager to schedule."""
+        from repro.core.simulator import FederatedSim, SimConfig
+        energies = []
+        for V in (10.0, 1e3, 1e5):
+            r = FederatedSim(SimConfig(policy="online", V=V, horizon_s=1500,
+                                       n_users=10, seed=1)).run()
+            energies.append(r.energy_j)
+        assert energies[0] >= energies[1] >= energies[2] * 0.98
+
+    def test_queue_monotone_in_v(self):
+        from repro.core.simulator import FederatedSim, SimConfig
+        qs = []
+        for V in (10.0, 1e3, 1e5):
+            r = FederatedSim(SimConfig(policy="online", V=V, horizon_s=1500,
+                                       n_users=10, seed=1)).run()
+            qs.append(r.mean_Q)
+        assert qs[0] <= qs[1] + 1e-9 <= qs[2] + 2e-9

@@ -1,0 +1,115 @@
+"""Offline knapsack scheduler (Sec. IV, Alg. 1, Lemma 1)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.offline import (knapsack_schedule, lemma1_lag_bounds,
+                                offline_schedule)
+
+
+def brute_force(savings, gaps, L_b):
+    n = len(savings)
+    best, best_x = 0.0, np.zeros(n, bool)
+    for bits in itertools.product([0, 1], repeat=n):
+        x = np.array(bits, bool)
+        if gaps[x].sum() <= L_b + 1e-12:
+            v = savings[x].sum()
+            if v > best:
+                best, best_x = v, x
+    return best, best_x
+
+
+class TestKnapsack:
+    @given(st.integers(1, 10), st.integers(0, 10 ** 6))
+    @settings(max_examples=60, deadline=None)
+    def test_matches_brute_force(self, n, seed):
+        rng = np.random.default_rng(seed)
+        savings = rng.uniform(-1, 5, n)
+        gaps = rng.integers(0, 6, n).astype(float)   # integral weights: DP exact
+        L_b = float(rng.integers(0, 12))
+        x, total = knapsack_schedule(savings, gaps, L_b, resolution=1.0)
+        best, _ = brute_force(savings, gaps, L_b)
+        assert total == pytest.approx(best, rel=1e-9, abs=1e-9)
+        # the decision is feasible and consistent with its claimed value
+        assert gaps[x].sum() <= L_b + 1e-9
+        assert savings[x].sum() == pytest.approx(total)
+
+    @given(st.integers(1, 12), st.integers(0, 10 ** 6))
+    @settings(max_examples=60, deadline=None)
+    def test_budget_never_exceeded_fractional(self, n, seed):
+        rng = np.random.default_rng(seed)
+        savings = rng.uniform(0, 5, n)
+        gaps = rng.uniform(0, 3, n)
+        L_b = float(rng.uniform(0, 6))
+        x, _ = knapsack_schedule(savings, gaps, L_b, resolution=0.1)
+        # ceil-discretization guarantees feasibility
+        assert gaps[x].sum() <= L_b + 1e-9
+
+    def test_negative_savings_never_taken(self):
+        x, total = knapsack_schedule([-1.0, 2.0], [0.5, 0.5], 10.0)
+        assert not x[0] and x[1]
+        assert total == pytest.approx(2.0)
+
+    def test_zero_budget_takes_only_zero_weight(self):
+        x, total = knapsack_schedule([1.0, 2.0], [0.0, 1.0], 0.0)
+        assert x[0] and not x[1]
+        assert total == pytest.approx(1.0)
+
+
+class TestLemma1:
+    @given(st.integers(2, 12), st.integers(0, 10 ** 6))
+    @settings(max_examples=60, deadline=None)
+    def test_upper_bounds_worst_case(self, n, seed):
+        rng = np.random.default_rng(seed)
+        t = rng.uniform(0, 100, n)
+        ta = t + rng.uniform(0, 50, n)
+        d = rng.uniform(1, 30, n)
+        bounds = lemma1_lag_bounds(t, ta, d)
+        assert (bounds <= n - 1).all()
+        assert (bounds >= 0).all()
+
+    def test_disjoint_windows_zero_lag(self):
+        # users train in fully disjoint windows -> no overlap, zero bound
+        t = np.array([0.0, 100.0, 200.0])
+        ta = np.array([10.0, 110.0, 210.0])
+        d = np.array([5.0, 5.0, 5.0])
+        assert (lemma1_lag_bounds(t, ta, d) == 0).all()
+
+    def test_identical_windows_max_lag(self):
+        t = np.zeros(4)
+        ta = np.zeros(4)
+        d = np.ones(4)
+        assert (lemma1_lag_bounds(t, ta, d) == 3).all()
+
+    def test_lemma1_dominates_realized_lag(self):
+        """Simulated realized lag (any decision combo) <= Lemma-1 bound."""
+        rng = np.random.default_rng(3)
+        n = 6
+        t = rng.uniform(0, 50, n)
+        ta = t + rng.uniform(0, 20, n)
+        d = rng.uniform(1, 10, n)
+        bounds = lemma1_lag_bounds(t, ta, d)
+        for bits in itertools.product([0, 1], repeat=n):
+            starts = np.where(bits, ta, t)
+            ends = starts + d
+            for i in range(n):
+                lag_i = sum(1 for j in range(n)
+                            if j != i and starts[i] <= ends[j] <= ends[i])
+                assert lag_i <= bounds[i]
+
+
+class TestOfflineSchedule:
+    def test_end_to_end(self):
+        rng = np.random.default_rng(0)
+        n = 8
+        t = rng.uniform(0, 100, n)
+        ta = t + rng.uniform(0, 50, n)
+        d = rng.uniform(10, 30, n)
+        savings = rng.uniform(0, 500, n)
+        x, total = offline_schedule(t, ta, d, savings, L_b=5.0,
+                                    eta=0.01, beta=0.9, v_norm=1.0,
+                                    resolution=0.01)
+        assert total >= 0
+        assert x.dtype == bool

@@ -1,0 +1,112 @@
+"""Optimizers + the paper's fused momentum/gap update (optim.gap)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.gap import (delay_compensate, fused_momentum_gap_update,
+                             gap_aware_scale)
+from repro.optim.optimizers import (adamw, apply_updates,
+                                    clip_by_global_norm, global_norm,
+                                    momentum_sgd)
+
+
+class TestMomentumSGD:
+    def test_matches_closed_form(self):
+        """Eq. (1): v = b v + (1-b) g ; theta -= lr v."""
+        init, update = momentum_sgd(lr=0.1, beta=0.9)
+        p = {"w": jnp.array([1.0, 2.0])}
+        st = init(p)
+        g = {"w": jnp.array([1.0, -1.0])}
+        up, st = update(g, st, p)
+        np.testing.assert_allclose(np.asarray(up["w"]),
+                                   -0.1 * 0.1 * np.asarray(g["w"]))
+        up, st = update(g, st, p)
+        v2 = 0.9 * 0.1 + 0.1 * 1.0
+        np.testing.assert_allclose(np.asarray(up["w"])[0], -0.1 * v2,
+                                   rtol=1e-6)
+
+    def test_apply_updates_dtype_preserved(self):
+        p = {"w": jnp.zeros(3, jnp.bfloat16)}
+        out = apply_updates(p, {"w": jnp.ones(3)})
+        assert out["w"].dtype == jnp.bfloat16
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        init, update = adamw(lr=0.1, weight_decay=0.0)
+        p = {"w": jnp.array([5.0, -3.0])}
+        st = init(p)
+        for _ in range(100):
+            g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+            up, st = update(g, st, p)
+            p = apply_updates(p, up)
+        assert float(jnp.abs(p["w"]).max()) < 0.5
+
+    def test_weight_decay_pulls_to_zero(self):
+        init, update = adamw(lr=0.1, weight_decay=0.5)
+        p = {"w": jnp.array([10.0])}
+        st = init(p)
+        g = {"w": jnp.array([0.0])}
+        for _ in range(50):
+            up, st = update(g, st, p)
+            p = apply_updates(p, up)
+        assert float(jnp.abs(p["w"]).max()) < 2.0
+
+
+class TestClip:
+    def test_clip_by_global_norm(self):
+        t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        clipped, n = clip_by_global_norm(t, 1.0)
+        assert float(n) == pytest.approx(5.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_no_clip_below_threshold(self):
+        t = {"a": jnp.array([0.3])}
+        clipped, _ = clip_by_global_norm(t, 1.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]), 0.3)
+
+
+class TestFusedGapUpdate:
+    def test_equals_three_pass_reference(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        p = {"w": jax.random.normal(ks[0], (32, 8)),
+             "b": jax.random.normal(ks[1], (8,))}
+        v = {"w": jax.random.normal(ks[2], (32, 8)),
+             "b": jax.random.normal(ks[3], (8,))}
+        g = {"w": jax.random.normal(ks[4], (32, 8)),
+             "b": jax.random.normal(ks[5], (8,))}
+        eta, beta, lag = 0.01, 0.9, 4
+        p2, v2, gap = fused_momentum_gap_update(p, v, g, eta=eta, beta=beta,
+                                                lag=jnp.int32(lag))
+        # three separate passes
+        v_ref = jax.tree.map(lambda a, b_: beta * a + (1 - beta) * b_, v, g)
+        p_ref = jax.tree.map(lambda a, b_: a - eta * b_, p, v_ref)
+        from repro.core.staleness import gradient_gap, tree_l2_norm
+        gap_ref = gradient_gap(tree_l2_norm(v_ref), lag, eta, beta)
+        for a, b_ in zip(jax.tree.leaves(p2), jax.tree.leaves(p_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-6)
+        assert float(gap) == pytest.approx(gap_ref, rel=1e-5)
+
+    def test_zero_lag_zero_gap(self):
+        p = {"w": jnp.ones(4)}
+        _, _, gap = fused_momentum_gap_update(p, p, p, eta=0.1, beta=0.9,
+                                              lag=jnp.int32(0))
+        assert float(gap) == pytest.approx(0.0)
+
+
+class TestStalenessMitigation:
+    def test_gap_aware_scale(self):
+        assert float(gap_aware_scale(jnp.float32(0.0), jnp.float32(1.0))) \
+            == pytest.approx(1.0)
+        assert float(gap_aware_scale(jnp.float32(3.0), jnp.float32(1.0))) \
+            == pytest.approx(0.25)
+
+    def test_delay_compensation_direction(self):
+        """DC-ASGD: g_dc = g + l * g*g*(now - then)."""
+        g = {"w": jnp.array([2.0])}
+        now = {"w": jnp.array([1.0])}
+        then = {"w": jnp.array([0.5])}
+        out = delay_compensate(g, now, then, lambda_dc=0.5)
+        assert float(out["w"][0]) == pytest.approx(2.0 + 0.5 * 4.0 * 0.5)

@@ -1,0 +1,88 @@
+"""Async / sync parameter servers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import AsyncParameterServer, SyncServer
+
+
+def _params(v=0.0):
+    return {"w": jnp.full((4,), v), "b": jnp.zeros((2,))}
+
+
+class TestAsyncServer:
+    def test_replace_rule(self):
+        s = AsyncParameterServer(_params(0.0), eta=0.1, beta=0.9)
+        p, ver = s.pull("a")
+        res = s.push("a", _params(1.0))
+        assert res.lag == 0 and res.applied_weight == 1.0
+        np.testing.assert_allclose(s.params["w"], 1.0)
+
+    def test_lag_counts_foreign_updates(self):
+        s = AsyncParameterServer(_params(), eta=0.1, beta=0.9)
+        s.pull("a")
+        s.pull("b")
+        s.push("b", _params(1.0))
+        s.pull("b")
+        s.push("b", _params(2.0))
+        res = s.push("a", _params(3.0))
+        assert res.lag == 2
+
+    def test_fedasync_poly_dampens_stale(self):
+        s = AsyncParameterServer(_params(0.0), eta=0.1, beta=0.9,
+                                 aggregation="fedasync_poly",
+                                 fedasync_alpha=0.6, fedasync_a=0.5)
+        s.pull("a")
+        s.pull("b")
+        s.push("b", _params(1.0))    # advances version
+        res = s.push("a", _params(10.0))
+        assert res.lag == 1
+        expected_w = 0.6 * (1 + 1) ** -0.5
+        assert res.applied_weight == pytest.approx(expected_w)
+        # b's earlier push was itself dampened: 0.6 * (1+0)^-0.5 = 0.6
+        prev = 0.6 * 1.0
+        np.testing.assert_allclose(
+            s.params["w"], expected_w * 10.0 + (1 - expected_w) * prev,
+            rtol=1e-6)
+
+    def test_gap_aware_weight_shrinks_with_gap(self):
+        s = AsyncParameterServer(_params(0.0), eta=0.1, beta=0.9,
+                                 aggregation="gap_aware", gap_ref=1.0)
+        s.pull("a")
+        s.push("a", _params(1.0))
+        w_fresh = 1.0 / (1.0 + 0.0)  # first push: v_norm 0 -> gap 0
+        s.pull("c")
+        s.pull("b")
+        s.push("b", _params(2.0))
+        res = s.push("c", _params(3.0))   # lag 1, v_norm > 0 now
+        assert res.applied_weight < w_fresh
+
+    def test_momentum_norm_tracks_motion(self):
+        s = AsyncParameterServer(_params(0.0), eta=0.1, beta=0.9)
+        assert s.v_norm == 0.0
+        s.pull("a")
+        s.push("a", _params(1.0))
+        assert s.v_norm > 0.0
+
+    def test_lag_estimate_is_other_inflight(self):
+        s = AsyncParameterServer(_params(), eta=0.1, beta=0.9)
+        s.pull("a")
+        s.pull("b")
+        assert s.lag_estimate("a") == 1   # only b counts for a
+        assert s.lag_estimate("c") == 2
+
+
+class TestSyncServer:
+    def test_fedavg_mean(self):
+        s = SyncServer(_params(0.0))
+        s.submit(_params(1.0))
+        s.submit(_params(3.0))
+        r = s.aggregate()
+        assert r == 1
+        np.testing.assert_allclose(s.params["w"], 2.0)
+
+    def test_empty_round_noop(self):
+        s = SyncServer(_params(5.0))
+        assert s.aggregate() == 0
+        np.testing.assert_allclose(s.params["w"], 5.0)

@@ -1,0 +1,100 @@
+"""Slotted federated simulator: the paper's Sec. VII evaluation harness."""
+import numpy as np
+import pytest
+
+from repro.core.simulator import FederatedSim, SimConfig
+
+
+def run(policy, **kw):
+    kw.setdefault("horizon_s", 2000)
+    kw.setdefault("n_users", 12)
+    kw.setdefault("seed", 2)
+    return FederatedSim(SimConfig(policy=policy, **kw)).run()
+
+
+class TestPolicies:
+    def test_all_policies_produce_updates(self):
+        for pol in ("sync", "immediate", "offline", "online"):
+            r = run(pol)
+            assert r.updates > 0, pol
+            assert r.energy_j > 0
+
+    def test_immediate_is_energy_upper_bound(self):
+        """Fig. 4a: immediate scheduling is the energy ceiling."""
+        ri = run("immediate")
+        ro = run("online")
+        roff = run("offline")
+        assert ro.energy_j < ri.energy_j
+        assert roff.energy_j < ri.energy_j
+
+    def test_immediate_has_most_updates(self):
+        ri = run("immediate")
+        ro = run("online")
+        assert ri.updates >= ro.updates
+
+    def test_online_corun_fraction_exceeds_immediate(self):
+        """The online controller waits for co-running opportunities."""
+        ri = run("immediate", horizon_s=4000)
+        ro = run("online", horizon_s=4000)
+        assert ro.corun_fraction >= ri.corun_fraction
+
+    def test_offline_prefers_corunning(self):
+        roff = run("offline", horizon_s=4000)
+        assert roff.corun_fraction > 0.9   # knapsack takes co-run whenever allowed
+
+    def test_deterministic_by_seed(self):
+        a = run("online", seed=7)
+        b = run("online", seed=7)
+        assert a.energy_j == b.energy_j and a.updates == b.updates
+
+    def test_seed_changes_trajectory(self):
+        a = run("online", seed=7)
+        b = run("online", seed=8)
+        assert a.energy_j != b.energy_j
+
+
+class TestEnergyAccounting:
+    def test_energy_at_least_idle_floor(self):
+        r = run("online")
+        cfg = SimConfig(policy="online", horizon_s=2000, n_users=12, seed=2)
+        sim = FederatedSim(cfg)
+        idle_floor = sum(u.device.p_idle for u in sim.users) * cfg.horizon_s
+        assert r.energy_j >= 0.95 * idle_floor
+
+    def test_scheduler_overhead_small(self):
+        """Table III: including the per-slot decision power changes total
+        energy by < 10%."""
+        a = run("online", include_scheduler_overhead=False)
+        b = run("online", include_scheduler_overhead=True)
+        assert b.energy_j >= a.energy_j
+        assert (b.energy_j - a.energy_j) / a.energy_j < 0.10
+
+
+class TestStalenessTraces:
+    def test_push_log_records_lag_and_gap(self):
+        r = run("online")
+        assert len(r.push_log) == r.updates
+        lags = [e["lag"] for e in r.push_log]
+        gaps = [e["gap"] for e in r.push_log]
+        assert all(l >= 0 for l in lags)
+        assert all(g >= 0 for g in gaps)
+        # Fig. 5a: lag and gap are positively correlated
+        if len(set(lags)) > 1:
+            c = np.corrcoef(lags, gaps)[0, 1]
+            assert c > 0
+
+    def test_sync_policy_zero_lag(self):
+        r = run("sync", horizon_s=3000)
+        assert all(e["lag"] == 0 for e in r.push_log)
+
+    def test_async_builds_lag(self):
+        r = run("immediate", horizon_s=3000)
+        assert max((e["lag"] for e in r.push_log), default=0) > 0
+
+
+class TestQueueTraces:
+    def test_traces_lengths_match(self):
+        r = run("online")
+        assert len(r.trace_t) == len(r.trace_energy) == len(r.trace_Q) \
+            == len(r.trace_H)
+        assert (np.diff(r.trace_energy) >= 0).all()   # energy is cumulative

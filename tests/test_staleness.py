@@ -1,0 +1,104 @@
+"""Staleness metrics: Eq. (1)-(4) + Def. 1 lag tracking."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.staleness import (LagTracker, gradient_gap, momentum_scale,
+                                  predict_weights, tree_l2_norm, true_gap)
+
+
+class TestMomentumScale:
+    @given(st.integers(0, 200), st.floats(1e-4, 1.0),
+           st.floats(0.0, 0.99))
+    @settings(max_examples=200, deadline=None)
+    def test_nonnegative_and_bounded(self, lag, eta, beta):
+        s = momentum_scale(lag, eta, beta)
+        assert s >= 0.0
+        # geometric series bound: eta * (1 - b^l)/(1 - b) <= eta/(1-b)
+        if beta < 1.0:
+            assert s <= eta / (1.0 - beta) + 1e-9
+
+    @given(st.floats(1e-4, 1.0), st.floats(0.01, 0.99))
+    @settings(max_examples=100, deadline=None)
+    def test_zero_lag_zero_scale(self, eta, beta):
+        assert momentum_scale(0, eta, beta) == pytest.approx(0.0)
+
+    @given(st.integers(1, 100), st.floats(1e-3, 0.5), st.floats(0.01, 0.99))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_in_lag(self, lag, eta, beta):
+        assert momentum_scale(lag + 1, eta, beta) >= \
+            momentum_scale(lag, eta, beta)
+
+    def test_beta_zero(self):
+        # no momentum: one update moves by eta * v exactly
+        assert momentum_scale(1, 0.1, 0.0) == pytest.approx(0.1)
+        assert momentum_scale(5, 0.1, 0.0) == pytest.approx(0.1)
+
+    def test_closed_form(self):
+        eta, beta, lag = 0.01, 0.9, 7
+        expected = eta * (1 - beta ** lag) / (1 - beta)
+        assert momentum_scale(lag, eta, beta) == pytest.approx(expected)
+
+
+class TestGradientGap:
+    @given(st.floats(0.0, 100.0), st.integers(0, 50))
+    @settings(max_examples=100, deadline=None)
+    def test_proportional_to_vnorm(self, vnorm, lag):
+        g = gradient_gap(vnorm, lag, 0.01, 0.9)
+        g2 = gradient_gap(2 * vnorm, lag, 0.01, 0.9)
+        assert g2 == pytest.approx(2 * g, rel=1e-6, abs=1e-12)
+
+    def test_lwp_exact_under_momentum_decay_model(self):
+        """Eq. (3) models future steps as pure momentum decay
+        (v_{t+k} = beta^k v_t, no new gradient): under that dynamics the
+        prediction and the Eq. (4) gap are EXACT."""
+        eta, beta, lag = 0.05, 0.9, 6
+        theta = {"w": jnp.array([1.0, -2.0, 3.0])}
+        v = {"w": jnp.array([0.5, 0.25, -1.0])}
+        th, vv = theta, v
+        for _ in range(lag):
+            vv = jax.tree.map(lambda a: beta * a, vv)        # s_t = 0
+            th = jax.tree.map(lambda t, m: t - eta * m, th, vv)
+        pred = predict_weights(theta, v, lag, eta, beta)
+        # LWP sums eta * sum_{k=0}^{l-1} beta^k v_t; decay starts at beta^1
+        # in our roll-out, so compare against the paper's convention directly
+        lwp_delta = eta * (1 - beta ** lag) / (1 - beta)
+        np.testing.assert_allclose(
+            np.asarray(pred["w"]),
+            np.asarray(theta["w"]) - lwp_delta * np.asarray(v["w"]),
+            rtol=1e-6)
+        gap_est = gradient_gap(tree_l2_norm(v), lag, eta, beta)
+        assert gap_est == pytest.approx(
+            lwp_delta * float(tree_l2_norm(v)), rel=1e-5)
+        # and the roll-out (beta^1..beta^l) is the same up to one beta factor
+        rolled = float(true_gap(theta, th))
+        assert rolled == pytest.approx(beta * gap_est, rel=1e-4)
+
+    def test_tree_l2_norm(self):
+        t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        assert tree_l2_norm(t) == pytest.approx(5.0)
+
+
+class TestLagTracker:
+    def test_def1_counting(self):
+        lt = LagTracker()
+        lt.on_pull("i")         # i pulls at version 0
+        lt.on_pull("j")
+        lt.on_pull("k")
+        assert lt.on_push("j") == 0   # no foreign updates yet
+        assert lt.on_push("k") == 1   # j landed during k's window
+        assert lt.on_push("i") == 2   # paper Fig. 3: l_tau = 2
+
+    def test_sync_has_zero_lag(self):
+        lt = LagTracker()
+        for r in range(3):
+            lt.on_pull("a")
+            assert lt.on_push("a") == 0
+
+    def test_unknown_client_lag_zero(self):
+        lt = LagTracker()
+        assert lt.lag("ghost") == 0
