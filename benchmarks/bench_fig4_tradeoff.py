@@ -12,7 +12,10 @@ def run(fast: bool = True):
     n_users = 25
     rows = []
 
-    base = dict(horizon_s=horizon, n_users=n_users, seed=0)
+    # trace mode -> the vectorized SoA engine replays the loop engine
+    # exactly (tests/test_sim_engines.py) at a fraction of the wall-clock
+    base = dict(horizon_s=horizon, n_users=n_users, seed=0,
+                engine="vectorized")
     for pol in ("immediate", "offline", "sync"):
         r = FederatedSim(SimConfig(policy=pol, **base)).run()
         rows.append({"bench": "fig4_tradeoff", "policy": pol, "V": "",

@@ -21,8 +21,10 @@ def run(fast: bool = True):
         hooks, state = make_ml_hooks(n_users, sync=(pol == "sync"),
                                      n_train=n_train,
                                      n_test=1000 if fast else 2000)
+        # real-ML mode drives per-user JAX training through hooks -> needs
+        # the loop engine (engine="auto" resolves to it; pin for clarity)
         cfg = SimConfig(policy=pol, horizon_s=horizon, n_users=n_users,
-                        ml_mode="real", seed=0, L_b=L_b,
+                        ml_mode="real", seed=0, L_b=L_b, engine="loop",
                         app_arrival_p=0.004 if fast else 0.001)
         r = FederatedSim(cfg, ml_hooks=hooks).run()
         final_acc = r.accuracy[-1][1] if r.accuracy else float("nan")

@@ -14,7 +14,7 @@ def run(fast: bool = True):
         for pol in ("immediate", "online", "offline"):
             r = FederatedSim(SimConfig(policy=pol, app_arrival_p=p,
                                        horizon_s=horizon, n_users=25,
-                                       seed=1)).run()
+                                       seed=1, engine="vectorized")).run()
             rows.append({
                 "bench": "fig6_arrival", "policy": pol, "arrival_p": p,
                 "energy_kj": round(r.energy_j / 1e3, 2),

@@ -1,0 +1,67 @@
+"""Simulator engine scaling: slots/sec and wall-clock vs n_users for the
+loop / vectorized / jax engines (online policy, trace mode).
+
+Tracks the perf trajectory of the struct-of-arrays engine across PRs; the
+headline number is the vectorized-vs-loop speedup at n_users=400 (the
+acceptance floor is 10x). The loop engine is skipped at cohort sizes where
+it would dominate the suite's wall-clock; the jax engine reports compile
+and steady-state times separately (one compile per config shape — scalar
+knobs are traced, so sweeps reuse the executable).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import FederatedSim, SimConfig
+
+SIZES = (25, 400, 2500, 10000)
+
+
+def _time_run(engine: str, n: int, horizon: int, seed: int = 0):
+    # push-log collection off for every engine so the comparison measures
+    # engine speed, not log-building (jax cannot collect one regardless)
+    cfg = SimConfig(policy="online", n_users=n, horizon_s=horizon,
+                    engine=engine, seed=seed, collect_push_log=False)
+    sim = FederatedSim(cfg)
+    t0 = time.perf_counter()
+    r = sim.run()
+    return time.perf_counter() - t0, r
+
+
+def run(fast: bool = True):
+    horizon = 600 if fast else 3600
+    loop_cap = 2500 if fast else max(SIZES)
+    rows = []
+    for n in SIZES:
+        loop_wall = None
+        for engine in ("loop", "vectorized", "jax"):
+            if engine == "loop" and n > loop_cap:
+                continue
+            compile_s = ""
+            if engine == "jax":
+                t_first, _ = _time_run(engine, n, horizon)
+                wall, r = _time_run(engine, n, horizon)
+                compile_s = round(t_first - wall, 2)
+            else:
+                wall, r = _time_run(engine, n, horizon)
+            if engine == "loop":
+                loop_wall = wall
+            T = int(horizon)
+            rows.append({
+                "bench": "sim_scale", "engine": engine, "n_users": n,
+                "horizon_s": horizon,
+                "wall_s": round(wall, 3),
+                "slots_per_s": round(T / wall, 1),
+                "user_slots_per_s": round(n * T / wall, 0),
+                "compile_s": compile_s,
+                "speedup_vs_loop": round(loop_wall / wall, 1)
+                if loop_wall else "",
+                "updates": r.updates,
+                "energy_kj": round(r.energy_j / 1e3, 2),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

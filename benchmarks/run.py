@@ -12,7 +12,8 @@ import time
 
 from benchmarks import (bench_fig4_tradeoff, bench_fig5_convergence,
                         bench_fig6_arrival, bench_kernels, bench_roofline,
-                        bench_table2_energy, bench_table3_overhead)
+                        bench_sim_scale, bench_table2_energy,
+                        bench_table3_overhead)
 from benchmarks.common import emit
 
 BENCHES = [
@@ -21,6 +22,7 @@ BENCHES = [
     ("fig4", bench_fig4_tradeoff),
     ("fig6", bench_fig6_arrival),
     ("fig5", bench_fig5_convergence),
+    ("sim_scale", bench_sim_scale),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
 ]

@@ -1,20 +1,28 @@
 """The paper's primary contribution: energy-aware scheduling of asynchronous
 federated training (energy model, staleness metrics, offline knapsack,
-online Lyapunov scheduler, async parameter server, slotted-time simulator)."""
-from .energy import APPS, DEVICE_NAMES, TESTBED, DeviceProfile, table2_savings
-from .lyapunov import OnlineScheduler, UserSlotState, schedule_threshold
-from .offline import knapsack_schedule, lemma1_lag_bounds, offline_schedule
+online Lyapunov scheduler, async parameter server, slotted-time simulator
+with loop / vectorized / jax engines)."""
+from .energy import (APPS, DEVICE_NAMES, TESTBED, DeviceProfile,
+                     DeviceTables, catalog_tables, device_ids,
+                     table2_savings)
+from .lyapunov import (BatchDecision, OnlineScheduler, UserSlotState,
+                       schedule_threshold)
+from .offline import (knapsack_schedule, lemma1_lag_bounds,
+                      lemma1_lag_bounds_loop, offline_schedule)
 from .server import AsyncParameterServer, SyncServer
-from .simulator import FederatedSim, SimConfig, SimResult
+from .simulator import ENGINES, POLICIES, FederatedSim, SimConfig, SimResult
 from .staleness import (LagTracker, gradient_gap, momentum_scale,
                         predict_weights, tree_l2_norm, true_gap)
 
 __all__ = [
-    "APPS", "DEVICE_NAMES", "TESTBED", "DeviceProfile", "table2_savings",
-    "OnlineScheduler", "UserSlotState", "schedule_threshold",
-    "knapsack_schedule", "lemma1_lag_bounds", "offline_schedule",
+    "APPS", "DEVICE_NAMES", "TESTBED", "DeviceProfile", "DeviceTables",
+    "catalog_tables", "device_ids", "table2_savings",
+    "BatchDecision", "OnlineScheduler", "UserSlotState",
+    "schedule_threshold",
+    "knapsack_schedule", "lemma1_lag_bounds", "lemma1_lag_bounds_loop",
+    "offline_schedule",
     "AsyncParameterServer", "SyncServer",
-    "FederatedSim", "SimConfig", "SimResult",
+    "ENGINES", "POLICIES", "FederatedSim", "SimConfig", "SimResult",
     "LagTracker", "gradient_gap", "momentum_scale", "predict_weights",
     "tree_l2_norm", "true_gap",
 ]

@@ -9,7 +9,10 @@ Percentage saving (Sec. VII.A):          1 - P^{a'} t_a / (P^b t_b + P^a t_a)
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import functools
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
 
 APPS = ["Map", "News", "Etrade", "Youtube", "Tiktok", "Zoom", "CandyCru", "Angrybird"]
 
@@ -85,3 +88,59 @@ DEVICE_NAMES = list(TESTBED)
 def table2_savings() -> Dict[str, Dict[str, float]]:
     """Reproduce the saving(%) column of Table II for every (device, app)."""
     return {d: {a: TESTBED[d].saving_percent(a) for a in APPS} for d in TESTBED}
+
+
+# ---------------------------------------------------------------------------
+# Struct-of-arrays view of the catalog, for the vectorized simulator engine.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DeviceTables:
+    """Table II/III flattened into dense lookup tables.
+
+    Per-device vectors have shape ``(n_devices,)``; per-(device, app)
+    tables have shape ``(n_devices, n_apps)`` with the app axis ordered as
+    ``APPS``. ``saving_rate[d, a]`` is Sec. IV's s_i = P^b + P^a - P^{a'}.
+    """
+    names: Tuple[str, ...]
+    p_train: np.ndarray
+    t_train: np.ndarray
+    p_idle: np.ndarray
+    p_sched: np.ndarray
+    p_app: np.ndarray
+    p_corun: np.ndarray
+    t_corun: np.ndarray
+    saving_rate: np.ndarray
+
+
+@functools.lru_cache(maxsize=1)
+def catalog_tables() -> DeviceTables:
+    names = tuple(TESTBED)
+    devs = [TESTBED[n] for n in names]
+    p_train = np.array([d.p_train for d in devs])
+    p_app = np.array([[d.apps[a].p_app for a in APPS] for d in devs])
+    p_corun = np.array([[d.apps[a].p_corun for a in APPS] for d in devs])
+    tables = DeviceTables(
+        names=names,
+        p_train=p_train,
+        t_train=np.array([d.t_train for d in devs]),
+        p_idle=np.array([d.p_idle for d in devs]),
+        p_sched=np.array([d.p_sched for d in devs]),
+        p_app=p_app,
+        p_corun=p_corun,
+        t_corun=np.array([[d.apps[a].t_corun for a in APPS] for d in devs]),
+        # same operation order as DeviceProfile.energy_saving_rate
+        saving_rate=(p_train[:, None] + p_app) - p_corun,
+    )
+    # the lru_cache hands out one process-wide instance; freeze the arrays
+    # so an accidental in-place write can't corrupt every later run
+    for f in dataclasses.fields(tables):
+        v = getattr(tables, f.name)
+        if isinstance(v, np.ndarray):
+            v.setflags(write=False)
+    return tables
+
+
+def device_ids(names: Sequence[str]) -> np.ndarray:
+    """Map device names onto row indices of ``catalog_tables()``."""
+    order = {n: i for i, n in enumerate(catalog_tables().names)}
+    return np.array([order[n] for n in names], dtype=np.int64)

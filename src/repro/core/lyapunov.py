@@ -46,6 +46,14 @@ class Decision:
     cost: float
 
 
+@dataclasses.dataclass
+class BatchDecision:
+    schedule: np.ndarray  # (k,) bool, in waiting-set order
+    gaps: np.ndarray      # (k,) float, the g_i each decision contributes
+    gap_sum: float        # sum of gaps (feeds Eq. 16)
+    n_served: int
+
+
 class OnlineScheduler:
     """Server-side queue state + the per-user argmin (distributed form)."""
 
@@ -74,6 +82,99 @@ class OnlineScheduler:
         if cost_sched <= cost_idle:
             return Decision(True, gap_sched, cost_sched)
         return Decision(False, gap_idle, cost_idle)
+
+    def decide_batch(self, p_sched, p_idle, idle_gap, lag_base: int,
+                     v_norm: float) -> BatchDecision:
+        """Vectorized Alg. 2 line 6 over the whole waiting set.
+
+        ``p_sched``/``p_idle`` are the Eq. (10) powers of the schedule/idle
+        branch for each waiting user (the caller already selected co-run vs
+        background powers from the app status); ``idle_gap`` the accumulated
+        Eq. (12) gaps; ``lag_base`` the server lag estimate (in-flight tasks)
+        at the start of the slot.
+
+        Replicates the sequential in-slot coupling of repeated ``decide``
+        calls exactly: every user that schedules raises the next user's lag
+        estimate by one. When H == 0 the gap term cannot influence the
+        argmin, so all decisions collapse to one elementwise comparison; the
+        sequential dependence only materializes when the staleness queue has
+        backlog, where we fall back to an O(k) scalar pass over a shared
+        precomputed gap table.
+        """
+        p_s = np.asarray(p_sched, dtype=float)
+        p_i = np.asarray(p_idle, dtype=float)
+        ig = np.asarray(idle_gap, dtype=float)
+        k = len(p_s)
+        # Same elementwise operation order as decide(): V * P * t_d - Q + H*g
+        base = self.V * p_s * self.t_d - self.Q
+        rhs = self.V * p_i * self.t_d
+        gap_idle = ig + self.epsilon
+        # g(schedule) at every possible in-slot lag: lag_base + #scheduled-so-far
+        gap_vec = gradient_gap(v_norm,
+                               max(int(lag_base), 0) + np.arange(k + 1),
+                               self.eta, self.beta)
+        if self.H == 0.0 or k == 0:
+            # +H*g adds exactly 0.0 to both branches -> order-free argmin
+            schedule = base <= rhs
+        else:
+            # cost_sched(j) = base + H*gap_vec[j] is nondecreasing in j
+            # (gap_vec is sorted, H > 0, IEEE mult/add are monotone), so
+            # user i schedules iff its prefix count j_i <= K_i, the largest
+            # j where the comparison holds. Users that pass even at the
+            # worst-case lag ("always") or fail at the best ("never") are
+            # order-free; only the rest need the sequential prefix replay.
+            H = self.H
+            ci = rhs + H * gap_idle
+            if not np.all(np.diff(gap_vec) >= 0.0):
+                # eta/v_norm < 0 inverts the gap ordering; the threshold
+                # trick below would misclassify, so replay sequentially
+                return self._decide_batch_sequential(base, rhs, gap_idle,
+                                                     gap_vec, k)
+            p_best = base + H * gap_vec[0] <= ci
+            p_worst = base + H * gap_vec[k - 1] <= ci
+            schedule = p_worst.copy()
+            middle = p_best & ~p_worst
+            if middle.any():
+                midx = np.nonzero(middle)[0]
+                bm, cm = base[midx], ci[midx]
+                blo = np.zeros(len(midx), np.int64)       # comparison true
+                bhi = np.full(len(midx), k - 1, np.int64)  # comparison false
+                while np.any(bhi - blo > 1):
+                    mid = (blo + bhi) >> 1
+                    ok = bm + H * gap_vec[mid] <= cm
+                    blo = np.where(ok, mid, blo)
+                    bhi = np.where(ok, bhi, mid)
+                K = blo.tolist()
+                ca = (np.cumsum(schedule) - schedule)[midx].tolist()
+                m = 0
+                x = np.zeros(len(midx), dtype=bool)
+                for ii in range(len(midx)):
+                    if ca[ii] + m <= K[ii]:
+                        x[ii] = True
+                        m += 1
+                schedule[midx] = x
+        before = np.cumsum(schedule) - schedule          # exclusive prefix
+        gaps = np.where(schedule, gap_vec[before], gap_idle)
+        return BatchDecision(schedule, gaps, float(np.sum(gaps)),
+                             int(np.count_nonzero(schedule)))
+
+    def _decide_batch_sequential(self, base, rhs, gap_idle, gap_vec, k):
+        """Literal replay of k decide() calls — correct for any gap
+        ordering, O(k) Python; only reached with pathological eta/v_norm."""
+        H = self.H
+        schedule = np.zeros(k, dtype=bool)
+        gaps = np.empty(k)
+        bl, rl, gl, gv = base.tolist(), rhs.tolist(), gap_idle.tolist(), \
+            gap_vec.tolist()
+        j = 0
+        for i in range(k):
+            if bl[i] + H * gv[j] <= rl[i] + H * gl[i]:
+                schedule[i] = True
+                gaps[i] = gv[j]
+                j += 1
+            else:
+                gaps[i] = gl[i]
+        return BatchDecision(schedule, gaps, float(np.sum(gaps)), j)
 
     # ---------------------------------------------------------------- server
     def update_queues(self, arrivals: int, served: int, gap_sum: float):

@@ -14,12 +14,15 @@ from __future__ import annotations
 import numpy as np
 
 
-def lemma1_lag_bounds(t_start, t_app, duration):
+def lemma1_lag_bounds(t_start, t_app, duration, *, block: int = 1024):
     """Lemma 1: decision-independent upper bound on each user's lag.
 
     For user i, count users j != i whose training could END inside either of
     i's candidate execution windows [t_i, t_i+d_i] or [t_i^a, t_i^a+d_i],
     considering both of j's candidate end times t_j+d_j and t_j^a+d_j.
+
+    Fully broadcast over (i, j) pairs — no per-i Python loop — processed in
+    row blocks of ``block`` users to bound peak memory at O(block * n).
     """
     t = np.asarray(t_start, float)
     ta = np.asarray(t_app, float)
@@ -27,6 +30,27 @@ def lemma1_lag_bounds(t_start, t_app, duration):
     n = len(t)
     ends = np.stack([t + d, ta + d], axis=1)                 # (n, 2) candidate ends
     lo = np.stack([t, ta], axis=1)                           # (n, 2) window starts
+    hi = lo + d[:, None]
+    bounds = np.empty(n, dtype=np.int64)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        # (rows, n, ends(2), windows(2)): does end (j, e) land in window (i, w)?
+        in_window = ((ends[None, :, :, None] >= lo[s:e, None, None, :]) &
+                     (ends[None, :, :, None] <= hi[s:e, None, None, :]))
+        overlaps = in_window.any(axis=(2, 3))                # (rows, n)
+        overlaps[np.arange(e - s), np.arange(s, e)] = False  # exclude self
+        bounds[s:e] = overlaps.sum(axis=1)
+    return bounds
+
+
+def lemma1_lag_bounds_loop(t_start, t_app, duration):
+    """Reference per-i loop form of Lemma 1 (oracle for the broadcast one)."""
+    t = np.asarray(t_start, float)
+    ta = np.asarray(t_app, float)
+    d = np.asarray(duration, float)
+    n = len(t)
+    ends = np.stack([t + d, ta + d], axis=1)
+    lo = np.stack([t, ta], axis=1)
     hi = lo + d[:, None]
     bounds = np.zeros(n, dtype=np.int64)
     for i in range(n):
@@ -91,5 +115,5 @@ def offline_schedule(t_start, t_app, duration, savings, L_b: float,
     from .staleness import gradient_gap
 
     lags = lemma1_lag_bounds(t_start, t_app, duration)
-    gaps = np.array([gradient_gap(v_norm, int(l), eta, beta) for l in lags])
+    gaps = np.asarray(gradient_gap(v_norm, lags, eta, beta), dtype=float)
     return knapsack_schedule(savings, gaps, L_b, resolution=resolution)

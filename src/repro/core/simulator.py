@@ -9,6 +9,13 @@ per-slot energy accounting per Eq. (10) and queue dynamics per Eqs. (15-16).
 ml_mode="trace" tracks updates/staleness without real gradients (fast —
 Fig. 4/6 energy results); ml_mode="real" couples the schedule to actual JAX
 training of the paper's LeNet-5 (Fig. 5 convergence results).
+
+Engines (SimConfig.engine): this class's per-user object loop is the
+reference oracle ("loop"); "vectorized" runs the same semantics on
+struct-of-arrays batched state (core/vector_engine.py), "jax" compiles the
+horizon into one lax.scan, and "auto" (default) picks the vectorized
+engine for pure trace-mode runs. Seeded equivalence across engines is
+pinned by tests/test_sim_engines.py.
 """
 from __future__ import annotations
 
@@ -21,6 +28,10 @@ from .energy import APPS, DEVICE_NAMES, TESTBED, DeviceProfile
 from .lyapunov import OnlineScheduler, UserSlotState
 from .offline import knapsack_schedule, lemma1_lag_bounds
 from .staleness import gradient_gap
+
+
+POLICIES = ("sync", "immediate", "offline", "online")
+ENGINES = ("auto", "loop", "vectorized", "jax")
 
 
 @dataclasses.dataclass
@@ -43,6 +54,47 @@ class SimConfig:
     trace_every: int = 30           # slots between trace samples
     include_scheduler_overhead: bool = False
     v_norm0: float = 1.0            # trace-mode momentum-norm model scale
+    engine: str = "auto"            # auto | loop | vectorized | jax
+    collect_push_log: bool = True   # per-push dicts; disable at fleet scale
+
+    def __post_init__(self):
+        # Fail at construction, not mid-run (a bad policy string used to
+        # surface only once the first slot hit the decision branch).
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"expected one of {POLICIES}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
+        if self.ml_mode not in ("trace", "real"):
+            raise ValueError(f"unknown ml_mode {self.ml_mode!r}")
+        if self.n_users <= 0:
+            raise ValueError(f"n_users must be positive, got {self.n_users}")
+        if self.t_d <= 0:
+            raise ValueError(f"t_d must be positive, got {self.t_d}")
+        if self.horizon_s <= 0:
+            raise ValueError(
+                f"horizon_s must be positive, got {self.horizon_s}")
+        if not 0.0 <= self.app_arrival_p <= 1.0:
+            raise ValueError(
+                f"app_arrival_p must be in [0, 1], got {self.app_arrival_p}")
+        if not 0.0 <= self.beta < 1.0:
+            raise ValueError(f"beta must be in [0, 1), got {self.beta}")
+        if self.V < 0 or self.L_b < 0 or self.epsilon < 0:
+            raise ValueError("V, L_b and epsilon must be non-negative")
+        if self.eta < 0 or self.v_norm0 < 0:
+            # negative eta/v_norm would invert Eq. 4's gap monotonicity,
+            # which the batched online argmin relies on
+            raise ValueError("eta and v_norm0 must be non-negative")
+        if self.offline_window <= 0 or self.offline_resolution <= 0:
+            raise ValueError(
+                "offline_window and offline_resolution must be positive")
+        if self.ready_delay < 0:
+            raise ValueError(
+                f"ready_delay must be non-negative, got {self.ready_delay}")
+        if self.trace_every <= 0:
+            raise ValueError(
+                f"trace_every must be positive, got {self.trace_every}")
 
 
 @dataclasses.dataclass
@@ -77,6 +129,19 @@ class SimResult:
     corun_fraction: float
 
 
+def n_slots(cfg: SimConfig) -> int:
+    """Slots in the horizon. round() before int: 48 s / 1.6 s is
+    29.999999999999996 in floats and plain int() would drop a slot."""
+    return int(round(cfg.horizon_s / cfg.t_d))
+
+
+def trace_v_norm(v_norm0: float, version) -> float:
+    """Trace-mode momentum-norm model: ||v|| decays with global progress.
+    Shared by the loop oracle and the vectorized engines (version may be an
+    array of per-finisher versions)."""
+    return v_norm0 / np.sqrt(1.0 + 0.05 * version)
+
+
 class FederatedSim:
     def __init__(self, cfg: SimConfig, ml_hooks: Optional[dict] = None):
         """ml_hooks (real mode): {"pull": fn()->params_version, "push":
@@ -93,8 +158,11 @@ class FederatedSim:
                                      cfg.epsilon, cfg.t_d)
         self.version = 0
         self.in_flight = 0
-        # Pre-sample the app arrival schedule (offline policy needs lookahead)
-        T = cfg.horizon_s
+        # Pre-sample the app arrival schedule (offline policy needs
+        # lookahead), one row per SLOT — t_d < 1 means more slots than
+        # seconds. (For t_d == 1 this matches the historical horizon_s
+        # sizing draw-for-draw, keeping seeded runs reproducible.)
+        T = n_slots(cfg)
         self.app_sched = self.rng.random((T, cfg.n_users)) < cfg.app_arrival_p
         self.app_choice = self.rng.integers(0, len(APPS), (T, cfg.n_users))
 
@@ -102,8 +170,7 @@ class FederatedSim:
     def _v_norm(self) -> float:
         if "v_norm" in self.ml:
             return self.ml["v_norm"]()
-        # trace-mode model: momentum norm decays with global progress
-        return self.cfg.v_norm0 / np.sqrt(1.0 + 0.05 * self.version)
+        return trace_v_norm(self.cfg.v_norm0, self.version)
 
     def _begin_training(self, u: UserState, t: int, corun: bool):
         u.mode = "training"
@@ -132,16 +199,46 @@ class FederatedSim:
         u.cooldown = self.cfg.ready_delay
         u.idle_gap = 0.0
         self.in_flight -= 1
-        log.append({"t": t, "user": u._uid, "lag": lag, "gap": gap,
-                    "corun": u.corun})
+        if self.cfg.collect_push_log:
+            log.append({"t": t, "user": u._uid, "lag": lag, "gap": gap,
+                        "corun": u.corun})
 
     # ------------------------------------------------------------------ main
+    def resolve_engine(self) -> str:
+        """Pick the engine to run: ``auto`` selects the vectorized SoA
+        engine whenever the run is pure trace mode (real-ML hooks other than
+        the slot-constant ``v_norm`` need the per-user object loop). The jax
+        backend covers hook-free trace runs of sync/immediate/online only —
+        with an offline policy (knapsack DP cannot live inside lax.scan) or
+        a ``v_norm`` hook (a Python callback cannot run under the scan) it
+        degrades to the numpy engine, which honors both."""
+        cfg = self.cfg
+        vec_ok = cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}
+        engine = cfg.engine
+        if engine == "auto":
+            return "vectorized" if vec_ok else "loop"
+        if engine in ("vectorized", "jax") and not vec_ok:
+            raise ValueError(
+                f"engine={engine!r} supports only trace-mode runs without "
+                "per-user ML hooks; use engine='loop' (or 'auto') for "
+                "ml_mode='real'")
+        if engine == "jax" and (cfg.policy == "offline" or self.ml):
+            return "vectorized"
+        return engine
+
     def run(self) -> SimResult:
+        engine = self.resolve_engine()
+        if engine == "loop":
+            return self._run_loop()
+        from .vector_engine import run_vectorized
+        return run_vectorized(self, backend=engine)
+
+    def _run_loop(self) -> SimResult:
         cfg = self.cfg
         for i, u in enumerate(self.users):
             u._uid = i
             u._params = None
-        T = int(cfg.horizon_s / cfg.t_d)
+        T = n_slots(cfg)
         trace_t, trace_E, trace_Q, trace_H = [], [], [], []
         push_log: List[dict] = []
         accuracy: List[tuple] = []
@@ -267,7 +364,8 @@ class FederatedSim:
             trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
             trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
             push_log=push_log, accuracy=accuracy,
-            mean_Q=sum_Q / T, mean_H=sum_H / T,
+            mean_Q=sum_Q / T if T else 0.0,
+            mean_H=sum_H / T if T else 0.0,
             corun_fraction=corun_updates / max(updates, 1))
 
     # ------------------------------------------------------------- offline plan

@@ -20,15 +20,36 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def momentum_scale(lag: float, eta: float, beta: float) -> float:
-    """eta * (1 - beta^lag) / (1 - beta) — the LWP multiplier in Eq. (4)."""
+def momentum_scale(lag, eta: float, beta: float):
+    """eta * (1 - beta^lag) / (1 - beta) — the LWP multiplier in Eq. (4).
+
+    ``lag`` may be a scalar (Python number or jax tracer — the scalar path
+    stays in operator-land so Eq. (3)/(4) remain jit-traceable) or an
+    ndarray (float64 array out). np.power and Python ``**`` both resolve
+    to the C library pow for float64, so the loop (scalar) and vectorized
+    (array) simulator engines see bit-identical gap values — pinned by
+    tests/test_sim_engines.py.
+    """
+    if isinstance(lag, np.ndarray):
+        if beta == 0.0:
+            return np.where(lag > 0, float(eta), 0.0)
+        return eta * (1.0 - np.power(beta, lag)) / (1.0 - beta)
+    if isinstance(lag, (int, float, np.integer, np.floating)):
+        # concrete scalar: same np.power ufunc as the array path — Python's
+        # ** and np.power disagree by an ulp for some (beta, lag >= 1024)
+        if beta == 0.0:
+            return float(eta) if lag > 0 else 0.0
+        return float(eta * (1.0 - np.power(beta, lag)) / (1.0 - beta))
+    # duck-typed scalar (jax tracer): operator-land only, stays traceable
     if beta == 0.0:
         return eta if lag > 0 else 0.0
     return eta * (1.0 - beta ** lag) / (1.0 - beta)
 
 
-def gradient_gap(v_norm: float, lag: float, eta: float, beta: float) -> float:
-    """Eq. (4): predicted parameter-space L2 distance over `lag` updates."""
+def gradient_gap(v_norm, lag, eta: float, beta: float):
+    """Eq. (4): predicted parameter-space L2 distance over `lag` updates.
+
+    Accepts scalar or array ``lag`` / ``v_norm`` (broadcast elementwise)."""
     return momentum_scale(lag, eta, beta) * v_norm
 
 

@@ -8,23 +8,48 @@ async parameter server applies (launch/train.py).
 
 Functions, not module constants: importing this module never touches jax
 device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Compat: ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist on newer JAX releases; on older versions we
+fall back to a plain ``jax.make_mesh`` — every mesh axis defaults to the
+same (auto) partitioning behaviour there. ``AbstractMesh`` likewise changed
+its constructor signature between releases; ``make_abstract_mesh`` accepts
+(shape, axes) and adapts.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # JAX >= 0.5-ish exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - exercised on older JAX only
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh with Auto axis types (tests / small-scale drivers)."""
+    shape, axes = tuple(shape), tuple(axes)
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
-    """Arbitrary mesh with Auto axis types (tests / small-scale drivers)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+def make_abstract_mesh(shape, axes):
+    """Device-less mesh for lowering-only tests, across AbstractMesh APIs."""
+    from jax.sharding import AbstractMesh
+
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:  # older signature: tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_host_mesh(model: int = 1):

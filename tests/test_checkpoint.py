@@ -83,8 +83,8 @@ class TestCheckpointer:
     def test_restore_with_shardings(self, tmp_path):
         """Elastic resume: restore with explicit (here host) shardings."""
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         c = Checkpointer(str(tmp_path))
         t = _tree()
         c.save(t, 1)

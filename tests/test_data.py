@@ -70,8 +70,8 @@ class TestShardedLoader:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.data.loader import ShardedLoader
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         sh = NamedSharding(mesh, P())
         batches = [{"x": np.full((2, 2), i, np.float32)} for i in range(7)]
         loader = ShardedLoader(iter(batches), {"x": sh}, depth=3)

@@ -102,8 +102,8 @@ ENTRY %main (a: f32[8192,688]) -> f32[8192,688] {
 
 def test_real_compile_collectives_parse():
     """End-to-end: a psum under a 1-device mesh parses without error."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
     with jax.set_mesh(mesh):
         f = jax.jit(lambda x: x @ x.T,
