@@ -1,10 +1,10 @@
 """Fig. 4: V sweep of energy / Q / H plus the L_b energy-staleness
-trade-off, against the immediate / offline / sync baselines."""
+trade-off, against the immediate / offline / sync baselines (Scenario API)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.simulator import FederatedSim, SimConfig
+from repro.core import Scenario, run_experiment
 
 
 def run(fast: bool = True):
@@ -17,7 +17,7 @@ def run(fast: bool = True):
     base = dict(horizon_s=horizon, n_users=n_users, seed=0,
                 engine="vectorized")
     for pol in ("immediate", "offline", "sync"):
-        r = FederatedSim(SimConfig(policy=pol, **base)).run()
+        r = run_experiment(Scenario(policy=pol, **base))
         rows.append({"bench": "fig4_tradeoff", "policy": pol, "V": "",
                      "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
                      "mean_Q": round(r.mean_Q, 2),
@@ -28,7 +28,7 @@ def run(fast: bool = True):
     vs = [1e2, 1e3, 4e3, 1e4, 1e5] if fast else \
         [1e2, 3e2, 1e3, 4e3, 1e4, 3e4, 1e5, 1e6]
     for V in vs:
-        r = FederatedSim(SimConfig(policy="online", V=V, **base)).run()
+        r = run_experiment(Scenario(policy="online", V=V, **base))
         rows.append({"bench": "fig4_tradeoff", "policy": "online", "V": V,
                      "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
                      "mean_Q": round(r.mean_Q, 2),
@@ -38,8 +38,8 @@ def run(fast: bool = True):
 
     # Fig. 4d: staleness bound sweep
     for L_b in ([100.0, 1000.0] if fast else [50.0, 100.0, 500.0, 1000.0]):
-        r = FederatedSim(SimConfig(policy="online", V=4000.0, L_b=L_b,
-                                   **base)).run()
+        r = run_experiment(Scenario(policy="online", V=4000.0, L_b=L_b,
+                                    **base))
         rows.append({"bench": "fig4_tradeoff", "policy": "online_Lb",
                      "V": 4000.0, "L_b": L_b,
                      "energy_kj": round(r.energy_j / 1e3, 2),

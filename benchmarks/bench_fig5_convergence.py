@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import Scenario
 from repro.core.realml import make_ml_hooks
-from repro.core.simulator import FederatedSim, SimConfig
 
 
 def run(fast: bool = True):
@@ -23,10 +23,10 @@ def run(fast: bool = True):
                                      n_test=1000 if fast else 2000)
         # real-ML mode drives per-user JAX training through hooks -> needs
         # the loop engine (engine="auto" resolves to it; pin for clarity)
-        cfg = SimConfig(policy=pol, horizon_s=horizon, n_users=n_users,
-                        ml_mode="real", seed=0, L_b=L_b, engine="loop",
-                        app_arrival_p=0.004 if fast else 0.001)
-        r = FederatedSim(cfg, ml_hooks=hooks).run()
+        sc = Scenario(policy=pol, horizon_s=horizon, n_users=n_users,
+                      ml_mode="real", seed=0, L_b=L_b, engine="loop",
+                      app_arrival_p=0.004 if fast else 0.001)
+        r = sc.run(ml_hooks=hooks)
         final_acc = r.accuracy[-1][1] if r.accuracy else float("nan")
         # wall-clock to reach accuracy thresholds (Fig. 5c)
         t_to = {}

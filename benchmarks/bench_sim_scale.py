@@ -1,26 +1,39 @@
-"""Simulator engine scaling: slots/sec and wall-clock vs n_users for the
-loop / vectorized / jax engines (online policy, trace mode).
+"""Simulator engine scaling: slots/sec and wall-clock per engine, per
+policy (trace mode).
 
 Tracks the perf trajectory of the struct-of-arrays engine across PRs; the
 headline number is the vectorized-vs-loop speedup at n_users=400 (the
-acceptance floor is 10x). The loop engine is skipped at cohort sizes where
-it would dominate the suite's wall-clock; the jax engine reports compile
-and steady-state times separately (one compile per config shape — scalar
-knobs are traced, so sweeps reuse the executable).
+acceptance floor is 10x). Two sweeps:
+
+* cohort-size sweep (online policy) over SIZES — the scaling headline;
+* policy sweep at n_users=400 over every registry policy x engine pair the
+  policy supports (jax rows appear only for jax-capable policies).
+
+The loop engine is skipped at cohort sizes where it would dominate the
+suite's wall-clock; the jax engine reports compile and steady-state times
+separately (one compile per (config shape, policy) — scalar knobs are
+traced, so sweeps reuse the executable).
+
+Besides the CSV stream every run persists ``BENCH_sim_scale.json`` (see
+``common.write_json``) so the slots/sec trajectory is machine-readable
+across PRs.
 """
 from __future__ import annotations
 
 import time
 
+from repro.core.policies import registered_policies, resolve_policy
 from repro.core.simulator import FederatedSim, SimConfig
 
 SIZES = (25, 400, 2500, 10000)
+POLICY_SWEEP_N = 400
+JSON_PATH = "BENCH_sim_scale.json"
 
 
-def _time_run(engine: str, n: int, horizon: int, seed: int = 0):
+def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0):
     # push-log collection off for every engine so the comparison measures
     # engine speed, not log-building (jax cannot collect one regardless)
-    cfg = SimConfig(policy="online", n_users=n, horizon_s=horizon,
+    cfg = SimConfig(policy=policy, n_users=n, horizon_s=horizon,
                     engine=engine, seed=seed, collect_push_log=False)
     sim = FederatedSim(cfg)
     t0 = time.perf_counter()
@@ -28,37 +41,77 @@ def _time_run(engine: str, n: int, horizon: int, seed: int = 0):
     return time.perf_counter() - t0, r
 
 
+def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall):
+    return {
+        "bench": "sim_scale", "sweep": sweep, "policy": policy,
+        "engine": engine, "n_users": n, "horizon_s": horizon,
+        "wall_s": round(wall, 3),
+        "slots_per_s": round(horizon / wall, 1),
+        "user_slots_per_s": round(n * horizon / wall, 0),
+        "compile_s": compile_s,
+        "speedup_vs_loop": round(loop_wall / wall, 1) if loop_wall else "",
+        "updates": r.updates,
+        "energy_kj": round(r.energy_j / 1e3, 2),
+    }
+
+
+def _engines_for(policy: str):
+    pol = resolve_policy(policy)
+    engines = ["loop"]
+    if pol.supports_vectorized:
+        engines.append("vectorized")
+    if pol.supports_jax:
+        engines.append("jax")
+    return engines
+
+
 def run(fast: bool = True):
     horizon = 600 if fast else 3600
     loop_cap = 2500 if fast else max(SIZES)
     rows = []
+
+    def bench(sweep, policy, engine, n, loop_wall):
+        compile_s = ""
+        if engine == "jax":
+            t_first, _ = _time_run(policy, engine, n, horizon)
+            wall, r = _time_run(policy, engine, n, horizon)
+            compile_s = round(t_first - wall, 2)
+        else:
+            wall, r = _time_run(policy, engine, n, horizon)
+        rows.append(_row(sweep, policy, engine, n, horizon, wall, r,
+                         compile_s, loop_wall))
+        return wall
+
+    # --- cohort-size sweep, online policy (the scaling headline) ---------
     for n in SIZES:
         loop_wall = None
-        for engine in ("loop", "vectorized", "jax"):
+        for engine in _engines_for("online"):
             if engine == "loop" and n > loop_cap:
                 continue
-            compile_s = ""
-            if engine == "jax":
-                t_first, _ = _time_run(engine, n, horizon)
-                wall, r = _time_run(engine, n, horizon)
-                compile_s = round(t_first - wall, 2)
-            else:
-                wall, r = _time_run(engine, n, horizon)
+            wall = bench("size", "online", engine, n, loop_wall)
             if engine == "loop":
                 loop_wall = wall
-            T = int(horizon)
-            rows.append({
-                "bench": "sim_scale", "engine": engine, "n_users": n,
-                "horizon_s": horizon,
-                "wall_s": round(wall, 3),
-                "slots_per_s": round(T / wall, 1),
-                "user_slots_per_s": round(n * T / wall, 0),
-                "compile_s": compile_s,
-                "speedup_vs_loop": round(loop_wall / wall, 1)
-                if loop_wall else "",
-                "updates": r.updates,
-                "energy_kj": round(r.energy_j / 1e3, 2),
-            })
+
+    # --- policy sweep at the acceptance shape: every registered policy ---
+    for policy in registered_policies():
+        if policy == "online" and POLICY_SWEEP_N in SIZES:
+            # already measured in the size sweep; relabel those rows
+            # instead of burning duplicate wall-clock on identical runs
+            reused = [{**r, "sweep": "policy"} for r in rows
+                      if r["sweep"] == "size"
+                      and r["n_users"] == POLICY_SWEEP_N]
+            rows.extend(reused)
+            continue
+        loop_wall = None
+        for engine in _engines_for(policy):
+            wall = bench("policy", policy, engine, POLICY_SWEEP_N, loop_wall)
+            if engine == "loop":
+                loop_wall = wall
+
+    from benchmarks.common import write_json
+    write_json(rows, JSON_PATH,
+               meta={"bench": "sim_scale", "fast": fast,
+                     "policies": list(registered_policies())})
     return rows
 
 

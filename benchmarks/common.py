@@ -9,8 +9,11 @@ from __future__ import annotations
 
 import csv
 import io
+import json
+import platform
 import sys
-from typing import Iterable
+import time
+from typing import Iterable, Optional
 
 
 def emit(rows: Iterable[dict], header_done=set()) -> None:
@@ -22,3 +25,28 @@ def emit(rows: Iterable[dict], header_done=set()) -> None:
     for r in rows:
         w.writerow(r)
     sys.stdout.flush()
+
+
+def write_json(rows: Iterable[dict], path: str,
+               meta: Optional[dict] = None) -> str:
+    """Persist bench rows as a machine-readable artifact.
+
+    The perf trajectory across PRs is diffed from these files (e.g.
+    ``BENCH_sim_scale.json``), so the schema stays flat: a ``meta`` header
+    (timestamp, host) plus the same row dicts the CSV stream carries."""
+    doc = {
+        "meta": {
+            "generated_unix": int(time.time()),
+            "generated": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "host": platform.node(),
+            "python": platform.python_version(),
+            **(meta or {}),
+        },
+        "rows": list(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    # stderr: stdout is a pure CSV stream consumers may redirect
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+    return path

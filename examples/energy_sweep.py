@@ -1,24 +1,22 @@
 """Reproduce Fig. 4a: the V sweep's energy knee (paper: V ~ 4e3) and the
-[O(1/V), O(V)] energy-staleness trade-off.
+[O(1/V), O(V)] energy-staleness trade-off, via the Scenario API.
 
     PYTHONPATH=src python examples/energy_sweep.py
 """
-import sys
+import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
-sys.path.insert(0, "src")
-
-from repro.core import FederatedSim, SimConfig
+from repro.core import Scenario, run_experiment
 
 
 def main():
     base = dict(horizon_s=3600, n_users=25, seed=0)
-    imm = FederatedSim(SimConfig(policy="immediate", **base)).run()
-    off = FederatedSim(SimConfig(policy="offline", **base)).run()
+    imm = run_experiment(Scenario(policy="immediate", **base))
+    off = run_experiment(Scenario(policy="offline", **base))
     print(f"immediate: {imm.energy_j / 1e3:8.1f} kJ (ceiling)")
     print(f"offline:   {off.energy_j / 1e3:8.1f} kJ (oracle floor)\n")
     print("     V    energy(kJ)   meanQ    meanH   saving_vs_immediate")
     for V in (1e2, 3e2, 1e3, 4e3, 1e4, 1e5):
-        r = FederatedSim(SimConfig(policy="online", V=V, **base)).run()
+        r = run_experiment(Scenario(policy="online", V=V, **base))
         print(f"{V:8.0f}  {r.energy_j / 1e3:9.1f}  {r.mean_Q:7.1f}  "
               f"{r.mean_H:7.1f}   {100 * (1 - r.energy_j / imm.energy_j):5.1f}%")
     print("\nexpected: energy falls ~1/V then flattens past the knee, while "

@@ -5,10 +5,9 @@ local epochs of actual JAX training, with accuracy and energy reported.
     PYTHONPATH=src python examples/federated_lenet.py [--policy online]
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
 from repro.core.realml import make_ml_hooks
 from repro.core.simulator import FederatedSim, SimConfig

@@ -9,9 +9,7 @@ substrate the production launcher uses.
     PYTHONPATH=src python examples/federated_lm.py --arch qwen3-0.6b
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
 from repro.configs import get_smoke_config
 from repro.launch.train import IslandConfig, run

@@ -1,16 +1,15 @@
 """Quickstart: the paper's system in one minute.
 
 25 battery-powered clients (Table II device catalog), Bernoulli app
-arrivals, and the four schedulers — energy + staleness side by side.
+arrivals, and the four schedulers — energy + staleness side by side —
+composed through the Scenario API (registry policies; swap in custom
+policies/arrivals/fleets without touching engine code).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
-import numpy as np
-
-from repro.core import FederatedSim, SimConfig
+from repro.core import Scenario, run_experiment
 
 
 def main():
@@ -18,7 +17,7 @@ def main():
     base = dict(horizon_s=3600, n_users=25, seed=0)
     results = {}
     for pol in ("immediate", "sync", "offline", "online"):
-        r = FederatedSim(SimConfig(policy=pol, **base)).run()
+        r = run_experiment(Scenario(policy=pol, **base))
         results[pol] = r
         print(f"{pol:10s}  {r.energy_j / 1e3:9.1f}  {r.updates:7d}  "
               f"{100 * r.corun_fraction:5.1f}  {r.mean_Q:5.1f}  {r.mean_H:5.1f}")

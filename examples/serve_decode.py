@@ -5,10 +5,9 @@ production mesh via launch.dryrun).
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-370m
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
 import numpy as np
 

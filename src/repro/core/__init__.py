@@ -1,26 +1,48 @@
 """The paper's primary contribution: energy-aware scheduling of asynchronous
 federated training (energy model, staleness metrics, offline knapsack,
 online Lyapunov scheduler, async parameter server, slotted-time simulator
-with loop / vectorized / jax engines)."""
-from .energy import (APPS, DEVICE_NAMES, TESTBED, DeviceProfile,
-                     DeviceTables, catalog_tables, device_ids,
+with loop / vectorized / jax engines), behind a composable Scenario API
+(pluggable policies, arrival processes, and device fleets)."""
+from .arrivals import (ArrivalProcess, BernoulliArrivals, DiurnalArrivals,
+                       MarkovModulatedArrivals, TraceArrivals,
+                       register_arrival, registered_arrivals,
+                       resolve_arrival)
+from .energy import (APPS, DEVICE_NAMES, TESTBED, AppProfile, DeviceProfile,
+                     DeviceTables, build_tables, catalog_tables, device_ids,
                      table2_savings)
+from .fleet import (CustomCatalogFleet, Fleet, FleetSpec, PaperFleet,
+                    SyntheticFleet, register_fleet, registered_fleets,
+                    resolve_fleet)
 from .lyapunov import (BatchDecision, OnlineScheduler, UserSlotState,
                        schedule_threshold)
 from .offline import (knapsack_schedule, lemma1_lag_bounds,
                       lemma1_lag_bounds_loop, offline_schedule)
+from .policies import (GreedyThresholdPolicy, ImmediatePolicy, OfflinePolicy,
+                       OnlinePolicy, Policy, SyncPolicy, register_policy,
+                       registered_policies, resolve_policy)
+from .scenario import Scenario, run_experiment
 from .server import AsyncParameterServer, SyncServer
 from .simulator import ENGINES, POLICIES, FederatedSim, SimConfig, SimResult
 from .staleness import (LagTracker, gradient_gap, momentum_scale,
                         predict_weights, tree_l2_norm, true_gap)
 
 __all__ = [
-    "APPS", "DEVICE_NAMES", "TESTBED", "DeviceProfile", "DeviceTables",
-    "catalog_tables", "device_ids", "table2_savings",
+    "APPS", "DEVICE_NAMES", "TESTBED", "AppProfile", "DeviceProfile",
+    "DeviceTables", "build_tables", "catalog_tables", "device_ids",
+    "table2_savings",
+    "ArrivalProcess", "BernoulliArrivals", "DiurnalArrivals",
+    "MarkovModulatedArrivals", "TraceArrivals",
+    "register_arrival", "registered_arrivals", "resolve_arrival",
+    "CustomCatalogFleet", "Fleet", "FleetSpec", "PaperFleet",
+    "SyntheticFleet", "register_fleet", "registered_fleets", "resolve_fleet",
     "BatchDecision", "OnlineScheduler", "UserSlotState",
     "schedule_threshold",
     "knapsack_schedule", "lemma1_lag_bounds", "lemma1_lag_bounds_loop",
     "offline_schedule",
+    "GreedyThresholdPolicy", "ImmediatePolicy", "OfflinePolicy",
+    "OnlinePolicy", "Policy", "SyncPolicy",
+    "register_policy", "registered_policies", "resolve_policy",
+    "Scenario", "run_experiment",
     "AsyncParameterServer", "SyncServer",
     "ENGINES", "POLICIES", "FederatedSim", "SimConfig", "SimResult",
     "LagTracker", "gradient_gap", "momentum_scale", "predict_weights",

@@ -112,10 +112,16 @@ class DeviceTables:
     saving_rate: np.ndarray
 
 
-@functools.lru_cache(maxsize=1)
-def catalog_tables() -> DeviceTables:
-    names = tuple(TESTBED)
-    devs = [TESTBED[n] for n in names]
+def build_tables(devices) -> DeviceTables:
+    """Flatten any device catalog into ``DeviceTables`` (frozen arrays).
+
+    ``devices``: sequence of ``DeviceProfile``; each must carry an
+    ``AppProfile`` for every entry of ``APPS`` (the app axis is shared
+    across fleets). This is what lets custom/synthetic fleets feed the
+    vectorized and jax engines without touching the Table II catalog.
+    """
+    devs = list(devices)
+    names = tuple(d.name for d in devs)
     p_train = np.array([d.p_train for d in devs])
     p_app = np.array([[d.apps[a].p_app for a in APPS] for d in devs])
     p_corun = np.array([[d.apps[a].p_corun for a in APPS] for d in devs])
@@ -131,13 +137,20 @@ def catalog_tables() -> DeviceTables:
         # same operation order as DeviceProfile.energy_saving_rate
         saving_rate=(p_train[:, None] + p_app) - p_corun,
     )
-    # the lru_cache hands out one process-wide instance; freeze the arrays
-    # so an accidental in-place write can't corrupt every later run
+    # tables may be shared across runs (catalog_tables hands out one
+    # process-wide instance); freeze the arrays so an accidental in-place
+    # write can't corrupt every later run
     for f in dataclasses.fields(tables):
         v = getattr(tables, f.name)
         if isinstance(v, np.ndarray):
             v.setflags(write=False)
     return tables
+
+
+@functools.lru_cache(maxsize=1)
+def catalog_tables() -> DeviceTables:
+    """The Table II/III testbed as ``DeviceTables`` (cached singleton)."""
+    return build_tables(TESTBED.values())
 
 
 def device_ids(names: Sequence[str]) -> np.ndarray:

@@ -1,0 +1,513 @@
+"""Pluggable scheduling policies: one registry, three engine hooks.
+
+The paper evaluates four fixed schedulers (Sec. VII.B); this module turns
+them into registered ``Policy`` objects so alternative schedulers — e.g.
+the energy-minimal scheduling families of Pilla '22 or AutoFL-style
+heterogeneity-aware schedulers — plug into the simulator without touching
+any engine file. A policy implements up to three hooks, one per engine:
+
+``decide_loop(sim, t, waiting, state)``
+    Reference semantics on the per-user object loop (the oracle). Required.
+``decide_vectorized(eng, t, state)``
+    Same decisions on the struct-of-arrays numpy engine
+    (``core/vector_engine.py``); set ``supports_vectorized = True``.
+``jax_decide(sv)``
+    Traced decision step inside the ``jax.lax.scan`` backend; set
+    ``supports_jax = True``. Policies without it transparently degrade to
+    the vectorized engine (the way the paper's offline knapsack always has).
+
+Equivalence contract: for a given seed the three hooks must produce the
+same decision sequence — tests/test_sim_engines.py and
+tests/test_scenario.py pin loop/vectorized/jax parity and bit-for-bit
+reproduction of the pre-registry results for the four paper policies.
+
+Strings keep working everywhere: ``SimConfig(policy="online")`` resolves
+through the registry (``resolve_policy``), and string lookups hand out a
+per-name singleton so the jax backend's jit cache is shared across runs.
+New code should pass ``Policy`` instances (see ``core/scenario.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple, Type
+
+import numpy as np
+
+from .energy import APPS
+from .lyapunov import UserSlotState
+from .offline import knapsack_schedule, lemma1_lag_bounds
+from .staleness import gradient_gap
+
+# Shared state encodings of the struct-of-arrays engines (numpy + jax).
+MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
+PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
+
+
+class Policy:
+    """Base scheduling policy. Subclass, set ``name``, implement hooks,
+    and decorate with ``@register_policy`` to make the name resolvable.
+
+    Class attributes describe engine semantics the engines must honor:
+
+    - ``sync_rounds``: lock-step rounds — the global version bumps once per
+      round close (all trainers finished), not per push.
+    - ``uses_online_queue``: the per-slot Lyapunov decision runs on-device,
+      so ``include_scheduler_overhead`` adds Table III's scheduler power
+      while waiting.
+    - ``supports_vectorized`` / ``supports_jax``: which engine hooks exist.
+    """
+
+    name: str = ""
+    sync_rounds: bool = False
+    uses_online_queue: bool = False
+    supports_vectorized: bool = False
+    supports_jax: bool = False
+
+    # ------------------------------------------------------------- loop hook
+    def loop_init(self, sim) -> dict:
+        """Per-run mutable policy state for the loop engine (policies are
+        stateless singletons; runs must not share state)."""
+        return {}
+
+    def decide_loop(self, sim, t: int, waiting: list, state: dict
+                    ) -> Tuple[int, float]:
+        """Schedule waiting users for slot ``t`` via ``sim.begin_training``.
+        Returns (served, gap_sum) feeding Eqs. (15)/(16)."""
+        raise NotImplementedError(
+            f"policy {self.name!r} implements no loop hook")
+
+    # ------------------------------------------------- vectorized (numpy) hook
+    def vec_init(self, eng) -> dict:
+        return {}
+
+    def decide_vectorized(self, eng, t: int, state: dict
+                          ) -> Tuple[int, float]:
+        """Same decisions on the batched engine state ``eng``
+        (see vector_engine._NumpyEngine). Returns (served, gap_sum)."""
+        raise NotImplementedError(
+            f"policy {self.name!r} implements no vectorized hook; "
+            "run it with engine='loop'")
+
+    # ----------------------------------------------------------- jax scan hook
+    def jax_decide(self, sv):
+        """Traced decision inside the lax.scan step. ``sv`` is a mutable
+        slot view (vector_engine builds it): read ``waiting``, ``has_app``,
+        per-user power gathers and queue scalars; write ``idle_gap`` /
+        ``round_open`` if the policy owns them. Returns (start_mask,
+        gap_sum)."""
+        raise NotImplementedError(
+            f"policy {self.name!r} implements no jax hook")
+
+    def jax_cache_key(self):
+        """Hashable token identifying this policy's ``jax_decide``
+        behavior: two policies with equal keys may share one compiled
+        scan. Default is the instance itself (always safe). Policies
+        whose jax hook reads no instance state should return
+        ``type(self)`` so fresh instances — the object-passing style —
+        reuse the jit cache instead of recompiling per run."""
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Type[Policy]] = {}
+_INSTANCES: Dict[str, Policy] = {}       # singletons for string lookups
+
+
+def register_policy(cls: Type[Policy]) -> Type[Policy]:
+    """Class decorator: make ``cls`` resolvable as ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a registry name")
+    _REGISTRY[cls.name] = cls
+    _INSTANCES.pop(cls.name, None)       # re-registration wins
+    return cls
+
+
+def registered_policies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def resolve_policy(policy) -> Policy:
+    """String -> registered singleton; Policy instance -> itself.
+
+    Singletons matter for the jax backend: its jit cache is keyed on the
+    policy object, so every ``SimConfig(policy="online")`` run shares one
+    compiled executable per shape."""
+    if isinstance(policy, Policy):
+        return policy
+    if isinstance(policy, str):
+        if policy not in _REGISTRY:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"expected one of {registered_policies()} "
+                             "or a Policy instance")
+        if policy not in _INSTANCES:
+            _INSTANCES[policy] = _REGISTRY[policy]()
+        return _INSTANCES[policy]
+    raise ValueError(f"policy must be a name or Policy instance, "
+                     f"got {type(policy).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# jnp twins of the shared numpy formulas (np ufuncs don't dispatch on jax
+# tracers on this JAX version). Any change to the originals MUST land here
+# too — the jax-vs-loop parity suite is the tripwire.
+# ---------------------------------------------------------------------------
+def _jax_trace_v_norm(v_norm0, version, jnp):
+    """Mirror of simulator.trace_v_norm."""
+    return v_norm0 / jnp.sqrt(1.0 + 0.05 * version)
+
+
+def _jax_gradient_gap(v_norm, lag, eta, beta):
+    """Mirror of staleness.gradient_gap/momentum_scale (Eq. 4). beta is a
+    traced scalar, so no beta==0 branch: 0**0==1 makes the closed form
+    agree at lag=0."""
+    return eta * (1.0 - beta ** lag) / (1.0 - beta) * v_norm
+
+
+# ---------------------------------------------------------------------------
+# The four paper policies (Sec. VII.B)
+# ---------------------------------------------------------------------------
+@register_policy
+class SyncPolicy(Policy):
+    """FedAvg lock-step: a round starts only when the whole cohort waits."""
+
+    name = "sync"
+    sync_rounds = True
+    supports_vectorized = True
+    supports_jax = True
+
+    def decide_loop(self, sim, t, waiting, state):
+        served = 0
+        if not sim._round_open and len(waiting) == sim.cfg.n_users:
+            for u in waiting:
+                sim.begin_training(u, t, corun=u.app is not None)
+                served += 1
+            sim._round_open = True
+        return served, 0.0
+
+    def decide_vectorized(self, eng, t, state):
+        if not eng.round_open and \
+                int(np.count_nonzero(eng.waiting)) == eng.n:
+            eng.begin_training(eng.ar)
+            eng.round_open = True
+            return eng.n, 0.0
+        return 0, 0.0
+
+    def jax_cache_key(self):
+        return type(self)   # hook reads no instance state
+
+    def jax_decide(self, sv):
+        jnp = sv.jnp
+        open_now = (~sv.round_open) & (jnp.sum(sv.waiting) == sv.n)
+        start = sv.waiting & open_now
+        sv.round_open = sv.round_open | open_now
+        return start, jnp.asarray(0.0, sv.float_dtype)
+
+
+@register_policy
+class ImmediatePolicy(Policy):
+    """ASync baseline: schedule every waiting user ASAP (energy ceiling)."""
+
+    name = "immediate"
+    supports_vectorized = True
+    supports_jax = True
+
+    def decide_loop(self, sim, t, waiting, state):
+        for u in waiting:
+            sim.begin_training(u, t, corun=u.app is not None)
+        return len(waiting), 0.0
+
+    def decide_vectorized(self, eng, t, state):
+        if eng.waiting.any():
+            widx = np.nonzero(eng.waiting)[0]
+            eng.begin_training(widx)
+            return len(widx), 0.0
+        return 0, 0.0
+
+    def jax_cache_key(self):
+        return type(self)   # hook reads no instance state
+
+    def jax_decide(self, sv):
+        return sv.waiting, sv.jnp.asarray(0.0, sv.float_dtype)
+
+
+@register_policy
+class OnlinePolicy(Policy):
+    """Lyapunov drift-plus-penalty controller (Alg. 2, Eqs. 21-23)."""
+
+    name = "online"
+    uses_online_queue = True
+    supports_vectorized = True
+    supports_jax = True
+
+    def decide_loop(self, sim, t, waiting, state):
+        cfg = sim.cfg
+        vn = sim._v_norm()
+        served = 0
+        gap_sum = 0.0
+        for u in waiting:
+            a = u.app is not None
+            ap = u.device.apps[u.app] if a else None
+            st = UserSlotState(
+                p_corun=ap.p_corun if a else 0.0,
+                p_app=ap.p_app if a else 0.0,
+                p_train=u.device.p_train, p_idle=u.device.p_idle,
+                app_running=a,
+                lag_estimate=sim.in_flight,
+                idle_gap=u.idle_gap)
+            d = sim.sched.decide(st, vn)
+            gap_sum += d.gap
+            if d.schedule:
+                sim.begin_training(u, t, corun=a)
+                served += 1
+            else:
+                u.idle_gap += cfg.epsilon
+        return served, gap_sum
+
+    def decide_vectorized(self, eng, t, state):
+        if not eng.waiting.any():
+            return 0, 0.0
+        widx = np.nonzero(eng.waiting)[0]
+        vn = eng.v_norm(eng.version)
+        d = eng.sched.decide_batch(eng.p_if_train[widx], eng.p_if_idle[widx],
+                                   eng.idle_gap[widx], eng.in_flight, vn)
+        if d.n_served:
+            eng.begin_training(widx[d.schedule])
+        if d.n_served != len(widx):
+            eng.idle_gap[widx[~d.schedule]] += eng.cfg.epsilon
+        return d.n_served, d.gap_sum
+
+    def jax_cache_key(self):
+        return type(self)   # hook reads no instance state
+
+    def jax_decide(self, sv):
+        jnp, lax = sv.jnp, sv.lax
+        f, i = sv.float_dtype, sv.int_dtype
+        waiting, has_app = sv.waiting, sv.has_app
+        H = sv.H
+        vn = _jax_trace_v_norm(sv.v_norm0, sv.version, jnp)
+        p_s = jnp.where(has_app, sv.pcor_g, sv.PT)
+        p_i = jnp.where(has_app, sv.papp_g, sv.PI)
+        base = sv.V * p_s * sv.t_d - sv.Q
+        rhs = sv.V * p_i * sv.t_d
+        gap_idle_v = sv.idle_gap + sv.epsilon
+        lag_idx = sv.in_flight + jnp.arange(sv.n + 1)
+        gap_vec = _jax_gradient_gap(vn, lag_idx, sv.eta, sv.beta)
+
+        def fast(_):
+            # H == 0: the gap term adds exactly 0 to both branches
+            sched = waiting & (base <= rhs)
+            before = jnp.cumsum(sched) - sched
+            gaps = jnp.where(sched, gap_vec[before], gap_idle_v)
+            return sched, jnp.sum(jnp.where(waiting, gaps, 0.0))
+
+        def slow(_):
+            # sequential in-slot lag coupling, user-index order
+            def body(c, xs_i):
+                j, gs = c
+                w_i, b_i, r_i, gi_i = xs_i
+                do = w_i & (b_i + H * gap_vec[j] <= r_i + H * gi_i)
+                gap_i = jnp.where(do, gap_vec[j], gi_i)
+                gs = gs + jnp.where(w_i, gap_i, 0.0)
+                return (j + do.astype(i), gs), do
+            (j, gs), sched = lax.scan(
+                body, (jnp.asarray(0, i), jnp.asarray(0.0, f)),
+                (waiting, base, rhs, gap_idle_v))
+            return sched, gs
+
+        start, gap_sum = lax.cond(H > 0.0, slow, fast, None)
+        sv.idle_gap = jnp.where(waiting & ~start,
+                                sv.idle_gap + sv.epsilon, sv.idle_gap)
+        return start, gap_sum
+
+
+@register_policy
+class OfflinePolicy(Policy):
+    """Oracle knapsack with look-ahead window (Alg. 1)."""
+
+    name = "offline"
+    supports_vectorized = True
+    # no jax hook: the knapsack DP cannot live inside lax.scan
+
+    def loop_init(self, sim):
+        return {"next_plan": 0.0}
+
+    def decide_loop(self, sim, t, waiting, state):
+        cfg = sim.cfg
+        if t >= state["next_plan"]:
+            state["next_plan"] = t + cfg.offline_window
+            self._plan_loop(sim, t, waiting)
+        served = 0
+        for u in waiting:
+            if u.plan == "corun":
+                if u.app is not None:
+                    sim.begin_training(u, t, corun=True)
+                    served += 1
+            elif u.plan == "separate":
+                sim.begin_training(u, t, corun=u.app is not None)
+                served += 1
+            # plan == "hold"/"none": idle until the next window
+        return served, 0.0
+
+    def _plan_loop(self, sim, t: int, waiting: List):
+        """Knapsack over the look-ahead window (Alg. 1).
+
+        Users whose app arrival falls inside the window are knapsack
+        candidates: selected -> wait for the arrival and co-run (x_i = 1);
+        rejected -> train immediately, separate execution (x_i = 0). Users
+        without an in-window arrival hold (idle) until the next window —
+        with the paper's relaxed L_b = 1000 this reduces to the "greedy
+        always waiting for co-running opportunities" behaviour of Fig. 4a.
+        """
+        cfg = sim.cfg
+        W = int(cfg.offline_window)
+        cands, t_app, t_now, durs, savings = [], [], [], [], []
+        for u in waiting:
+            # next app arrival within the window (oracle lookahead)
+            i = u._uid
+            horizon = min(t + W, sim.app_sched.shape[0])
+            arr = np.nonzero(sim.app_sched[t:horizon, i])[0]
+            if u.app is not None:
+                ta, app = t, u.app
+            elif len(arr):
+                ta = t + int(arr[0])
+                app = APPS[sim.app_choice[ta, i]]
+            else:
+                u.plan = "hold"
+                continue
+            cands.append(u)
+            t_now.append(t)
+            t_app.append(ta)
+            durs.append(u.device.apps[app].t_corun)
+            savings.append(u.device.energy_saving_rate(app)
+                           * u.device.apps[app].t_corun)
+        if not cands:
+            return
+        lags = lemma1_lag_bounds(np.array(t_now), np.array(t_app),
+                                 np.array(durs))
+        vn = sim._v_norm()
+        gaps = np.array([gradient_gap(vn, int(l), cfg.eta, cfg.beta)
+                         for l in lags])
+        x, _ = knapsack_schedule(np.array(savings), gaps, cfg.L_b,
+                                 resolution=cfg.offline_resolution)
+        for u, chosen in zip(cands, x):
+            u.plan = "corun" if chosen else "separate"
+
+    def vec_init(self, eng):
+        return {"next_plan": 0.0}
+
+    def decide_vectorized(self, eng, t, state):
+        cfg = eng.cfg
+        if t >= state["next_plan"]:
+            state["next_plan"] = t + cfg.offline_window
+            self._plan_vec(eng, t, np.nonzero(eng.waiting)[0])
+        start = eng.waiting & (((eng.plan == PLAN_CORUN) & eng.has_app) |
+                               (eng.plan == PLAN_SEP))
+        if start.any():
+            sidx = np.nonzero(start)[0]
+            eng.begin_training(sidx)
+            return len(sidx), 0.0
+        return 0, 0.0
+
+    def _plan_vec(self, eng, t, widx):
+        """Vectorized Alg. 1 window plan (mirrors ``_plan_loop``).
+
+        Candidates are waiting users with an app running now or an (oracle
+        lookahead) arrival inside the window; the knapsack picks which of
+        them wait to co-run, the rest train immediately. Users without an
+        in-window arrival hold until the next plan."""
+        if not len(widx):
+            return
+        cfg = eng.cfg
+        app, plan = eng.app, eng.plan
+        W = int(cfg.offline_window)
+        horizon = min(t + W, eng.app_sched.shape[0])
+        sub = eng.app_sched[t:horizon][:, widx]          # (window, n_waiting)
+        has_arr = sub.any(axis=0)
+        first = sub.argmax(axis=0)                       # first arrival offset
+        ha = app[widx] >= 0
+        cand = ha | has_arr
+        plan[widx[~cand]] = PLAN_HOLD
+        cidx = widx[cand]
+        if not len(cidx):
+            return
+        ta = np.where(ha[cand], t, t + first[cand])
+        aid = np.where(ha[cand], app[cidx], eng.app_choice[ta, cidx])
+        durs = eng.T_COR[cidx, aid]
+        savings = eng.SRATE[cidx, aid] * durs
+        lags = lemma1_lag_bounds(np.full(len(cidx), t), ta, durs)
+        vn = eng.v_norm(eng.version)
+        gaps = np.asarray(gradient_gap(vn, lags, cfg.eta, cfg.beta),
+                          dtype=float)
+        x, _ = knapsack_schedule(savings, gaps, cfg.L_b,
+                                 resolution=cfg.offline_resolution)
+        plan[cidx] = np.where(x, PLAN_CORUN, PLAN_SEP)
+
+
+# ---------------------------------------------------------------------------
+# A genuinely new registered policy: proof the registry extends beyond the
+# paper's four schedulers.
+# ---------------------------------------------------------------------------
+@register_policy
+class GreedyThresholdPolicy(Policy):
+    """Greedy energy-threshold baseline (not in the paper).
+
+    Schedules a waiting user as soon as the *marginal* power of training is
+    cheap — below ``theta`` watts over what the device would burn anyway:
+    P^{a'} - P^a while an app runs (the co-run discount), P^b - P^d when
+    idle. Users that never see a cheap slot are force-scheduled after
+    ``patience`` waiting slots, so progress is guaranteed without any queue
+    machinery. A natural midpoint between "immediate" (theta = inf) and
+    "wait for co-runs" (theta small, patience large).
+    """
+
+    name = "greedy"
+    supports_vectorized = True
+    # no jax hook on purpose: exercises the documented jax -> vectorized
+    # degradation path for registry policies
+
+    def __init__(self, theta: float = 0.3, patience: int = 240):
+        if patience < 0:
+            raise ValueError(f"patience must be >= 0, got {patience}")
+        self.theta = float(theta)
+        self.patience = int(patience)
+
+    def loop_init(self, sim):
+        return {"waited": {}}
+
+    def decide_loop(self, sim, t, waiting, state):
+        waited = state["waited"]
+        served = 0
+        for u in waiting:
+            a = u.app is not None
+            if a:
+                ap = u.device.apps[u.app]
+                delta = ap.p_corun - ap.p_app
+            else:
+                delta = u.device.p_train - u.device.p_idle
+            w = waited.get(u._uid, 0)
+            if delta <= self.theta or w >= self.patience:
+                sim.begin_training(u, t, corun=a)
+                waited[u._uid] = 0
+                served += 1
+            else:
+                waited[u._uid] = w + 1
+        return served, 0.0
+
+    def vec_init(self, eng):
+        return {"waited": np.zeros(eng.n, dtype=np.int64)}
+
+    def decide_vectorized(self, eng, t, state):
+        w = eng.waiting
+        if not w.any():
+            return 0, 0.0
+        # p_if_train/p_if_idle are exactly (P^{a'}, P^a) with an app and
+        # (P^b, P^d) without — the same operands the loop hook compares
+        delta = eng.p_if_train - eng.p_if_idle
+        waited = state["waited"]
+        go = w & ((delta <= self.theta) | (waited >= self.patience))
+        if go.any():
+            eng.begin_training(np.nonzero(go)[0])
+        waited[go] = 0
+        waited[w & ~go] += 1
+        return int(np.count_nonzero(go)), 0.0

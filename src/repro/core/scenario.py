@@ -1,0 +1,101 @@
+"""Composable experiment scenarios: policy x arrivals x fleet x config.
+
+The experiment-facing entrypoint over the simulator. A ``Scenario`` names
+one composition of the three pluggable axes (core/policies.py,
+core/arrivals.py, core/fleet.py) plus the ``SimConfig`` knobs, and
+``run_experiment`` executes it on whatever engine ``SimConfig.engine``
+resolves to::
+
+    from repro.core import Scenario, run_experiment
+
+    # the paper's evaluation, verbatim (defaults = Sec. VII.B setup)
+    r = run_experiment(Scenario(policy="online", n_users=25,
+                                horizon_s=10800))
+
+    # a non-paper composition: bursty arrivals on a 64-type synthetic
+    # fleet under the greedy energy-threshold baseline
+    from repro.core import MarkovModulatedArrivals, SyntheticFleet
+    r = run_experiment(Scenario(policy="greedy",
+                                arrivals=MarkovModulatedArrivals(),
+                                fleet=SyntheticFleet(n_types=64),
+                                n_users=400, horizon_s=3600))
+
+Strings resolve through the registries; objects pass through as-is.
+``run_experiment(policy="online", n_users=25)`` builds the Scenario
+inline for one-liners.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from .arrivals import ArrivalProcess, resolve_arrival_or_default
+from .fleet import Fleet, resolve_fleet
+from .policies import Policy, resolve_policy
+from .simulator import FederatedSim, SimConfig, SimResult
+
+
+class Scenario:
+    """One composed experiment: resolved policy/arrivals/fleet + SimConfig.
+
+    ``policy`` is a registry name or ``Policy`` instance; ``arrivals`` /
+    ``fleet`` likewise (``None`` keeps the paper defaults: Bernoulli at
+    ``app_arrival_p`` on the Table II round-robin fleet). Remaining keyword
+    arguments are ``SimConfig`` fields; alternatively pass a prebuilt
+    ``config=`` (its ``policy`` field is overridden by ``policy=`` only if
+    one is given explicitly).
+    """
+
+    def __init__(self, policy: Union[str, Policy, None] = None,
+                 arrivals: Union[str, ArrivalProcess, None] = None,
+                 fleet: Union[str, Fleet, None] = None,
+                 name: Optional[str] = None,
+                 config: Optional[SimConfig] = None,
+                 **sim_kwargs):
+        if config is not None:
+            if sim_kwargs:
+                raise ValueError(
+                    f"pass either config= or SimConfig kwargs, not both "
+                    f"(got {sorted(sim_kwargs)})")
+            if policy is not None and policy is not config.policy:
+                config = dataclasses.replace(config, policy=policy)
+            self.config = config
+        else:
+            self.config = SimConfig(
+                policy="online" if policy is None else policy, **sim_kwargs)
+        self.policy = resolve_policy(self.config.policy)
+        # one resolution rule shared with FederatedSim: None/"bernoulli"
+        # mean the paper process at the configured app_arrival_p
+        self.arrivals = resolve_arrival_or_default(
+            arrivals, self.config.app_arrival_p)
+        self.fleet = None if fleet is None else resolve_fleet(fleet)
+        self.name = name if name is not None else self.policy.name
+
+    def build(self, ml_hooks: Optional[dict] = None) -> FederatedSim:
+        """Construct the (seeded) simulator without running it."""
+        return FederatedSim(self.config, ml_hooks=ml_hooks,
+                            arrivals=self.arrivals, fleet=self.fleet)
+
+    def run(self, ml_hooks: Optional[dict] = None) -> SimResult:
+        return self.build(ml_hooks=ml_hooks).run()
+
+    def __repr__(self):
+        arr = self.arrivals.name
+        flt = self.fleet.name if self.fleet is not None else "paper"
+        return (f"Scenario({self.name!r}: policy={self.policy.name!r}, "
+                f"arrivals={arr!r}, fleet={flt!r}, "
+                f"n_users={self.config.n_users}, "
+                f"horizon_s={self.config.horizon_s}, "
+                f"engine={self.config.engine!r})")
+
+
+def run_experiment(scenario: Optional[Scenario] = None, *,
+                   ml_hooks: Optional[dict] = None, **kwargs) -> SimResult:
+    """Run a ``Scenario`` (or build one inline from kwargs) end to end."""
+    if scenario is None:
+        scenario = Scenario(**kwargs)
+    elif kwargs:
+        raise TypeError(
+            f"pass either a Scenario or Scenario kwargs, not both "
+            f"(got {sorted(kwargs)})")
+    return scenario.run(ml_hooks=ml_hooks)

@@ -6,6 +6,13 @@ policies — "sync" (FedAvg lock-step), "immediate" (ASync, schedule ASAP),
 "offline" (knapsack with look-ahead window), "online" (Lyapunov) — with
 per-slot energy accounting per Eq. (10) and queue dynamics per Eqs. (15-16).
 
+Policies, arrival processes, and device fleets are composable objects with
+registries (core/policies.py, core/arrivals.py, core/fleet.py); the paper's
+setup is just the default composition. ``SimConfig.policy`` accepts either
+a registry name or a ``Policy`` instance; ``FederatedSim`` additionally
+takes ``arrivals=``/``fleet=`` objects. See core/scenario.py for the
+experiment-facing ``Scenario``/``run_experiment`` entrypoint.
+
 ml_mode="trace" tracks updates/staleness without real gradients (fast —
 Fig. 4/6 energy results); ml_mode="real" couples the schedule to actual JAX
 training of the paper's LeNet-5 (Fig. 5 convergence results).
@@ -20,16 +27,20 @@ pinned by tests/test_sim_engines.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from .energy import APPS, DEVICE_NAMES, TESTBED, DeviceProfile
-from .lyapunov import OnlineScheduler, UserSlotState
-from .offline import knapsack_schedule, lemma1_lag_bounds
+from .arrivals import ArrivalProcess, resolve_arrival_or_default
+from .energy import APPS, DeviceProfile
+from .fleet import Fleet, resolve_fleet
+from .lyapunov import OnlineScheduler
+from .policies import Policy, resolve_policy
 from .staleness import gradient_gap
 
 
+# The paper's four schedulers (Sec. VII.B). The full registry — these plus
+# any registered extras — is policies.registered_policies().
 POLICIES = ("sync", "immediate", "offline", "online")
 ENGINES = ("auto", "loop", "vectorized", "jax")
 
@@ -40,7 +51,7 @@ class SimConfig:
     horizon_s: int = 10800          # paper: 3 hours
     t_d: float = 1.0                # slot length (s)
     app_arrival_p: float = 0.001    # paper: ~1 app per 1000 s
-    policy: str = "online"          # sync | immediate | offline | online
+    policy: Union[str, Policy] = "online"   # registry name or Policy object
     V: float = 4000.0
     L_b: float = 1000.0
     epsilon: float = 0.05
@@ -60,9 +71,7 @@ class SimConfig:
     def __post_init__(self):
         # Fail at construction, not mid-run (a bad policy string used to
         # surface only once the first slot hit the decision branch).
-        if self.policy not in POLICIES:
-            raise ValueError(f"unknown policy {self.policy!r}; "
-                             f"expected one of {POLICIES}")
+        resolve_policy(self.policy)     # raises ValueError on unknown names
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; "
                              f"expected one of {ENGINES}")
@@ -143,17 +152,26 @@ def trace_v_norm(v_norm0: float, version) -> float:
 
 
 class FederatedSim:
-    def __init__(self, cfg: SimConfig, ml_hooks: Optional[dict] = None):
+    def __init__(self, cfg: SimConfig, ml_hooks: Optional[dict] = None, *,
+                 arrivals: Union[str, ArrivalProcess, None] = None,
+                 fleet: Union[str, Fleet, None] = None):
         """ml_hooks (real mode): {"pull": fn()->params_version, "push":
         fn(uid, params)->PushResult, "local_train": fn(uid, params)->params,
         "evaluate": fn()->acc, "sync_submit", "sync_aggregate", "v_norm": fn()->float}
+
+        ``arrivals``/``fleet`` plug in non-paper arrival processes and
+        device fleets (core/arrivals.py, core/fleet.py); the defaults —
+        Bernoulli(cfg.app_arrival_p) on the Table II round-robin fleet —
+        consume the seeded rng stream draw-for-draw like the historical
+        hard-coded setup, so existing seeded runs reproduce bit-for-bit.
         """
         self.cfg = cfg
+        self.policy = resolve_policy(cfg.policy)
         self.rng = np.random.default_rng(cfg.seed)
         self.ml = ml_hooks or {}
-        names = [DEVICE_NAMES[i % len(DEVICE_NAMES)] for i in range(cfg.n_users)]
-        self.rng.shuffle(names)
-        self.users = [UserState(device=TESTBED[n]) for n in names]
+        self.fleet = resolve_fleet(fleet if fleet is not None else "paper")
+        self.fleet_spec = self.fleet.build(self.rng, cfg.n_users)
+        self.users = [UserState(device=d) for d in self.fleet_spec.devices]
         self.sched = OnlineScheduler(cfg.V, cfg.L_b, cfg.eta, cfg.beta,
                                      cfg.epsilon, cfg.t_d)
         self.version = 0
@@ -162,9 +180,26 @@ class FederatedSim:
         # lookahead), one row per SLOT — t_d < 1 means more slots than
         # seconds. (For t_d == 1 this matches the historical horizon_s
         # sizing draw-for-draw, keeping seeded runs reproducible.)
+        self.arrivals: ArrivalProcess = resolve_arrival_or_default(
+            arrivals, cfg.app_arrival_p)
         T = n_slots(cfg)
-        self.app_sched = self.rng.random((T, cfg.n_users)) < cfg.app_arrival_p
-        self.app_choice = self.rng.integers(0, len(APPS), (T, cfg.n_users))
+        self.app_sched, self.app_choice = self.arrivals.sample(
+            self.rng, T, cfg.n_users, len(APPS), cfg.t_d)
+        self.app_sched = np.asarray(self.app_sched, dtype=bool)
+        self.app_choice = np.asarray(self.app_choice, dtype=np.int64)
+        if self.app_sched.shape != (T, cfg.n_users) or \
+                self.app_choice.shape != (T, cfg.n_users):
+            raise ValueError(
+                f"arrival process {self.arrivals.name!r} produced shapes "
+                f"{self.app_sched.shape}/{self.app_choice.shape}; "
+                f"expected {(T, cfg.n_users)}")
+        if T and (self.app_choice.min() < 0 or
+                  self.app_choice.max() >= len(APPS)):
+            # out-of-range choices would index catalog tables from the
+            # end (numpy) or clamp (jax gather) — silently wrong energy
+            raise ValueError(
+                f"arrival process {self.arrivals.name!r} produced app "
+                f"choices outside [0, {len(APPS)})")
 
     # ------------------------------------------------------------------ utils
     def _v_norm(self) -> float:
@@ -172,7 +207,10 @@ class FederatedSim:
             return self.ml["v_norm"]()
         return trace_v_norm(self.cfg.v_norm0, self.version)
 
-    def _begin_training(self, u: UserState, t: int, corun: bool):
+    def begin_training(self, u: UserState, t: int, corun: bool):
+        """Start user ``u`` training this slot (public: the loop-engine
+        twin of _NumpyEngine.begin_training, called from Policy.decide_loop
+        hooks)."""
         u.mode = "training"
         u.corun = corun and u.app is not None
         u.train_remaining = u.device.duration(u.corun, u.app)
@@ -185,7 +223,7 @@ class FederatedSim:
     def _finish_training(self, u: UserState, t: int, log: list):
         lag = self.version - u.pulled_at
         gap = gradient_gap(self._v_norm(), lag, self.cfg.eta, self.cfg.beta)
-        if self.cfg.policy == "sync":
+        if self.policy.sync_rounds:
             if self.ml.get("sync_submit"):
                 trained = self.ml["local_train"](u._uid, u._params)
                 self.ml["sync_submit"](trained)
@@ -207,23 +245,35 @@ class FederatedSim:
     def resolve_engine(self) -> str:
         """Pick the engine to run: ``auto`` selects the vectorized SoA
         engine whenever the run is pure trace mode (real-ML hooks other than
-        the slot-constant ``v_norm`` need the per-user object loop). The jax
-        backend covers hook-free trace runs of sync/immediate/online only —
-        with an offline policy (knapsack DP cannot live inside lax.scan) or
-        a ``v_norm`` hook (a Python callback cannot run under the scan) it
-        degrades to the numpy engine, which honors both."""
+        the slot-constant ``v_norm`` need the per-user object loop) and the
+        policy implements the vectorized hook. The jax backend covers
+        hook-free trace runs of jax-capable policies only — with a policy
+        lacking the jax hook (e.g. offline: knapsack DP cannot live inside
+        lax.scan) or a ``v_norm`` hook (a Python callback cannot run under
+        the scan) it degrades to the numpy engine, which honors both."""
         cfg = self.cfg
+        pol = self.policy
         vec_ok = cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}
         engine = cfg.engine
         if engine == "auto":
-            return "vectorized" if vec_ok else "loop"
+            return "vectorized" if (vec_ok and pol.supports_vectorized) \
+                else "loop"
         if engine in ("vectorized", "jax") and not vec_ok:
             raise ValueError(
-                f"engine={engine!r} supports only trace-mode runs without "
-                "per-user ML hooks; use engine='loop' (or 'auto') for "
-                "ml_mode='real'")
-        if engine == "jax" and (cfg.policy == "offline" or self.ml):
-            return "vectorized"
+                f"engine={engine!r} supports only trace-mode runs "
+                "without per-user ML hooks; use engine='loop' (or "
+                "'auto') for ml_mode='real'")
+        if engine == "vectorized" and not pol.supports_vectorized:
+            raise ValueError(
+                f"policy {pol.name!r} implements no vectorized hook; "
+                "use engine='loop' (or 'auto')")
+        if engine == "jax":
+            if pol.supports_jax and not self.ml:
+                return "jax"
+            # degrade in capability order: numpy SoA if the policy has the
+            # hook (offline, greedy, or any policy under a v_norm
+            # callback), else the loop oracle, which runs everything
+            return "vectorized" if pol.supports_vectorized else "loop"
         return engine
 
     def run(self) -> SimResult:
@@ -235,6 +285,7 @@ class FederatedSim:
 
     def _run_loop(self) -> SimResult:
         cfg = self.cfg
+        policy = self.policy
         for i, u in enumerate(self.users):
             u._uid = i
             u._params = None
@@ -244,12 +295,13 @@ class FederatedSim:
         accuracy: List[tuple] = []
         sum_Q = sum_H = 0.0
         corun_updates = 0
-        sync_round_open = False
-        next_offline_plan = 0.0
+        # engine-owned because version bookkeeping is engine-owned; sync-
+        # style policies open rounds (decide_loop), the engine closes them
+        self._round_open = False
+        pstate = policy.loop_init(self)
 
         for t in range(T):
-            arrivals = served = 0
-            gap_sum = 0.0
+            arrivals = 0
 
             # --- app arrivals / progression -------------------------------
             for i, u in enumerate(self.users):
@@ -272,51 +324,7 @@ class FederatedSim:
 
             # --- policy decisions for waiting users -------------------------
             waiting = [u for u in self.users if u.mode == "waiting"]
-            if cfg.policy == "sync":
-                # lock-step rounds: start everyone when the whole cohort waits
-                if not sync_round_open and len(waiting) == cfg.n_users:
-                    for u in waiting:
-                        self._begin_training(u, t, corun=u.app is not None)
-                        served += 1
-                    sync_round_open = True
-            elif cfg.policy == "immediate":
-                for u in waiting:
-                    self._begin_training(u, t, corun=u.app is not None)
-                    served += 1
-            elif cfg.policy == "online":
-                vn = self._v_norm()
-                for u in waiting:
-                    a = u.app is not None
-                    ap = u.device.apps[u.app] if a else None
-                    st = UserSlotState(
-                        p_corun=ap.p_corun if a else 0.0,
-                        p_app=ap.p_app if a else 0.0,
-                        p_train=u.device.p_train, p_idle=u.device.p_idle,
-                        app_running=a,
-                        lag_estimate=self.in_flight,
-                        idle_gap=u.idle_gap)
-                    d = self.sched.decide(st, vn)
-                    gap_sum += d.gap
-                    if d.schedule:
-                        self._begin_training(u, t, corun=a)
-                        served += 1
-                    else:
-                        u.idle_gap += cfg.epsilon
-            elif cfg.policy == "offline":
-                if t >= next_offline_plan:
-                    next_offline_plan = t + cfg.offline_window
-                    self._plan_offline(t, waiting)
-                for u in waiting:
-                    if u.plan == "corun":
-                        if u.app is not None:
-                            self._begin_training(u, t, corun=True)
-                            served += 1
-                    elif u.plan == "separate":
-                        self._begin_training(u, t, corun=u.app is not None)
-                        served += 1
-                    # plan == "hold"/"none": idle until the next window
-            else:
-                raise ValueError(cfg.policy)
+            served, gap_sum = policy.decide_loop(self, t, waiting, pstate)
 
             # --- training progression ---------------------------------------
             for u in self.users:
@@ -326,9 +334,9 @@ class FederatedSim:
                         self._finish_training(u, t, push_log)
                         if u.corun:
                             corun_updates += 1
-            if cfg.policy == "sync" and sync_round_open and \
+            if policy.sync_rounds and self._round_open and \
                     all(u.mode != "training" for u in self.users):
-                sync_round_open = False
+                self._round_open = False
                 self.version += 1
                 if self.ml.get("sync_aggregate"):
                     self.ml["sync_aggregate"]()
@@ -337,7 +345,7 @@ class FederatedSim:
             for u in self.users:
                 p = u.device.power(u.mode == "training", u.app is not None, u.app)
                 if cfg.include_scheduler_overhead and u.mode == "waiting" \
-                        and cfg.policy == "online":
+                        and policy.uses_online_queue:
                     p += u.device.p_sched - u.device.p_idle
                 u.energy_j += p * cfg.t_d
 
@@ -367,45 +375,3 @@ class FederatedSim:
             mean_Q=sum_Q / T if T else 0.0,
             mean_H=sum_H / T if T else 0.0,
             corun_fraction=corun_updates / max(updates, 1))
-
-    # ------------------------------------------------------------- offline plan
-    def _plan_offline(self, t: int, waiting: List[UserState]):
-        """Knapsack over the look-ahead window (Alg. 1).
-
-        Users whose app arrival falls inside the window are knapsack
-        candidates: selected -> wait for the arrival and co-run (x_i = 1);
-        rejected -> train immediately, separate execution (x_i = 0). Users
-        without an in-window arrival hold (idle) until the next window —
-        with the paper's relaxed L_b = 1000 this reduces to the "greedy
-        always waiting for co-running opportunities" behaviour of Fig. 4a.
-        """
-        cfg = self.cfg
-        W = int(cfg.offline_window)
-        cands, t_app, t_now, durs, savings = [], [], [], [], []
-        for u in waiting:
-            # next app arrival within the window (oracle lookahead)
-            i = u._uid
-            horizon = min(t + W, self.app_sched.shape[0])
-            arr = np.nonzero(self.app_sched[t:horizon, i])[0]
-            if u.app is not None:
-                ta, app = t, u.app
-            elif len(arr):
-                ta = t + int(arr[0])
-                app = APPS[self.app_choice[ta, i]]
-            else:
-                u.plan = "hold"
-                continue
-            cands.append(u)
-            t_now.append(t)
-            t_app.append(ta)
-            durs.append(u.device.apps[app].t_corun)
-            savings.append(u.device.energy_saving_rate(app) * u.device.apps[app].t_corun)
-        if not cands:
-            return
-        lags = lemma1_lag_bounds(np.array(t_now), np.array(t_app), np.array(durs))
-        vn = self._v_norm()
-        gaps = np.array([gradient_gap(vn, int(l), cfg.eta, cfg.beta) for l in lags])
-        x, _ = knapsack_schedule(np.array(savings), gaps, cfg.L_b,
-                                 resolution=cfg.offline_resolution)
-        for u, chosen in zip(cands, x):
-            u.plan = "corun" if chosen else "separate"

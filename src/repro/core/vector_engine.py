@@ -3,11 +3,16 @@
 Replaces ``FederatedSim``'s per-slot, per-user Python object loop with
 batched per-user state arrays — mode, cooldown, app id, app/train remaining,
 pulled-at version, energy, idle gap all live in ``(n_users,)`` NumPy arrays,
-and the Table II catalog is flattened into ``(n_devices, n_apps)`` lookup
-tables (``energy.catalog_tables``) gathered per user once at startup. Every
+and the fleet's catalog is flattened into ``(n_devices, n_apps)`` lookup
+tables (``FleetSpec.tables``) gathered per user once at startup. Every
 phase of a slot — app arrivals, cooldown transitions, policy decisions,
 training progression, Eq. (10) energy accounting, Eq. (15)/(16) queue
 updates — is a handful of vector ops instead of an O(n) Python loop.
+
+Policy dispatch is pluggable (core/policies.py): the engine exposes its
+batched state as ``_NumpyEngine`` attributes and calls the policy's
+``decide_vectorized`` hook once per slot; registered paper policies and
+any custom policy with the hook run here unmodified.
 
 Equivalence contract: seeded runs reproduce the reference loop engine
 (``FederatedSim._run_loop``) — identical decision sequences, update counts,
@@ -19,41 +24,43 @@ decide_batch`` collapses it to one elementwise comparison when H == 0 (the
 gap term then cannot affect the argmin) and replays it exactly otherwise.
 
 ``backend="jax"`` additionally compiles the whole trace-mode horizon into a
-single ``jax.lax.scan`` over slots (jit-compiled once per config shape,
-scalar knobs like V/L_b passed as traced operands so policy sweeps reuse
-the executable). The jax backend covers sync/immediate/online; offline's
-knapsack DP stays on the numpy path. It returns an empty push log (per-push
-dicts cannot stream out of a scan); enable jax x64 for f64 parity with the
-numpy engines.
+single ``jax.lax.scan`` over slots (jit-compiled once per (shape, policy
+object), scalar knobs like V/L_b passed as traced operands so policy sweeps
+reuse the executable). The jax backend covers policies implementing the
+``jax_decide`` hook; others (e.g. offline's knapsack DP) stay on the numpy
+path. It returns an empty push log (per-push dicts cannot stream out of a
+scan); enable jax x64 for f64 parity with the numpy engines.
 """
 from __future__ import annotations
 
-import functools
 import warnings
+from types import SimpleNamespace
 from typing import List, Tuple
 
 import numpy as np
 
-from .energy import catalog_tables, device_ids
-from .offline import knapsack_schedule, lemma1_lag_bounds
+from .policies import (MODE_COOL, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
+                       PLAN_HOLD, PLAN_SEP)
 from .simulator import SimResult, n_slots, trace_v_norm
 from .staleness import gradient_gap
 
-MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
-PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
+__all__ = ["run_vectorized", "MODE_WAIT", "MODE_TRAIN", "MODE_COOL",
+           "PLAN_HOLD", "PLAN_CORUN", "PLAN_SEP"]
 
 
 def run_vectorized(sim, backend: str = "vectorized") -> SimResult:
     """Run ``sim`` (a constructed FederatedSim) on a batched engine."""
     if backend == "jax":
         return _run_jax(sim)
-    return _run_numpy(sim)
+    return _NumpyEngine(sim).run()
 
 
 def _user_tables(sim):
-    """Gather the catalog rows for each user's device, once per run."""
-    tab = catalog_tables()
-    dev = device_ids([u.device.name for u in sim.users])
+    """Gather the fleet's catalog rows for each user's device, once per
+    run. Any fleet works — the tables come from ``sim.fleet_spec``, not
+    the frozen Table II catalog."""
+    tab = sim.fleet_spec.tables
+    dev = sim.fleet_spec.device_ids
     return (tab.p_train[dev], tab.t_train[dev], tab.p_idle[dev],
             tab.p_sched[dev], tab.p_app[dev], tab.p_corun[dev],
             tab.t_corun[dev], tab.saving_rate[dev])
@@ -62,270 +69,235 @@ def _user_tables(sim):
 # ======================================================================
 # NumPy backend
 # ======================================================================
-def _run_numpy(sim) -> SimResult:
-    cfg = sim.cfg
-    n = cfg.n_users
-    T = n_slots(cfg)
-    t_d = cfg.t_d
-    policy = cfg.policy
-    PT, TT, PI, PS, P_APP, P_COR, T_COR, SRATE = _user_tables(sim)
-    OVERHEAD = PS - PI
-    app_sched, app_choice = sim.app_sched, sim.app_choice
-    sched = sim.sched                      # queue state (Q, H) + decide_batch
-    v_hook = sim.ml.get("v_norm")
-    ar = np.arange(n)
+class _NumpyEngine:
+    """Per-run batched state + the slot loop. Policies read/mutate the
+    public attributes from their ``decide_vectorized`` hook:
 
-    # ---- per-user state, struct-of-arrays -----------------------------
-    mode = np.full(n, MODE_COOL, dtype=np.int8)
-    cooldown = np.zeros(n, dtype=np.int64)
-    app = np.full(n, -1, dtype=np.int64)
-    app_rem = np.zeros(n)
-    train_rem = np.zeros(n)
-    corun = np.zeros(n, dtype=bool)
-    idle_gap = np.zeros(n)
-    pulled_at = np.zeros(n, dtype=np.int64)
-    energy = np.zeros(n)
-    updates = np.zeros(n, dtype=np.int64)
-    plan = np.full(n, PLAN_HOLD, dtype=np.int8)
-    # App-dependent lookups, maintained incrementally on the (rare) app
-    # arrival/expiry events instead of re-gathered every slot:
-    #   p_if_train  = Eq. 10 power if training (P^{a'} with app, else P^b)
-    #   p_if_idle   = Eq. 10 power if not     (P^a with app, else P^d)
-    #   t_if_corun  = co-run training duration for the current app
-    p_if_train = PT.copy()
-    p_if_idle = PI.copy()
-    t_if_corun = np.zeros(n)
+    - ``waiting`` / ``has_app``: this slot's masks (set before dispatch)
+    - ``p_if_train`` / ``p_if_idle``: Eq. (10) powers of the train/idle
+      branch per user (co-run aware, maintained incrementally)
+    - ``idle_gap``, ``plan``, ``app``, ``T_COR``, ``SRATE``, ``app_sched``,
+      ``app_choice``: policy-specific state and lookahead tables
+    - ``in_flight``, ``version``, ``round_open``: server-side counters
+    - ``begin_training(idx)``: schedule users ``idx`` this slot
+    - ``v_norm(ver)``: momentum-norm model (honors the ``v_norm`` hook)
+    - ``sched``: the OnlineScheduler queue state (Q, H) + decide_batch
+    """
 
-    version = 0
-    in_flight = 0
-    sync_round_open = False
-    next_offline_plan = 0.0
-    sum_Q = sum_H = 0.0
-    corun_updates = 0
-    trace_t: List[int] = []
-    trace_E: List[float] = []
-    trace_Q: List[float] = []
-    trace_H: List[float] = []
-    # push log collected as per-slot array chunks, expanded to dicts at the end
-    push_chunks: List[Tuple] = []
+    def __init__(self, sim):
+        cfg = sim.cfg
+        self.cfg = cfg
+        self.n = cfg.n_users
+        self.T = n_slots(cfg)
+        (self.PT, self.TT, self.PI, self.PS, self.P_APP, self.P_COR,
+         self.T_COR, self.SRATE) = _user_tables(sim)
+        self.OVERHEAD = self.PS - self.PI
+        self.app_sched, self.app_choice = sim.app_sched, sim.app_choice
+        self.sched = sim.sched             # queue state (Q, H) + decide_batch
+        self.policy = sim.policy
+        self._v_hook = sim.ml.get("v_norm")
+        self.ar = np.arange(self.n)
 
-    def v_norm(ver):
+        # ---- per-user state, struct-of-arrays -------------------------
+        n = self.n
+        self.mode = np.full(n, MODE_COOL, dtype=np.int8)
+        self.cooldown = np.zeros(n, dtype=np.int64)
+        self.app = np.full(n, -1, dtype=np.int64)
+        self.app_rem = np.zeros(n)
+        self.train_rem = np.zeros(n)
+        self.corun = np.zeros(n, dtype=bool)
+        self.idle_gap = np.zeros(n)
+        self.pulled_at = np.zeros(n, dtype=np.int64)
+        self.energy = np.zeros(n)
+        self.updates = np.zeros(n, dtype=np.int64)
+        self.plan = np.full(n, PLAN_HOLD, dtype=np.int8)
+        # App-dependent lookups, maintained incrementally on the (rare) app
+        # arrival/expiry events instead of re-gathered every slot:
+        #   p_if_train  = Eq. 10 power if training (P^{a'} with app, else P^b)
+        #   p_if_idle   = Eq. 10 power if not     (P^a with app, else P^d)
+        #   t_if_corun  = co-run training duration for the current app
+        self.p_if_train = self.PT.copy()
+        self.p_if_idle = self.PI.copy()
+        self.t_if_corun = np.zeros(n)
+
+        self.version = 0
+        self.in_flight = 0
+        self.round_open = False
+        self.waiting = np.zeros(n, dtype=bool)
+        self.has_app = np.zeros(n, dtype=bool)
+
+    def v_norm(self, ver):
         """ver may be a scalar or an array of per-finisher versions; the
         v_norm hook (slot-constant by contract) broadcasts."""
-        if v_hook is not None:
-            return v_hook()
-        return trace_v_norm(cfg.v_norm0, ver)
+        if self._v_hook is not None:
+            return self._v_hook()
+        return trace_v_norm(self.cfg.v_norm0, ver)
 
-    def begin_training(idx):
+    def begin_training(self, idx):
         """idx: user indices starting training this slot (corun iff app)."""
-        nonlocal in_flight
-        ha = app[idx] >= 0
-        corun[idx] = ha
-        train_rem[idx] = np.where(ha, t_if_corun[idx], TT[idx])
-        mode[idx] = MODE_TRAIN
-        pulled_at[idx] = version
-        in_flight += len(idx)
+        ha = self.app[idx] >= 0
+        self.corun[idx] = ha
+        self.train_rem[idx] = np.where(ha, self.t_if_corun[idx],
+                                       self.TT[idx])
+        self.mode[idx] = MODE_TRAIN
+        self.pulled_at[idx] = self.version
+        self.in_flight += len(idx)
 
-    for t in range(T):
-        # --- app arrivals / progression -------------------------------
-        srow = app_sched[t]
-        has_app = app >= 0
-        new_app = srow & ~has_app
-        if has_app.any():
-            app_rem[has_app] -= t_d
-            ended = has_app & (app_rem <= 0.0)
-            if ended.any():
-                app[ended] = -1
-                app_rem[ended] = 0.0
-                p_if_train[ended] = PT[ended]
-                p_if_idle[ended] = PI[ended]
-        if new_app.any():
-            nidx = np.nonzero(new_app)[0]
-            aid = app_choice[t, nidx]
-            app[nidx] = aid
-            app_rem[nidx] = T_COR[nidx, aid]
-            p_if_train[nidx] = P_COR[nidx, aid]
-            p_if_idle[nidx] = P_APP[nidx, aid]
-            t_if_corun[nidx] = T_COR[nidx, aid]
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        policy = self.policy
+        t_d = cfg.t_d
+        n, T = self.n, self.T
+        sched = self.sched
+        app_sched, app_choice = self.app_sched, self.app_choice
+        mode, app, app_rem = self.mode, self.app, self.app_rem
+        pstate = policy.vec_init(self)
 
-        # --- cooldown -> waiting (queue arrival) -----------------------
-        arrivals = 0
-        cooling = mode == MODE_COOL
-        if cooling.any():
-            cooldown[cooling] -= 1
-            to_wait = cooling & (cooldown <= 0)
-            arrivals = int(np.count_nonzero(to_wait))
-            if arrivals:
-                mode[to_wait] = MODE_WAIT
-                plan[to_wait] = PLAN_HOLD
-        waiting = mode == MODE_WAIT
-        has_app = app >= 0
-        served = 0
-        gap_sum = 0.0
+        sum_Q = sum_H = 0.0
+        corun_updates = 0
+        trace_t: List[int] = []
+        trace_E: List[float] = []
+        trace_Q: List[float] = []
+        trace_H: List[float] = []
+        # push log collected as per-slot array chunks, expanded at the end
+        push_chunks: List[Tuple] = []
 
-        # --- policy decisions for waiting users ------------------------
-        if policy == "sync":
-            if not sync_round_open and \
-                    int(np.count_nonzero(waiting)) == n:
-                begin_training(ar)
-                served = n
-                sync_round_open = True
-        elif policy == "immediate":
-            if waiting.any():
-                widx = np.nonzero(waiting)[0]
-                begin_training(widx)
-                served = len(widx)
-        elif policy == "online":
-            if waiting.any():
-                widx = np.nonzero(waiting)[0]
-                vn = v_norm(version)
-                d = sched.decide_batch(p_if_train[widx], p_if_idle[widx],
-                                       idle_gap[widx], in_flight, vn)
-                if d.n_served:
-                    begin_training(widx[d.schedule])
-                if d.n_served != len(widx):
-                    idle_gap[widx[~d.schedule]] += cfg.epsilon
-                served = d.n_served
-                gap_sum = d.gap_sum
-        else:  # offline
-            if t >= next_offline_plan:
-                next_offline_plan = t + cfg.offline_window
-                _plan_offline_vec(cfg, t, np.nonzero(waiting)[0], app,
-                                  app_sched, app_choice, T_COR, SRATE,
-                                  plan, v_norm(version))
-            start = waiting & (((plan == PLAN_CORUN) & has_app) |
-                               (plan == PLAN_SEP))
-            if start.any():
-                sidx = np.nonzero(start)[0]
-                begin_training(sidx)
-                served = len(sidx)
+        for t in range(T):
+            # --- app arrivals / progression -------------------------------
+            srow = app_sched[t]
+            has_app = app >= 0
+            new_app = srow & ~has_app
+            if has_app.any():
+                app_rem[has_app] -= t_d
+                ended = has_app & (app_rem <= 0.0)
+                if ended.any():
+                    app[ended] = -1
+                    app_rem[ended] = 0.0
+                    self.p_if_train[ended] = self.PT[ended]
+                    self.p_if_idle[ended] = self.PI[ended]
+            if new_app.any():
+                nidx = np.nonzero(new_app)[0]
+                aid = app_choice[t, nidx]
+                app[nidx] = aid
+                app_rem[nidx] = self.T_COR[nidx, aid]
+                self.p_if_train[nidx] = self.P_COR[nidx, aid]
+                self.p_if_idle[nidx] = self.P_APP[nidx, aid]
+                self.t_if_corun[nidx] = self.T_COR[nidx, aid]
 
-        # --- training progression --------------------------------------
-        training = mode == MODE_TRAIN
-        if training.any():
-            train_rem[training] -= t_d
-            fin = training & (train_rem <= 0.0)
-            fidx = np.nonzero(fin)[0]
-            k = len(fidx)
-            if k:
-                if policy == "sync":
-                    lags = version - pulled_at[fidx]
-                    vns = v_norm(version)
-                else:
-                    # async finishers bump the version one by one, in user
-                    # order — each sees the versions of earlier finishers
-                    vers = version + np.arange(k)
-                    lags = vers - pulled_at[fidx]
-                    vns = v_norm(vers)
-                    version += k
-                updates[fidx] += 1
-                mode[fidx] = MODE_COOL
-                cooldown[fidx] = cfg.ready_delay
-                idle_gap[fidx] = 0.0
-                in_flight -= k
-                corun_updates += int(np.count_nonzero(corun[fidx]))
-                if cfg.collect_push_log:
-                    gaps = gradient_gap(vns, lags, cfg.eta, cfg.beta)
-                    push_chunks.append((t, fidx, lags, gaps,
-                                        corun[fidx].copy()))
-        if policy == "sync" and sync_round_open and \
-                not np.any(mode == MODE_TRAIN):
-            sync_round_open = False
-            version += 1
+            # --- cooldown -> waiting (queue arrival) -----------------------
+            arrivals = 0
+            cooling = mode == MODE_COOL
+            if cooling.any():
+                self.cooldown[cooling] -= 1
+                to_wait = cooling & (self.cooldown <= 0)
+                arrivals = int(np.count_nonzero(to_wait))
+                if arrivals:
+                    mode[to_wait] = MODE_WAIT
+                    self.plan[to_wait] = PLAN_HOLD
+            self.waiting = mode == MODE_WAIT
+            self.has_app = app >= 0
 
-        # --- energy accounting (Eq. 10) --------------------------------
-        training = mode == MODE_TRAIN
-        p = np.where(training, p_if_train, p_if_idle)
-        if cfg.include_scheduler_overhead and policy == "online":
-            p = np.where(mode == MODE_WAIT, p + OVERHEAD, p)
-        if t_d != 1.0:     # p * 1.0 == p bitwise; skip the alloc
-            p *= t_d
-        energy += p
+            # --- policy decisions for waiting users ------------------------
+            served, gap_sum = policy.decide_vectorized(self, t, pstate)
 
-        # --- queues -----------------------------------------------------
-        sched.update_queues(arrivals, served, gap_sum)
-        sum_Q += sched.Q
-        sum_H += sched.H
-        if t % cfg.trace_every == 0:
-            trace_t.append(t)
-            trace_E.append(float(energy.sum()))
-            trace_Q.append(sched.Q)
-            trace_H.append(sched.H)
+            # --- training progression --------------------------------------
+            training = mode == MODE_TRAIN
+            if training.any():
+                self.train_rem[training] -= t_d
+                fin = training & (self.train_rem <= 0.0)
+                fidx = np.nonzero(fin)[0]
+                k = len(fidx)
+                if k:
+                    if policy.sync_rounds:
+                        lags = self.version - self.pulled_at[fidx]
+                        vns = self.v_norm(self.version)
+                    else:
+                        # async finishers bump the version one by one, in
+                        # user order — each sees the versions of earlier
+                        # finishers
+                        vers = self.version + np.arange(k)
+                        lags = vers - self.pulled_at[fidx]
+                        vns = self.v_norm(vers)
+                        self.version += k
+                    self.updates[fidx] += 1
+                    mode[fidx] = MODE_COOL
+                    self.cooldown[fidx] = cfg.ready_delay
+                    self.idle_gap[fidx] = 0.0
+                    self.in_flight -= k
+                    corun_updates += int(np.count_nonzero(self.corun[fidx]))
+                    if cfg.collect_push_log:
+                        gaps = gradient_gap(vns, lags, cfg.eta, cfg.beta)
+                        push_chunks.append((t, fidx, lags, gaps,
+                                            self.corun[fidx].copy()))
+            if policy.sync_rounds and self.round_open and \
+                    not np.any(mode == MODE_TRAIN):
+                self.round_open = False
+                self.version += 1
 
-    push_log = []
-    for t, fidx, lags, gaps, cor in push_chunks:
-        for j in range(len(fidx)):
-            push_log.append({"t": t, "user": int(fidx[j]),
-                             "lag": int(lags[j]), "gap": float(gaps[j]),
-                             "corun": bool(cor[j])})
-    updates_total = int(updates.sum())
-    return SimResult(
-        energy_j=float(energy.sum()),
-        updates=updates_total,
-        trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
-        trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
-        push_log=push_log, accuracy=[],
-        mean_Q=sum_Q / T if T else 0.0,
-        mean_H=sum_H / T if T else 0.0,
-        corun_fraction=corun_updates / max(updates_total, 1))
+            # --- energy accounting (Eq. 10) --------------------------------
+            training = mode == MODE_TRAIN
+            p = np.where(training, self.p_if_train, self.p_if_idle)
+            if cfg.include_scheduler_overhead and policy.uses_online_queue:
+                p = np.where(mode == MODE_WAIT, p + self.OVERHEAD, p)
+            if t_d != 1.0:     # p * 1.0 == p bitwise; skip the alloc
+                p *= t_d
+            self.energy += p
 
+            # --- queues -----------------------------------------------------
+            sched.update_queues(arrivals, served, gap_sum)
+            sum_Q += sched.Q
+            sum_H += sched.H
+            if t % cfg.trace_every == 0:
+                trace_t.append(t)
+                trace_E.append(float(self.energy.sum()))
+                trace_Q.append(sched.Q)
+                trace_H.append(sched.H)
 
-def _plan_offline_vec(cfg, t, widx, app, app_sched, app_choice, T_COR,
-                      SRATE, plan, vn):
-    """Vectorized Alg. 1 window plan (mirrors FederatedSim._plan_offline).
-
-    Candidates are waiting users with an app running now or an (oracle
-    lookahead) arrival inside the window; the knapsack picks which of them
-    wait to co-run, the rest train immediately. Users without an in-window
-    arrival hold until the next plan."""
-    if not len(widx):
-        return
-    W = int(cfg.offline_window)
-    horizon = min(t + W, app_sched.shape[0])
-    sub = app_sched[t:horizon][:, widx]              # (window, n_waiting)
-    has_arr = sub.any(axis=0)
-    first = sub.argmax(axis=0)                       # first arrival offset
-    ha = app[widx] >= 0
-    cand = ha | has_arr
-    plan[widx[~cand]] = PLAN_HOLD
-    cidx = widx[cand]
-    if not len(cidx):
-        return
-    ta = np.where(ha[cand], t, t + first[cand])
-    aid = np.where(ha[cand], app[cidx], app_choice[ta, cidx])
-    durs = T_COR[cidx, aid]
-    savings = SRATE[cidx, aid] * durs
-    lags = lemma1_lag_bounds(np.full(len(cidx), t), ta, durs)
-    gaps = np.asarray(gradient_gap(vn, lags, cfg.eta, cfg.beta), dtype=float)
-    x, _ = knapsack_schedule(savings, gaps, cfg.L_b,
-                             resolution=cfg.offline_resolution)
-    plan[cidx] = np.where(x, PLAN_CORUN, PLAN_SEP)
+        push_log = []
+        for t, fidx, lags, gaps, cor in push_chunks:
+            for j in range(len(fidx)):
+                push_log.append({"t": t, "user": int(fidx[j]),
+                                 "lag": int(lags[j]), "gap": float(gaps[j]),
+                                 "corun": bool(cor[j])})
+        updates_total = int(self.updates.sum())
+        return SimResult(
+            energy_j=float(self.energy.sum()),
+            updates=updates_total,
+            trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
+            trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
+            push_log=push_log, accuracy=[],
+            mean_Q=sum_Q / T if T else 0.0,
+            mean_H=sum_H / T if T else 0.0,
+            corun_fraction=corun_updates / max(updates_total, 1))
 
 
 # ======================================================================
 # JAX backend: the whole horizon as one lax.scan, jitted per config shape
 # ======================================================================
-# jnp twins of the shared numpy formulas: np ufuncs don't dispatch on jax
-# tracers (this JAX version), so the scan needs its own expressions. Any
-# change to the originals MUST land here too — tests/test_sim_engines.py's
-# jax-vs-loop parity suite is the tripwire.
-def _jax_trace_v_norm(v_norm0, version, jnp):
-    """Mirror of simulator.trace_v_norm."""
-    return v_norm0 / jnp.sqrt(1.0 + 0.05 * version)
+_JAX_FN_CACHE: dict = {}
+_JAX_FN_CACHE_MAX = 16
 
 
-def _jax_gradient_gap(v_norm, lag, eta, beta):
-    """Mirror of staleness.gradient_gap/momentum_scale (Eq. 4). beta is a
-    traced scalar, so no beta==0 branch: 0**0==1 makes the closed form
-    agree at lag=0."""
-    return eta * (1.0 - beta ** lag) / (1.0 - beta) * v_norm
+def _jax_step_fn(n: int, T: int, policy, overhead: bool):
+    """Build + jit the scan over slots, memoized on (shapes,
+    ``policy.jax_cache_key()``, overhead flag). Parameter-free registry
+    policies key by class, so both ``SimConfig(policy="online")`` and a
+    fresh ``OnlinePolicy()`` per run share one executable; scalar knobs
+    (V, L_b, ...) are traced operands, so e.g. a V-sweep compiles once.
+    The policy's ``jax_decide`` hook supplies the decision block;
+    everything else — arrivals, cooldowns, training progression, Eq. 10
+    energy, Eq. 15/16 queues — is engine code shared by every policy."""
+    key = (n, T, policy.jax_cache_key(), overhead)
+    fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
+    if fn is None:
+        fn = _build_jax_step_fn(n, T, policy, overhead)
+        if len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
+            _JAX_FN_CACHE.pop(next(iter(_JAX_FN_CACHE)))  # evict LRU
+    _JAX_FN_CACHE[key] = fn
+    return fn
 
 
-@functools.lru_cache(maxsize=16)
-def _jax_step_fn(n: int, T: int, policy: str, overhead: bool):
-    """Build + jit the scan over slots. Static: shapes, policy, overhead
-    flag. Scalar knobs (V, L_b, ...) are traced operands, so e.g. a V-sweep
-    compiles once."""
+def _build_jax_step_fn(n: int, T: int, policy, overhead: bool):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -366,48 +338,19 @@ def _jax_step_fn(n: int, T: int, policy: str, overhead: bool):
             waiting = mode == MODE_WAIT
             has_app = app >= 0
 
-            # decisions
-            gap_sum = jnp.asarray(0.0, f)
-            if policy == "sync":
-                open_now = (~round_open) & (jnp.sum(waiting) == n)
-                start = waiting & open_now
-                round_open = round_open | open_now
-            elif policy == "immediate":
-                start = waiting
-            else:  # online
-                vn = _jax_trace_v_norm(v_norm0, version, jnp)
-                p_s = jnp.where(has_app, pcor_g, PT)
-                p_i = jnp.where(has_app, papp_g, PI)
-                base = V * p_s * t_d - Q
-                rhs = V * p_i * t_d
-                gap_idle_v = idle_gap + epsilon
-                lag_idx = in_flight + jnp.arange(n + 1)
-                gap_vec = _jax_gradient_gap(vn, lag_idx, eta, beta)
-
-                def fast(_):
-                    # H == 0: the gap term adds exactly 0 to both branches
-                    sched = waiting & (base <= rhs)
-                    before = jnp.cumsum(sched) - sched
-                    gaps = jnp.where(sched, gap_vec[before], gap_idle_v)
-                    return sched, jnp.sum(jnp.where(waiting, gaps, 0.0))
-
-                def slow(_):
-                    # sequential in-slot lag coupling, user-index order
-                    def body(c, xs_i):
-                        j, gs = c
-                        w_i, b_i, r_i, gi_i = xs_i
-                        do = w_i & (b_i + H * gap_vec[j] <= r_i + H * gi_i)
-                        gap_i = jnp.where(do, gap_vec[j], gi_i)
-                        gs = gs + jnp.where(w_i, gap_i, 0.0)
-                        return (j + do.astype(i), gs), do
-                    (j, gs), sched = lax.scan(
-                        body, (jnp.asarray(0, i), jnp.asarray(0.0, f)),
-                        (waiting, base, rhs, gap_idle_v))
-                    return sched, gs
-
-                start, gap_sum = lax.cond(H > 0.0, slow, fast, None)
-                idle_gap = jnp.where(waiting & ~start,
-                                     idle_gap + epsilon, idle_gap)
+            # decisions: the policy's jax hook, on a mutable slot view
+            sv = SimpleNamespace(
+                jnp=jnp, lax=lax, n=n, float_dtype=f, int_dtype=i,
+                waiting=waiting, has_app=has_app,
+                pcor_g=pcor_g, papp_g=papp_g, tcor_g=tcor_g,
+                PT=PT, TT=TT, PI=PI, PS=PS,
+                idle_gap=idle_gap, in_flight=in_flight, version=version,
+                round_open=round_open, Q=Q, H=H,
+                V=V, L_b=L_b, epsilon=epsilon, eta=eta, beta=beta,
+                v_norm0=v_norm0, t_d=t_d)
+            start, gap_sum = policy.jax_decide(sv)
+            idle_gap = sv.idle_gap
+            round_open = sv.round_open
             served = jnp.sum(start)
 
             # begin training
@@ -429,7 +372,7 @@ def _jax_step_fn(n: int, T: int, policy: str, overhead: bool):
             idle_gap = jnp.where(fin, 0.0, idle_gap)
             in_flight = in_flight - kfin
             corun_upd = corun_upd + jnp.sum(fin & corun)
-            if policy == "sync":
+            if policy.sync_rounds:
                 closed = round_open & (jnp.sum(mode == MODE_TRAIN) == 0)
                 version = version + closed
                 round_open = round_open & ~closed
@@ -441,7 +384,7 @@ def _jax_step_fn(n: int, T: int, policy: str, overhead: bool):
             p = jnp.where(training,
                           jnp.where(has_app, pcor_g, PT),
                           jnp.where(has_app, papp_g, PI))
-            if overhead and policy == "online":
+            if overhead and policy.uses_online_queue:
                 p = jnp.where(mode == MODE_WAIT, p + (PS - PI), p)
             energy = energy + p * t_d
 
@@ -472,8 +415,8 @@ def _run_jax(sim) -> SimResult:
     import jax.numpy as jnp
 
     cfg = sim.cfg
-    if cfg.policy == "offline":  # resolve_engine already reroutes; be safe
-        return _run_numpy(sim)
+    if not sim.policy.supports_jax:  # resolve_engine reroutes; be safe
+        return _NumpyEngine(sim).run()
     if cfg.collect_push_log:
         warnings.warn(
             "engine='jax' cannot stream per-push records out of lax.scan; "
@@ -492,7 +435,7 @@ def _run_jax(sim) -> SimResult:
         cfg.V, cfg.L_b, cfg.epsilon, cfg.eta, cfg.beta, cfg.v_norm0,
         cfg.t_d)) + (jnp.asarray(cfg.ready_delay),)
 
-    fn = _jax_step_fn(n, T, cfg.policy, cfg.include_scheduler_overhead)
+    fn = _jax_step_fn(n, T, sim.policy, cfg.include_scheduler_overhead)
     carry, (qs, hs, es) = fn(tables, app_sched, app_choice, scalars)
     energy_total = float(jnp.sum(carry[8]))
     updates_total = int(jnp.sum(carry[9]))

@@ -1,0 +1,18 @@
+"""Pallas API compat across the pinned jax 0.4.37 and newer releases.
+
+Newer pallas renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and made ``dimension_semantics`` & co. keyword-only along the way); kernel
+modules must build their compiler params through this helper instead of
+naming either class directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct the TPU compiler-params object under whichever name this
+    pallas release exposes (``CompilerParams`` vs ``TPUCompilerParams``)."""
+    return _CLS(**kwargs)

@@ -77,6 +77,8 @@ def _analyse(compiled, cfg=None):
     from repro.launch.hlo import (collective_group_sizes, collective_summary,
                                   hbm_bytes, quadratic_traffic)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     # Attention-score tensors are identified by their trailing (.., bq, Sk)
@@ -174,8 +176,9 @@ def _calibrate(cfg, shape, mesh, *, microbatches, fsdp):
         vshape = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), pshape)
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import set_mesh
         repl = NamedSharding(mesh, P())
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             c = jax.jit(upd, in_shardings=(pshard, pshard, pshard, repl)) \
                 .lower(pshape, vshape, vshape,
                        jax.ShapeDtypeStruct((), jnp.int32)).compile()

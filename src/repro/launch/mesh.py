@@ -14,9 +14,15 @@ Compat: ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
 fall back to a plain ``jax.make_mesh`` — every mesh axis defaults to the
 same (auto) partitioning behaviour there. ``AbstractMesh`` likewise changed
 its constructor signature between releases; ``make_abstract_mesh`` accepts
-(shape, axes) and adapts.
+(shape, axes) and adapts. ``set_mesh`` / ``get_abstract_mesh`` below shim
+the newer ``jax.set_mesh`` context and ``jax.sharding.get_abstract_mesh``
+lookup onto the pinned jax 0.4.37, where neither exists — model code must
+import them from here, never from jax directly.
 """
 from __future__ import annotations
+
+import contextlib
+import threading
 
 import jax
 
@@ -24,6 +30,67 @@ try:  # JAX >= 0.5-ish exposes explicit axis types
     from jax.sharding import AxisType
 except ImportError:  # pragma: no cover - exercised on older JAX only
     AxisType = None
+
+# Mesh contexts our set_mesh shim has entered (old-JAX path only); the
+# newer-JAX path delegates the bookkeeping to jax.set_mesh itself.
+# Thread-local, like the jax resource env it emulates — concurrent
+# dry-run calibrations must not see each other's meshes.
+_LOCAL = threading.local()
+
+
+def _mesh_stack() -> list:
+    stack = getattr(_LOCAL, "stack", None)
+    if stack is None:
+        stack = _LOCAL.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Compat twin of ``jax.set_mesh(mesh)`` (a context manager there).
+
+    Newer JAX: delegate. Older JAX (the pinned 0.4.37): enter the mesh's
+    resource-env context — pjit/GSPMD resolve bare PartitionSpec axis names
+    against it exactly as the newer API does — and record it so
+    ``get_abstract_mesh`` can answer inside the block."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    stack = _mesh_stack()
+    stack.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        stack.pop()
+
+
+def get_abstract_mesh():
+    """Compat twin of ``jax.sharding.get_abstract_mesh()``.
+
+    Returns the mesh of the innermost active ``set_mesh`` context, or None
+    when there is none — callers treat None as "no sharding constraint"
+    (host tests run meshless). On old JAX the returned object is the
+    concrete Mesh, which exposes the same ``.axis_names`` / ``.shape``
+    mapping the callers consult; a mesh entered via a plain ``with mesh:``
+    block is also honored through jax's thread resource env."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        m = fn()
+        if m is None or not getattr(m, "axis_names", ()):
+            return None     # empty sentinel mesh -> meshless semantics
+        return m
+    stack = _mesh_stack()
+    if stack:
+        return stack[-1]
+    try:  # plain `with mesh:` contexts (old-JAX resource env)
+        env_mesh = jax._src.mesh.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except AttributeError:  # pragma: no cover - layout drift across versions
+        pass
+    return None
 
 
 def make_mesh(shape, axes):

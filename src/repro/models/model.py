@@ -102,7 +102,8 @@ def _shard_seq(x, cfg):
        front of attention (Megatron-SP pattern).
 
     No-op outside a mesh context (host tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.launch.mesh import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         return x
     from jax.sharding import PartitionSpec as P

@@ -139,7 +139,8 @@ def _pin_rows(x3):
     """Anchor the dispatch-batch dim onto the dp axes before the vmapped
     sort/gather chain: in python-unrolled graphs (dry-run calibration)
     GSPMD otherwise replicates some layers' (rows, E, C, D) buffers."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.launch.mesh import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x3
     from jax.sharding import PartitionSpec as P

@@ -1,0 +1,464 @@
+"""Scenario API: registries, golden bit-for-bit reproduction, new policy /
+arrival / fleet compositions, and loop-vs-vectorized parity for all of them.
+
+``tests/data/scenario_golden.json`` pins the seeded results of the four
+paper policies as produced by the pre-registry engines (PR 1): registry-
+constructed policies must reproduce them bit-for-bit — energies, update
+counts, queue means and the full push-log digest — on every engine.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BernoulliArrivals, CustomCatalogFleet,
+                        DiurnalArrivals, GreedyThresholdPolicy,
+                        MarkovModulatedArrivals, PaperFleet, Policy,
+                        Scenario, SimConfig, SyntheticFleet, TraceArrivals,
+                        FederatedSim, registered_arrivals, registered_fleets,
+                        registered_policies, register_policy,
+                        resolve_arrival, resolve_fleet, resolve_policy,
+                        run_experiment, TESTBED)
+from repro.core.simulator import POLICIES
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "scenario_golden.json")
+
+CONFIGS = {
+    "default": dict(horizon_s=2000, n_users=12, seed=2),
+    "alt": dict(seed=7, app_arrival_p=0.01, horizon_s=1500, n_users=16),
+}
+
+
+def _digest_push_log(log):
+    h = hashlib.sha256()
+    for e in log:
+        h.update(f'{e["t"]},{e["user"]},{e["lag"]},{e["gap"]!r},'
+                 f'{int(e["corun"])};'.encode())
+    return h.hexdigest()
+
+
+def assert_equivalent(a, b, push_log=True):
+    assert a.updates == b.updates
+    assert b.energy_j == pytest.approx(a.energy_j, rel=1e-9)
+    assert b.mean_Q == pytest.approx(a.mean_Q, rel=1e-9, abs=1e-12)
+    assert b.mean_H == pytest.approx(a.mean_H, rel=1e-6, abs=1e-9)
+    assert b.corun_fraction == pytest.approx(a.corun_fraction)
+    np.testing.assert_array_equal(a.trace_t, b.trace_t)
+    np.testing.assert_allclose(b.trace_energy, a.trace_energy, rtol=1e-9)
+    if push_log:
+        assert [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in a.push_log] == \
+               [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in b.push_log]
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-for-bit reproduction (acceptance criterion vs PR 1)
+# ---------------------------------------------------------------------------
+class TestGoldenParity:
+    @pytest.fixture(scope="class")
+    def golden(self):
+        with open(GOLDEN) as f:
+            return json.load(f)
+
+    @pytest.mark.parametrize("cname", list(CONFIGS))
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("engine", ["loop", "vectorized"])
+    def test_registry_policies_reproduce_pr1(self, golden, cname, policy,
+                                             engine):
+        g = golden[f"{cname}/{policy}/{engine}"]
+        r = run_experiment(Scenario(policy=policy, engine=engine,
+                                    **CONFIGS[cname]))
+        assert r.energy_j == g["energy_j"]          # bit-for-bit
+        assert r.updates == g["updates"]
+        assert r.mean_Q == g["mean_Q"]
+        assert r.mean_H == g["mean_H"]
+        assert r.corun_fraction == g["corun_fraction"]
+        assert len(r.push_log) == g["n_push"]
+        assert _digest_push_log(r.push_log) == g["push_log_sha256"]
+
+    @pytest.mark.parametrize("policy", ["sync", "immediate", "online"])
+    def test_jax_engine_reproduces_pr1(self, golden, policy):
+        import jax
+        prev = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        try:
+            g = golden[f"default/{policy}/jax"]
+            r = run_experiment(Scenario(policy=policy, engine="jax",
+                                        collect_push_log=False,
+                                        **CONFIGS["default"]))
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+        assert r.energy_j == g["energy_j"]
+        assert r.updates == g["updates"]
+        assert r.mean_Q == g["mean_Q"]
+        assert r.mean_H == g["mean_H"]
+
+    def test_policy_objects_match_strings(self, golden):
+        """Explicitly constructed policy instances == registry strings."""
+        from repro.core import OnlinePolicy
+        g = golden["default/online/vectorized"]
+        r = run_experiment(Scenario(policy=OnlinePolicy(),
+                                    engine="vectorized",
+                                    **CONFIGS["default"]))
+        assert r.energy_j == g["energy_j"] and r.updates == g["updates"]
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+class TestRegistries:
+    def test_paper_policies_registered(self):
+        assert set(POLICIES) <= set(registered_policies())
+        assert "greedy" in registered_policies()
+
+    def test_arrivals_and_fleets_registered(self):
+        assert {"bernoulli", "diurnal", "bursty", "trace"} <= \
+            set(registered_arrivals())
+        assert {"paper", "synthetic", "custom"} <= set(registered_fleets())
+
+    def test_resolve_policy_roundtrip_singleton(self):
+        a = resolve_policy("online")
+        assert a is resolve_policy("online")     # jit-cache-friendly
+        assert resolve_policy(a) is a            # instance passthrough
+        assert a.name == "online"
+
+    def test_resolve_unknown_raises(self):
+        with pytest.raises(ValueError, match="policy"):
+            resolve_policy("pilla22")
+        with pytest.raises(ValueError, match="arrival"):
+            resolve_arrival("lognormal")
+        with pytest.raises(ValueError, match="fleet"):
+            resolve_fleet("datacenter")
+
+    def test_resolve_rejects_wrong_types(self):
+        with pytest.raises(ValueError, match="policy"):
+            resolve_policy(42)
+
+    def test_custom_policy_registration(self):
+        @register_policy
+        class _Never(Policy):
+            name = "never-train-test"
+
+            def decide_loop(self, sim, t, waiting, state):
+                return 0, 0.0
+
+        try:
+            assert "never-train-test" in registered_policies()
+            r = run_experiment(Scenario(policy="never-train-test",
+                                        n_users=4, horizon_s=100))
+            assert r.updates == 0
+            # no vectorized hook -> auto resolves to the loop oracle
+            sim = Scenario(policy="never-train-test", n_users=4,
+                           horizon_s=100).build()
+            assert sim.resolve_engine() == "loop"
+            with pytest.raises(ValueError, match="vectorized"):
+                FederatedSim(SimConfig(policy="never-train-test",
+                                       engine="vectorized")).run()
+        finally:
+            from repro.core import policies as _p
+            _p._REGISTRY.pop("never-train-test", None)
+            _p._INSTANCES.pop("never-train-test", None)
+
+    def test_simconfig_accepts_policy_object(self):
+        cfg = SimConfig(policy=GreedyThresholdPolicy(theta=0.1))
+        assert FederatedSim(cfg).policy.theta == 0.1
+
+    def test_simconfig_rejects_unknown_string(self):
+        with pytest.raises(ValueError, match="policy"):
+            SimConfig(policy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# New arrival processes: shapes, seeding, semantics
+# ---------------------------------------------------------------------------
+class TestArrivalProcesses:
+    @pytest.mark.parametrize("proc", [
+        BernoulliArrivals(0.01),
+        DiurnalArrivals(p_mean=0.01, period_s=500.0),
+        MarkovModulatedArrivals(),
+    ])
+    def test_shapes_and_dtypes(self, proc):
+        rng = np.random.default_rng(0)
+        sched, choice = proc.sample(rng, 300, 7, 8)
+        assert sched.shape == (300, 7) and sched.dtype == bool
+        assert choice.shape == (300, 7)
+        assert choice.min() >= 0 and choice.max() < 8
+
+    @pytest.mark.parametrize("name", ["bernoulli", "diurnal", "bursty"])
+    def test_seeded_determinism(self, name):
+        proc = resolve_arrival(name)
+        a = proc.sample(np.random.default_rng(5), 200, 4, 8)
+        b = proc.sample(np.random.default_rng(5), 200, 4, 8)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_bernoulli_matches_legacy_default(self):
+        """The default arrival path consumes the rng stream exactly like
+        the pre-registry simulator: shuffle, then mask, then choices."""
+        cfg = SimConfig(policy="online", horizon_s=500, n_users=6, seed=3,
+                        app_arrival_p=0.02)
+        sim = FederatedSim(cfg)
+        rng = np.random.default_rng(3)
+        names = [["Nexus6", "Nexus6P", "Hikey970", "Pixel2"][i % 4]
+                 for i in range(6)]
+        rng.shuffle(names)
+        sched = rng.random((500, 6)) < 0.02
+        choice = rng.integers(0, 8, (500, 6))
+        np.testing.assert_array_equal(sim.app_sched, sched)
+        np.testing.assert_array_equal(sim.app_choice, choice)
+
+    def test_diurnal_rate_profile(self):
+        proc = DiurnalArrivals(p_mean=0.01, depth=1.0, period_s=100.0)
+        rate = proc.rate(100)
+        assert rate.min() >= 0.0 and rate.max() <= 0.02 + 1e-12
+        assert rate[25] == pytest.approx(0.02)    # peak at quarter period
+        # higher-rate slots produce more arrivals in aggregate
+        rng = np.random.default_rng(1)
+        sched, _ = proc.sample(rng, 10000, 50, 8)
+        peak_half = sched[:5000].sum()
+        trough_half = sched[5000:].sum()
+        assert peak_half + trough_half > 0
+
+    def test_bursty_clumps_arrivals(self):
+        """Burst phases concentrate arrivals: the per-user variance of
+        slot counts must exceed an i.i.d. Bernoulli of the same mean."""
+        rng = np.random.default_rng(0)
+        proc = MarkovModulatedArrivals(p_calm=1e-4, p_burst=0.2,
+                                       burst_start=5e-3, burst_stop=5e-2)
+        sched, _ = proc.sample(rng, 4000, 64, 8)
+        # window counts (100-slot windows): bursty => overdispersed
+        w = sched.reshape(40, 100, 64).sum(axis=1).astype(float)
+        mean, var = w.mean(), w.var()
+        assert var > 2.0 * mean        # Poisson/Bernoulli would have var~mean
+
+    def test_trace_replay_and_wrap(self):
+        base = np.zeros((50, 3), dtype=bool)
+        base[7, 1] = base[20, 2] = True
+        tr = TraceArrivals(base, np.full((50, 3), 2))
+        rng = np.random.default_rng(0)
+        sched, choice = tr.sample(rng, 120, 3, 8)
+        assert sched.shape == (120, 3)
+        assert sched[7, 1] and sched[57, 1] and sched[107, 1]   # wrapped
+        assert (choice == 2).all()
+
+    def test_trace_user_mismatch_raises(self):
+        tr = TraceArrivals(np.zeros((10, 3), dtype=bool))
+        with pytest.raises(ValueError, match="users"):
+            tr.sample(np.random.default_rng(0), 10, 5, 8)
+
+    def test_trace_from_sim_roundtrip(self):
+        sc = Scenario(policy="immediate", n_users=5, horizon_s=400, seed=9,
+                      app_arrival_p=0.05)
+        sim = sc.build()
+        # replay pins the arrival schedule even under a different seed
+        # (the seed still drives the fleet shuffle, which is independent)
+        replay_sim = Scenario(policy="immediate",
+                              arrivals=TraceArrivals.from_sim(sim),
+                              n_users=5, horizon_s=400, seed=123).build()
+        np.testing.assert_array_equal(replay_sim.app_sched, sim.app_sched)
+        np.testing.assert_array_equal(replay_sim.app_choice, sim.app_choice)
+
+    def test_bernoulli_string_honors_configured_rate(self):
+        """arrivals="bernoulli" must mean the same as the default — the
+        paper process at cfg.app_arrival_p, not a hard-coded 0.001."""
+        kw = dict(policy="immediate", app_arrival_p=0.05, n_users=10,
+                  horizon_s=500, seed=0)
+        a = run_experiment(Scenario(**kw))
+        b = run_experiment(Scenario(arrivals="bernoulli", **kw))
+        assert a.corun_fraction == b.corun_fraction
+        assert a.energy_j == b.energy_j
+
+    def test_sim_rejects_bad_shapes(self):
+        class _Broken(BernoulliArrivals):
+            def sample(self, rng, T, n_users, n_apps, t_d=1.0):
+                return np.zeros((3, 2), bool), np.zeros((3, 2), np.int64)
+        with pytest.raises(ValueError, match="shape"):
+            FederatedSim(SimConfig(policy="online", horizon_s=100,
+                                   n_users=4), arrivals=_Broken())
+
+
+# ---------------------------------------------------------------------------
+# New fleets
+# ---------------------------------------------------------------------------
+class TestFleets:
+    def test_paper_fleet_matches_legacy_assignment(self):
+        spec = PaperFleet().build(np.random.default_rng(2), 12)
+        rng = np.random.default_rng(2)
+        names = [["Nexus6", "Nexus6P", "Hikey970", "Pixel2"][i % 4]
+                 for i in range(12)]
+        rng.shuffle(names)
+        assert [d.name for d in spec.devices] == names
+
+    def test_synthetic_fleet_builds_and_is_seeded(self):
+        fl = SyntheticFleet(n_types=10, spread=0.4)
+        a = fl.build(np.random.default_rng(4), 30)
+        b = fl.build(np.random.default_rng(4), 30)
+        assert a.tables.p_train.shape == (10,)
+        assert a.tables.p_corun.shape == (10, 8)
+        np.testing.assert_array_equal(a.device_ids, b.device_ids)
+        np.testing.assert_array_equal(a.tables.p_train, b.tables.p_train)
+        # power ordering preserved per device: P^{a'} > P^a, savings > 0
+        assert (a.tables.p_corun > a.tables.p_app).all()
+        assert (a.tables.saving_rate > 0).all()
+
+    def test_custom_fleet_round_robin(self):
+        fl = CustomCatalogFleet([TESTBED["Pixel2"], TESTBED["Nexus6"]])
+        spec = fl.build(np.random.default_rng(0), 5)
+        assert [d.name for d in spec.devices] == \
+            ["Pixel2", "Nexus6", "Pixel2", "Nexus6", "Pixel2"]
+        np.testing.assert_array_equal(spec.device_ids, [0, 1, 0, 1, 0])
+
+    def test_custom_fleet_validates_app_coverage(self):
+        import dataclasses as dc
+        bad = dc.replace(TESTBED["Pixel2"], apps={})
+        with pytest.raises(ValueError, match="apps"):
+            CustomCatalogFleet([bad])
+
+    def test_empty_catalog_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            CustomCatalogFleet([])
+
+    @pytest.mark.parametrize("fleet", [
+        SyntheticFleet(n_types=6, spread=0.2),
+        CustomCatalogFleet([TESTBED["Pixel2"], TESTBED["Nexus6P"]],
+                           assignment="random"),
+    ])
+    def test_engine_parity_on_non_paper_fleet(self, fleet):
+        # tight L_b builds staleness pressure fast enough for the online
+        # policy to schedule inside the short horizon (the paper's
+        # L_b=1000 is calibrated for 25 users x 3 h) — and exercises
+        # decide_batch's sequential in-slot coupling path on both engines
+        kw = dict(n_users=14, horizon_s=1200, seed=6, app_arrival_p=0.01,
+                  V=2000.0, L_b=2.0)
+        a = Scenario(policy="online", fleet=fleet, engine="loop", **kw).run()
+        b = Scenario(policy="online", fleet=fleet, engine="vectorized",
+                     **kw).run()
+        assert a.updates > 0
+        assert_equivalent(a, b)
+
+
+# ---------------------------------------------------------------------------
+# The new greedy policy: end-to-end + engine parity
+# ---------------------------------------------------------------------------
+class TestGreedyPolicy:
+    @pytest.mark.parametrize("kw", [
+        dict(horizon_s=2000, n_users=12, seed=2),
+        dict(horizon_s=1500, n_users=16, seed=7, app_arrival_p=0.01),
+    ])
+    def test_loop_vs_vectorized_parity(self, kw):
+        a = run_experiment(Scenario(policy="greedy", engine="loop", **kw))
+        b = run_experiment(Scenario(policy="greedy", engine="vectorized",
+                                    **kw))
+        assert a.updates > 0
+        assert_equivalent(a, b)
+
+    def test_parity_with_custom_params(self):
+        pol = GreedyThresholdPolicy(theta=0.5, patience=60)
+        kw = dict(n_users=10, horizon_s=1500, seed=4, app_arrival_p=0.02)
+        a = Scenario(policy=pol, engine="loop", **kw).run()
+        b = Scenario(policy=pol, engine="vectorized", **kw).run()
+        assert_equivalent(a, b)
+
+    def test_zero_patience_degenerates_to_immediate(self):
+        kw = dict(n_users=12, horizon_s=1500, seed=2)
+        g = run_experiment(Scenario(
+            policy=GreedyThresholdPolicy(theta=-1.0, patience=0), **kw))
+        i = run_experiment(Scenario(policy="immediate", **kw))
+        assert g.updates == i.updates
+        assert g.energy_j == pytest.approx(i.energy_j, rel=1e-12)
+
+    def test_jax_request_degrades_to_vectorized(self):
+        sim = Scenario(policy="greedy", engine="jax", n_users=8,
+                       horizon_s=300).build()
+        assert sim.resolve_engine() == "vectorized"
+
+    def test_jax_request_degrades_to_loop_for_loop_only_policy(self):
+        class _LoopOnly(Policy):
+            name = "loop-only-test"
+
+            def decide_loop(self, sim, t, waiting, state):
+                return 0, 0.0
+
+        sim = FederatedSim(SimConfig(policy=_LoopOnly(), engine="jax",
+                                     n_users=4, horizon_s=100))
+        assert sim.resolve_engine() == "loop"
+
+    def test_fresh_policy_instances_share_jax_jit_cache(self):
+        """Object-passing style (a new OnlinePolicy() per run) must not
+        recompile the scan: parameter-free policies key the cache by
+        class."""
+        from repro.core import OnlinePolicy
+        from repro.core.vector_engine import _jax_step_fn
+        a = _jax_step_fn(8, 100, OnlinePolicy(), False)
+        b = _jax_step_fn(8, 100, OnlinePolicy(), False)
+        assert a is b
+
+    def test_waits_for_cheap_slots(self):
+        """With a tight threshold and long patience the greedy policy
+        schedules later (fewer updates) than immediate but cheaper
+        per-update energy on co-run-friendly devices."""
+        kw = dict(n_users=16, horizon_s=3000, seed=1, app_arrival_p=0.02)
+        g = run_experiment(Scenario(
+            policy=GreedyThresholdPolicy(theta=0.3, patience=600), **kw))
+        i = run_experiment(Scenario(policy="immediate", **kw))
+        assert 0 < g.updates < i.updates
+        assert g.energy_j < i.energy_j
+
+
+# ---------------------------------------------------------------------------
+# New arrivals end-to-end through run_experiment, loop vs vectorized
+# ---------------------------------------------------------------------------
+class TestArrivalEngineParity:
+    @pytest.mark.parametrize("arrivals", [
+        DiurnalArrivals(p_mean=0.02, period_s=400.0),
+        MarkovModulatedArrivals(p_calm=1e-3, p_burst=0.1,
+                                burst_start=5e-3, burst_stop=2e-2),
+    ])
+    @pytest.mark.parametrize("policy", ["online", "greedy", "offline"])
+    def test_loop_vs_vectorized(self, arrivals, policy):
+        # see test_engine_parity_on_non_paper_fleet for the L_b choice
+        kw = dict(n_users=12, horizon_s=1500, seed=8, V=2000.0, L_b=2.0)
+        a = Scenario(policy=policy, arrivals=arrivals, engine="loop",
+                     **kw).run()
+        b = Scenario(policy=policy, arrivals=arrivals, engine="vectorized",
+                     **kw).run()
+        assert a.updates > 0
+        assert_equivalent(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Scenario / run_experiment surface
+# ---------------------------------------------------------------------------
+class TestScenarioSurface:
+    def test_kwargs_build(self):
+        sc = Scenario(policy="online", n_users=7, horizon_s=300)
+        assert sc.config.n_users == 7 and sc.policy.name == "online"
+
+    def test_prebuilt_config(self):
+        cfg = SimConfig(policy="sync", n_users=5, horizon_s=200)
+        sc = Scenario(config=cfg)
+        assert sc.policy.name == "sync"
+        sc2 = Scenario(policy="immediate", config=cfg)
+        assert sc2.policy.name == "immediate"      # explicit override wins
+        assert cfg.policy == "sync"                # original untouched
+
+    def test_config_and_kwargs_conflict(self):
+        with pytest.raises(ValueError, match="config"):
+            Scenario(config=SimConfig(), n_users=4)
+
+    def test_run_experiment_kwargs_or_scenario(self):
+        r = run_experiment(policy="immediate", n_users=4, horizon_s=300,
+                           seed=0)
+        assert r.updates > 0
+        with pytest.raises(TypeError, match="Scenario"):
+            run_experiment(Scenario(policy="immediate"), n_users=4)
+
+    def test_repr_mentions_composition(self):
+        sc = Scenario(policy="greedy", arrivals="bursty", fleet="synthetic",
+                      n_users=3, horizon_s=100)
+        s = repr(sc)
+        assert "greedy" in s and "bursty" in s and "synthetic" in s
