@@ -11,9 +11,9 @@ import sys
 import time
 
 from benchmarks import (bench_fig4_tradeoff, bench_fig5_convergence,
-                        bench_fig6_arrival, bench_kernels, bench_roofline,
-                        bench_sim_scale, bench_table2_energy,
-                        bench_table3_overhead)
+                        bench_fig6_arrival, bench_kernels,
+                        bench_real_scale, bench_roofline, bench_sim_scale,
+                        bench_table2_energy, bench_table3_overhead)
 from benchmarks.common import emit
 
 BENCHES = [
@@ -23,6 +23,7 @@ BENCHES = [
     ("fig6", bench_fig6_arrival),
     ("fig5", bench_fig5_convergence),
     ("sim_scale", bench_sim_scale),
+    ("real_scale", bench_real_scale),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
 ]

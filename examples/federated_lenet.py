@@ -1,34 +1,44 @@
 """End-to-end driver: REAL federated training of LeNet-5 (the paper's own
-workload) under the online energy-aware schedule — a few hundred scheduled
-local epochs of actual JAX training, with accuracy and energy reported.
+workload) under an energy-aware schedule — scheduled local epochs of actual
+JAX training, with accuracy and energy reported.
+
+Runs through the Scenario API with the batched LeNet backend
+(``ml="lenet"``), so ``--engine vectorized`` (or auto) trains whole
+finisher cohorts with one vmap'd epoch instead of per-user Python
+callbacks; ``--engine loop`` is the per-user reference oracle.
 
     PYTHONPATH=src python examples/federated_lenet.py [--policy online]
+    PYTHONPATH=src python examples/federated_lenet.py --users 64 \
+        --engine vectorized
 """
 import argparse
 import time
 
 import _bootstrap  # noqa: F401  (makes `repro` importable from a checkout)
 
-from repro.core.realml import make_ml_hooks
-from repro.core.simulator import FederatedSim, SimConfig
+from repro.core import Scenario
+
+POLICIES = ("online", "immediate", "offline", "sync", "greedy")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="online",
-                    choices=["online", "immediate", "offline", "sync"])
+    ap.add_argument("--policy", default="online", choices=POLICIES)
     ap.add_argument("--horizon", type=int, default=2400)
     ap.add_argument("--users", type=int, default=8)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "loop", "vectorized"])
     args = ap.parse_args()
 
-    hooks, state = make_ml_hooks(args.users, sync=(args.policy == "sync"),
-                                 n_train=4000, n_test=1000)
-    cfg = SimConfig(policy=args.policy, horizon_s=args.horizon,
-                    n_users=args.users, ml_mode="real",
-                    app_arrival_p=0.004, seed=0)
+    scn = Scenario(policy=args.policy, ml="lenet",
+                   ml_kwargs=dict(n_train=4000, n_test=1000),
+                   horizon_s=args.horizon, n_users=args.users,
+                   app_arrival_p=0.004, seed=0, engine=args.engine)
+    sim = scn.build()
     t0 = time.time()
-    r = FederatedSim(cfg, ml_hooks=hooks).run()
-    print(f"\npolicy={args.policy}  wall={time.time() - t0:.0f}s")
+    r = sim.run()
+    print(f"\npolicy={args.policy}  engine={sim.resolve_engine()}  "
+          f"wall={time.time() - t0:.0f}s")
     print(f"energy: {r.energy_j / 1e3:.1f} kJ   updates: {r.updates}   "
           f"co-run fraction: {r.corun_fraction:.2f}")
     print("accuracy trace (sim-time s, test acc):")

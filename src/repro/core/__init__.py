@@ -20,6 +20,9 @@ from .offline import (knapsack_schedule, lemma1_lag_bounds,
 from .policies import (GreedyThresholdPolicy, ImmediatePolicy, OfflinePolicy,
                        OnlinePolicy, Policy, SyncPolicy, register_policy,
                        registered_policies, resolve_policy)
+from .realml import (BatchedMLBackend, LeNetBackend, make_backend,
+                     make_ml_hooks, register_ml_backend,
+                     registered_ml_backends)
 from .scenario import Scenario, run_experiment
 from .server import AsyncParameterServer, SyncServer
 from .simulator import ENGINES, POLICIES, FederatedSim, SimConfig, SimResult
@@ -42,6 +45,8 @@ __all__ = [
     "GreedyThresholdPolicy", "ImmediatePolicy", "OfflinePolicy",
     "OnlinePolicy", "Policy", "SyncPolicy",
     "register_policy", "registered_policies", "resolve_policy",
+    "BatchedMLBackend", "LeNetBackend", "make_backend", "make_ml_hooks",
+    "register_ml_backend", "registered_ml_backends",
     "Scenario", "run_experiment",
     "AsyncParameterServer", "SyncServer",
     "ENGINES", "POLICIES", "FederatedSim", "SimConfig", "SimResult",

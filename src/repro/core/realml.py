@@ -1,14 +1,32 @@
 """Real-ML coupling for the simulator (Fig. 5): LeNet-5 on cifarlike data,
-25 clients, momentum SGD (Eq. 1), async parameter server vs FedAvg.
+momentum SGD (Eq. 1), async parameter server vs FedAvg.
 
-``make_ml_hooks`` returns the hook dict ``FederatedSim(ml_mode="real")``
-consumes, so the slot-level schedule (energy decisions) drives actual JAX
-training and the reported accuracy/wall-clock curves are real.
+Two ways to couple a schedule to actual JAX training:
+
+* ``BatchedMLBackend`` — the first-class protocol. A backend owns the
+  server, the per-client shards and the in-flight (pulled) parameter
+  snapshots, and exposes *batched* entry points the vectorized engine
+  dispatches once per slot cohort instead of n Python callbacks:
+  ``pull_batch`` -> ``local_train_batch`` (one ``jax.vmap``'d masked epoch
+  over the whole finisher cohort, jit-compiled once per cohort shape) ->
+  ``push_batch``/``submit_batch`` (sequential server application in user
+  order, preserving the loop oracle's push ordering exactly).
+* ``make_ml_hooks`` — the historical per-user callback dict for the loop
+  engine, now a thin adapter over ``LeNetBackend.hooks()``. Same
+  construction order, same rng stream, same jitted per-client epoch, so
+  pre-existing seeded loop runs reproduce bit-for-bit.
+
+Equivalence contract (pinned by tests/test_real_mode.py): under the
+paper's queue regime (L_b large enough that H stays 0, where the online
+decision is independent of the momentum norm) the batched path reproduces
+the loop oracle's schedule — update counts, lags, push order — exactly;
+accuracy/energy/gap trajectories match within float tolerance (vmap'd XLA
+programs are not bit-identical to their per-client counterparts).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional, Type, Union
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +34,535 @@ import numpy as np
 
 from repro.core.client import Client
 from repro.core.server import AsyncParameterServer, SyncServer
+from repro.core.staleness import gradient_gap
 from repro.data.synthetic import cifarlike_dataset, dirichlet_partition
 from repro.models.lenet import init_lenet, lenet_logits, lenet_loss
+
+
+class BatchedMLBackend:
+    """Protocol for batched real-ML coupling (vectorized-engine capable).
+
+    A backend instance is single-run state: it owns the parameter server,
+    the per-client data, and the pulled-parameter snapshots of every
+    in-flight user. The vectorized engine drives it with whole cohorts;
+    the loop oracle drives the same instance through ``hooks()``. Construct
+    a fresh backend per run (server state is consumed by a run).
+
+    Attributes engines rely on: ``n_users`` (validated against
+    ``SimConfig.n_users``), ``sync`` (FedAvg lock-step vs async parameter
+    server — must match the policy's ``sync_rounds``), ``eval_every``
+    (slots between accuracy samples).
+    """
+
+    name: str = ""
+    n_users: int = 0
+    sync: bool = False
+    eval_every: int = 600
+
+    # ------------------------------------------------------------ loop adapter
+    def hooks(self) -> dict:
+        """Per-user callback dict for ``FederatedSim``'s loop engine —
+        the same backend state behind the historical hook protocol."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ batched path
+    def pull_batch(self, uids: np.ndarray, version: int) -> None:
+        """Snapshot the current global parameters for every uid starting
+        training this slot (``version`` is the engine's global version at
+        pull time, for staleness-aware backends)."""
+        raise NotImplementedError
+
+    def local_train_batch(self, uids: np.ndarray, versions: np.ndarray):
+        """One local epoch for the whole finisher cohort at once; returns
+        the trained parameters stacked on a leading ``len(uids)`` axis.
+        ``versions`` are the per-uid versions recorded at pull time."""
+        raise NotImplementedError
+
+    def push_batch(self, uids: np.ndarray, trained, lags: np.ndarray,
+                   eta: float, beta: float) -> np.ndarray:
+        """Apply the cohort's pushes to the async server sequentially in
+        ``uids`` order (the loop oracle's ordering), returning the Eq. (4)
+        gap of each push evaluated against the momentum norm *before* that
+        push was applied — exactly what the loop's per-user finish does."""
+        raise NotImplementedError
+
+    def submit_batch(self, uids: np.ndarray, trained, lags: np.ndarray,
+                     eta: float, beta: float) -> np.ndarray:
+        """Sync-mode twin of ``push_batch``: submit the cohort's results
+        to the FedAvg server (aggregation happens at round close)."""
+        raise NotImplementedError
+
+    def finish_async_batch(self, uids: np.ndarray, versions: np.ndarray,
+                           lags: np.ndarray, eta: float, beta: float,
+                           need_gaps: bool = True):
+        """Whole async finish for a cohort: local_train_batch followed by
+        push_batch. Backends may override with a fused implementation (one
+        device dispatch for train + ordered pushes). With
+        ``need_gaps=False`` (no push log collected) the return value is
+        ignored and backends may skip the gap computation — and with it
+        any host-device synchronization."""
+        trained = self.local_train_batch(uids, versions)
+        return self.push_batch(uids, trained, lags, eta, beta)
+
+    def sync_aggregate(self) -> None:
+        """Close a FedAvg round (sync backends only)."""
+        raise NotImplementedError
+
+    def v_norm(self) -> float:
+        """Current global momentum-norm estimate (0.0 for sync)."""
+        raise NotImplementedError
+
+    def evaluate(self) -> float:
+        """Test accuracy of the current global model."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Backend registry (Scenario's ml="lenet" resolves here)
+# ---------------------------------------------------------------------------
+ML_BACKENDS: Dict[str, Type[BatchedMLBackend]] = {}
+
+
+def register_ml_backend(cls: Type[BatchedMLBackend]) -> Type[BatchedMLBackend]:
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a registry name")
+    ML_BACKENDS[cls.name] = cls
+    return cls
+
+
+def registered_ml_backends() -> tuple:
+    return tuple(ML_BACKENDS)
+
+
+def make_backend(ml: Union[str, BatchedMLBackend], n_users: int, *,
+                 sync: bool = False, seed: int = 0,
+                 **kwargs) -> BatchedMLBackend:
+    """Resolve ``ml`` to a fresh backend instance. Strings go through the
+    registry; instances pass through as-is (their constructor already fixed
+    n_users/sync/seed)."""
+    if isinstance(ml, BatchedMLBackend):
+        return ml
+    if isinstance(ml, str):
+        if ml not in ML_BACKENDS:
+            raise ValueError(f"unknown ML backend {ml!r}; expected one of "
+                             f"{registered_ml_backends()} or a "
+                             "BatchedMLBackend instance")
+        return ML_BACKENDS[ml](n_users, sync=sync, seed=seed, **kwargs)
+    raise ValueError(f"ml must be a name or BatchedMLBackend instance, "
+                     f"got {type(ml).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Jitted cohort programs (module-level so every backend instance with the
+# same data shapes and hyperparameters shares one compiled executable).
+# ---------------------------------------------------------------------------
+def _masked_epoch(params, idx, mask, flat_x, flat_y, eta, beta):
+    """One local momentum-SGD epoch (Eq. 1, the Client._epoch step rule)
+    over minibatches ``flat_x[idx]``; masked steps are no-ops (ragged
+    shards / padding lanes)."""
+    bx = flat_x[idx]                       # (S, B, H, W, C)
+    by = flat_y[idx]                       # (S, B)
+    v0 = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, xs):
+        p, v = carry
+        x, y, m = xs
+        grads, _ = jax.grad(
+            lambda q: lenet_loss(q, {"images": x, "labels": y}),
+            has_aux=True)(p)
+        v2 = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g,
+                          v, grads)
+        p2 = jax.tree.map(lambda pp, vv: pp - eta * vv, p, v2)
+        p = jax.tree.map(lambda a, b: jnp.where(m, a, b), p2, p)
+        v = jax.tree.map(lambda a, b: jnp.where(m, a, b), v2, v)
+        return (p, v), None
+
+    (params, _), _ = jax.lax.scan(step, (params, v0), (bx, by, mask))
+    return params
+
+
+def _tree_l2_norm_traced(tree):
+    """staleness.tree_l2_norm, usable under jit (same accumulation order:
+    Python sum over tree.leaves, f32)."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _lanes(params, idx, shared):
+    """The chunk's per-lane parameter stack. ``shared=True`` means every
+    lane pulled the SAME global snapshot (lock-step cohorts under replace
+    aggregation — the common case), so the caller passed one tree and the
+    lanes are a free in-device broadcast. Otherwise ``params`` is a tuple
+    of per-lane trees and the stack happens HERE, inside the jit — eager
+    per-leaf stacking costs milliseconds per op on CPU."""
+    if not shared:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+    C = idx.shape[0]
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (C,) + a.shape), params)
+
+
+@functools.partial(jax.jit, static_argnames=("n_epochs", "n_i"))
+def _perm_bank(key, n_epochs, n_i):
+    """``n_epochs`` iterations of the Client.local_train key protocol —
+    ``key, sub = split(key)`` then ``permutation(sub, n_i)`` — in one
+    dispatch. The scanned split chain is bit-identical to sequential
+    eager splits, so banked draws equal the loop engine's."""
+    def step(k, _):
+        k2, sub = jax.random.split(k)
+        return k2, sub
+
+    key, subs = jax.lax.scan(step, key, None, length=n_epochs)
+    perms = jax.vmap(lambda s: jax.random.permutation(s, n_i))(subs)
+    return key, perms
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "beta", "shared"))
+def _train_chunk(params, idx, mask, flat_x, flat_y, eta, beta, shared):
+    """vmap'd masked epoch over one cohort chunk."""
+    return jax.vmap(
+        lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta, beta)
+    )(_lanes(params, idx, shared), idx, mask)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "beta", "shared", "need_norms"))
+def _finish_chunk(params, idx, mask, valid, server_params,
+                  server_v, flat_x, flat_y, eta, beta, shared,
+                  need_norms=True):
+    """Fused async finish: train the whole chunk (vmap) then apply the
+    pushes sequentially in lane order (lax.scan) with the paper's
+    "replace" rule and the server momentum recursion of
+    ``AsyncParameterServer.push``:
+
+        params <- trained_j
+        s       = (params_old - trained_j) / eta
+        v      <- beta * v + (1 - beta) * s
+
+    Emits ``||v||`` at each step *start* — the momentum norm each push's
+    Eq. (4) gap is evaluated against in the loop oracle (the norm left by
+    the previous finisher) — plus the final post-cohort norm. Invalid
+    (padding) lanes leave the carry untouched.
+    """
+    trained = jax.vmap(
+        lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta, beta)
+    )(_lanes(params, idx, shared), idx, mask)
+    eta_s = max(eta, 1e-12)
+
+    def push_step(carry, xs):
+        p, v = carry
+        t_j, ok = xs
+        # per-step pre-push norms only feed the push-log gaps; without a
+        # log they are dead weight (10 tree reductions per push)
+        vnorm_pre = _tree_l2_norm_traced(v) if need_norms \
+            else jnp.asarray(0.0, jnp.float32)
+        s = jax.tree.map(lambda o, n_: (o - n_) / eta_s, p, t_j)
+        v2 = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g, v, s)
+        p = jax.tree.map(lambda n_, o: jnp.where(ok, n_, o), t_j, p)
+        v = jax.tree.map(lambda a, b: jnp.where(ok, a, b), v2, v)
+        return (p, v), vnorm_pre
+
+    (p_out, v_out), vnorms = jax.lax.scan(push_step,
+                                          (server_params, server_v),
+                                          (trained, valid))
+    return p_out, v_out, vnorms, _tree_l2_norm_traced(v_out)
+
+
+@register_ml_backend
+class LeNetBackend(BatchedMLBackend):
+    """The paper's workload: LeNet-5 on cifarlike shards, batched.
+
+    Per-client pulled parameters are pytree REFERENCES (``_inflight``),
+    so a pull costs zero device work; at train time a cohort whose lanes
+    all share one snapshot (lock-step pulls under replace aggregation,
+    the common case) is broadcast in-device, and ragged cohorts stack
+    their lanes inside the jit (tuple-of-trees argument — never eagerly).
+    Cohorts are processed in chunks padded to the next power of FOUR
+    (capped at ``cohort_pad`` lanes, padding lanes masked out, up to ~4x
+    masked waste on the smallest cohorts), so the vmap'd epoch and the
+    fused train+push program compile O(log4 cohort_pad) distinct shapes
+    per run — not once per ragged cohort size — and the executables are
+    shared across backend instances (module-level jit). Per-event host
+    work is plain numpy: minibatch permutations come from precomputed
+    per-client banks (same key chain as ``Client.local_train``), so the
+    hot path issues one or two stable-shape device dispatches per chunk
+    and never blocks. Shards are ragged
+    (Dirichlet split): every lane runs ``S_max`` scan steps with per-step
+    masks, where ``S_max`` is the fleet-wide maximum steps-per-epoch, and
+    masked steps leave (params, momentum) untouched. With the paper's
+    "replace" aggregation the whole finish — cohort epoch + ordered
+    sequential pushes + per-push momentum norms — is one device dispatch
+    (``_finish_chunk``); other aggregation rules fall back to per-push
+    server calls.
+
+    noise=8.0 calibrates cifarlike difficulty so LeNet accuracy climbs
+    gradually over many local epochs (CIFAR-10-like convergence dynamics)
+    rather than saturating after one epoch.
+    """
+
+    name = "lenet"
+
+    def __init__(self, n_users: int, *, sync: bool = False,
+                 eta: float = 0.01, beta: float = 0.9,
+                 n_train: int = 10000, n_test: int = 2000,
+                 alpha: float = 100.0, batch_size: int = 20,
+                 aggregation: str = "replace", noise: float = 8.0,
+                 seed: int = 0, eval_every: int = 600,
+                 cohort_pad: int = 16, partition: str = "dirichlet"):
+        # construction order (data -> shards -> clients -> params -> server)
+        # is pinned: it is the historical make_ml_hooks rng stream, and the
+        # loop-oracle golden (tests/data/real_mode_golden.json) depends on it
+        images, labels = cifarlike_dataset(n_train, seed=seed, noise=noise)
+        test_x, test_y = cifarlike_dataset(n_test, seed=seed + 1, noise=noise)
+        if partition == "dirichlet":       # the paper's non-IID split
+            shards = dirichlet_partition(labels, n_users, alpha=alpha,
+                                         seed=seed)
+        elif partition == "uniform":
+            # IID near-equal shards (exactly equal when n_users divides
+            # n_train): uniform step counts mean one jit shape for the
+            # loop's per-client epoch and minimal masked-step waste in
+            # the batched cohort epoch
+            shards = np.array_split(np.arange(n_train, dtype=np.int64),
+                                    n_users)
+        else:
+            raise ValueError(f"unknown partition {partition!r}; expected "
+                             "'dirichlet' or 'uniform'")
+        self.clients = [
+            Client(i, jnp.asarray(images[s]), jnp.asarray(labels[s]),
+                   lenet_loss, batch_size=batch_size, eta=eta, beta=beta)
+            for i, s in enumerate(shards)]
+        params0 = init_lenet(jax.random.PRNGKey(seed))
+        self.server: object
+        if sync:
+            self.server = SyncServer(params0)
+        else:
+            self.server = AsyncParameterServer(params0, eta=eta, beta=beta,
+                                               aggregation=aggregation)
+        self.n_users = n_users
+        self.sync = sync
+        self.eta = eta
+        self.beta = beta
+        self.batch_size = batch_size
+        self.eval_every = eval_every
+        self.cohort_pad = max(int(cohort_pad), 1)
+
+        # ---- batched-training layout ---------------------------------
+        # client shards concatenated flat; per-epoch minibatch gathers are
+        # one fancy-index into these (offset + client-local permutation)
+        self._offsets = np.zeros(n_users, dtype=np.int64)
+        off = 0
+        for i, s in enumerate(shards):
+            self._offsets[i] = off
+            off += len(s)
+        self._shard_sizes = np.array([len(s) for s in shards], np.int64)
+        self._flat_x = jnp.asarray(np.concatenate(
+            [images[s] for s in shards], axis=0))
+        self._flat_y = jnp.asarray(np.concatenate(
+            [labels[s] for s in shards], axis=0))
+        self._steps = self._shard_sizes // batch_size
+        self._s_max = int(self._steps.max()) if n_users else 0
+        # pulled-parameter snapshot per in-flight uid: pytree REFERENCES
+        # (immutable), so a pull costs zero device work. Cohorts whose
+        # lanes all share one snapshot (lock-step pulls under replace
+        # aggregation) are broadcast in-device at train time; ragged
+        # cohorts pay one host-side stack.
+        self._inflight: list = [params0] * n_users
+        # per-client minibatch-permutation banks: epochs of
+        # jax.random.permutation draws precomputed in batches so the hot
+        # path never touches the device RNG (parity: identical key chain
+        # and draws as Client.local_train, verified by the golden tests)
+        self._perm_bank: list = [None] * n_users
+        self._bank_pos = np.zeros(n_users, dtype=np.int64)
+        self._bank_epochs = 16
+
+        test_x_j = jnp.asarray(test_x)
+        test_y_j = jnp.asarray(test_y)
+
+        @jax.jit
+        def _acc(params):
+            logits = lenet_logits(params, test_x_j)
+            return jnp.mean((jnp.argmax(logits, -1) == test_y_j)
+                            .astype(jnp.float32))
+
+        self._acc = _acc
+
+    # ------------------------------------------------------------ loop adapter
+    def hooks(self) -> dict:
+        """The historical per-user hook dict over this backend's state."""
+        hooks = {
+            "pull": lambda uid: self.server.pull(uid)[0],
+            "local_train":
+                lambda uid, params: self.clients[uid].local_train(params)[0],
+            "evaluate": self.evaluate,
+            "v_norm": self.v_norm,
+            "eval_every": self.eval_every,
+        }
+        if self.sync:
+            hooks["sync_submit"] = self.server.submit
+            hooks["sync_aggregate"] = self.server.aggregate
+        else:
+            hooks["push"] = lambda uid, params: self.server.push(uid, params)
+        return hooks
+
+    # ------------------------------------------------------------ batched path
+    def _next_perm(self, uid: int) -> np.ndarray:
+        """The client's next epoch permutation, from its precomputed
+        bank. Banks are filled ``_bank_epochs`` at a time by consuming
+        the client's key stream exactly like ``Client.local_train`` (one
+        split per epoch), so loop and batched runs draw identical
+        per-client minibatch permutations in epoch order."""
+        bank = self._perm_bank[uid]
+        pos = int(self._bank_pos[uid])
+        if bank is None or pos >= len(bank):
+            c = self.clients[uid]
+            n_i = int(self._shard_sizes[uid])
+            if n_i:
+                # one dispatch per refill; bit-identical to per-epoch
+                # jax.random.permutation calls (pinned by the golden tests)
+                c._key, perms = _perm_bank(c._key, self._bank_epochs, n_i)
+                bank = np.asarray(perms, dtype=np.int64)
+            else:
+                # zero-shard straggler: advance the key chain anyway
+                for _ in range(self._bank_epochs):
+                    c._key, _ = jax.random.split(c._key)
+                bank = np.zeros((self._bank_epochs, 0), np.int64)
+            self._perm_bank[uid] = bank
+            pos = 0
+        self._bank_pos[uid] = pos + 1
+        return bank[pos]
+
+    @staticmethod
+    def _bucket(k: int) -> int:
+        """Smallest power of four >= k: lane-count buckets keep the jit
+        shape count at O(log_4 cohort_pad) per run while wasting at most
+        ~4x the smallest cohort's (masked-out) compute."""
+        c = 1
+        while c < k:
+            c <<= 2
+        return c
+
+    def _cohort_chunks(self, uids):
+        """Yield ``(params, shared, idx, mask, valid, k)`` chunks for a
+        finisher cohort: at most ``cohort_pad`` lanes per chunk, lane
+        count padded to a power of four, scan depth fixed at the
+        fleet-wide max steps-per-epoch — so the fused programs compile a
+        handful of stable shapes per run, not one per ragged cohort.
+        ``shared=True`` means all lanes pulled one snapshot and ``params``
+        is that single tree (broadcast in-device); otherwise ``params``
+        is a host-stacked ``(C, ...)`` tree. Per-event host work is plain
+        numpy (permutation banks, index arithmetic)."""
+        B, S = self.batch_size, self._s_max
+        uids = np.asarray(uids)
+        for c0 in range(0, len(uids), self.cohort_pad):
+            chunk = uids[c0:c0 + self.cohort_pad]
+            k = len(chunk)
+            C = self._bucket(k)
+            idx = np.zeros((C, S, B), np.int64)
+            mask = np.zeros((C, S), bool)
+            valid = np.zeros(C, bool)
+            valid[:k] = True
+            for j, uid in enumerate(chunk):
+                uid = int(uid)
+                steps = int(self._steps[uid])
+                perm = self._next_perm(uid)      # consume even if 0 steps
+                if steps:
+                    idx[j, :steps] = (self._offsets[uid]
+                                      + perm[:steps * B]).reshape(steps, B)
+                    mask[j, :steps] = True
+            lanes = [self._inflight[int(u)] for u in chunk]
+            first = lanes[0]
+            if all(l is first for l in lanes):
+                yield first, True, idx, mask, valid, k
+            else:
+                lanes.extend([first] * (C - k))  # padding lanes
+                yield tuple(lanes), False, idx, mask, valid, k
+
+    def pull_batch(self, uids, version):
+        for uid in np.asarray(uids):
+            params, _ = self.server.pull(int(uid))
+            self._inflight[int(uid)] = params
+
+    def local_train_batch(self, uids, versions=None):
+        uids = np.asarray(uids)
+        if len(uids) == 0:
+            return None
+        parts = []
+        for params, shared, idx, mask, valid, k in self._cohort_chunks(uids):
+            out = _train_chunk(params, idx, mask,
+                               self._flat_x, self._flat_y,
+                               self.eta, self.beta, shared)
+            parts.append(jax.tree.map(lambda a: a[:k], out))
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+
+    def finish_async_batch(self, uids, versions, lags, eta, beta,
+                           need_gaps=True):
+        """Fused finish (replace aggregation): each chunk is ONE device
+        dispatch covering the vmap'd cohort epoch and the ordered
+        sequential pushes; the host only updates server bookkeeping and
+        never blocks — with ``need_gaps=False`` the whole finish is
+        async dispatch (the momentum norm stays a lazy device scalar).
+        Other aggregation rules need per-push weights, so they take the
+        generic local_train_batch + push_batch path."""
+        if self.server.aggregation != "replace":
+            return super().finish_async_batch(uids, versions, lags,
+                                              eta, beta, need_gaps)
+        uids = np.asarray(uids)
+        vnorms = []
+        p, v = self.server.params, self.server._v
+        vn_out = None
+        for params, shared, idx, mask, valid, k in self._cohort_chunks(uids):
+            p, v, vn, vn_out = _finish_chunk(
+                params, idx, mask, valid, p, v,
+                self._flat_x, self._flat_y, self.eta, self.beta, shared,
+                need_norms=need_gaps)
+            if need_gaps:
+                vnorms.append(np.asarray(vn[:k], dtype=np.float64))
+        self.server.params = p
+        self.server._v = v
+        # lazy: a 0-d device scalar; v_norm() converts on demand so
+        # policies that never read it (immediate/sync) never block on it
+        self.server.v_norm = vn_out
+        for uid in uids:
+            self.server.lag_tracker.on_push(int(uid))
+            self.server.in_flight.discard(int(uid))
+        if not need_gaps:
+            return None
+        # Eq. (4) gaps against the pre-push momentum norms (loop ordering)
+        return np.asarray(gradient_gap(np.concatenate(vnorms),
+                                       np.asarray(lags), eta, beta),
+                          dtype=float)
+
+    def push_batch(self, uids, trained, lags, eta, beta):
+        gaps = np.empty(len(uids))
+        for j, uid in enumerate(np.asarray(uids)):
+            uid = int(uid)
+            # loop-oracle order: the gap uses the momentum norm *before*
+            # this push (but after every earlier finisher's in this slot)
+            gaps[j] = gradient_gap(self.v_norm(), int(lags[j]), eta, beta)
+            self.server.push(uid, jax.tree.map(lambda a: a[j], trained))
+        return gaps
+
+    def submit_batch(self, uids, trained, lags, eta, beta):
+        gaps = np.empty(len(uids))
+        for j, uid in enumerate(np.asarray(uids)):
+            uid = int(uid)
+            gaps[j] = gradient_gap(self.v_norm(), int(lags[j]), eta, beta)
+            self.server.submit(jax.tree.map(lambda a: a[j], trained))
+        return gaps
+
+    def sync_aggregate(self):
+        self.server.aggregate()
+
+    def v_norm(self) -> float:
+        # float() realizes the lazy device scalar the fused finish leaves
+        # behind; a plain float (eager loop pushes) passes through
+        return 0.0 if self.sync else float(self.server.v_norm)
+
+    def evaluate(self) -> float:
+        return float(self._acc(self.server.params))
 
 
 def make_ml_hooks(n_users: int, *, sync: bool = False, eta: float = 0.01,
@@ -25,44 +570,16 @@ def make_ml_hooks(n_users: int, *, sync: bool = False, eta: float = 0.01,
                   n_test: int = 2000, alpha: float = 100.0,
                   batch_size: int = 20, aggregation: str = "replace",
                   noise: float = 8.0, seed: int = 0):
-    """Returns (hooks dict, state dict with server/clients/eval).
+    """Returns (hooks dict, state dict with server/clients/eval/backend).
 
-    noise=8.0 calibrates cifarlike difficulty so LeNet accuracy climbs
-    gradually over many local epochs (CIFAR-10-like convergence dynamics)
-    rather than saturating after one epoch."""
-    images, labels = cifarlike_dataset(n_train, seed=seed, noise=noise)
-    test_x, test_y = cifarlike_dataset(n_test, seed=seed + 1, noise=noise)
-    shards = dirichlet_partition(labels, n_users, alpha=alpha, seed=seed)
-    clients = [Client(i, jnp.asarray(images[s]), jnp.asarray(labels[s]),
-                      lenet_loss, batch_size=batch_size, eta=eta, beta=beta)
-               for i, s in enumerate(shards)]
-    params0 = init_lenet(jax.random.PRNGKey(seed))
-    server: object
-    if sync:
-        server = SyncServer(params0)
-    else:
-        server = AsyncParameterServer(params0, eta=eta, beta=beta,
-                                      aggregation=aggregation)
-
-    test_x_j = jnp.asarray(test_x)
-    test_y_j = jnp.asarray(test_y)
-
-    @jax.jit
-    def _acc(params):
-        logits = lenet_logits(params, test_x_j)
-        return jnp.mean((jnp.argmax(logits, -1) == test_y_j)
-                        .astype(jnp.float32))
-
-    hooks = {
-        "pull": lambda uid: server.pull(uid)[0],
-        "local_train": lambda uid, params: clients[uid].local_train(params)[0],
-        "evaluate": lambda: float(_acc(server.params)),
-        "v_norm": (lambda: server.v_norm) if not sync else (lambda: 0.0),
-        "eval_every": 600,
-    }
-    if sync:
-        hooks["sync_submit"] = server.submit
-        hooks["sync_aggregate"] = server.aggregate
-    else:
-        hooks["push"] = lambda uid, params: server.push(uid, params)
-    return hooks, {"server": server, "clients": clients, "accuracy": _acc}
+    Historical loop-engine entry point, now an adapter over
+    ``LeNetBackend`` (same construction order, same rng stream, same
+    jitted per-client epoch — seeded loop runs reproduce bit-for-bit)."""
+    backend = LeNetBackend(n_users, sync=sync, eta=eta, beta=beta,
+                           n_train=n_train, n_test=n_test, alpha=alpha,
+                           batch_size=batch_size, aggregation=aggregation,
+                           noise=noise, seed=seed)
+    return backend.hooks(), {"server": backend.server,
+                             "clients": backend.clients,
+                             "accuracy": backend._acc,
+                             "backend": backend}

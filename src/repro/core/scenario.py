@@ -20,6 +20,13 @@ resolves to::
                                 fleet=SyntheticFleet(n_types=64),
                                 n_users=400, horizon_s=3600))
 
+    # REAL training coupled to the schedule (Fig. 5): ml="lenet" builds a
+    # batched LeNet backend per run; the vectorized engine trains whole
+    # finisher cohorts with one vmap'd epoch
+    r = run_experiment(Scenario(policy="online", ml="lenet",
+                                n_users=64, horizon_s=2400,
+                                app_arrival_p=0.004))
+
 Strings resolve through the registries; objects pass through as-is.
 ``run_experiment(policy="online", n_users=25)`` builds the Scenario
 inline for one-liners.
@@ -32,6 +39,7 @@ from typing import Optional, Union
 from .arrivals import ArrivalProcess, resolve_arrival_or_default
 from .fleet import Fleet, resolve_fleet
 from .policies import Policy, resolve_policy
+from .realml import BatchedMLBackend, make_backend
 from .simulator import FederatedSim, SimConfig, SimResult
 
 
@@ -40,10 +48,16 @@ class Scenario:
 
     ``policy`` is a registry name or ``Policy`` instance; ``arrivals`` /
     ``fleet`` likewise (``None`` keeps the paper defaults: Bernoulli at
-    ``app_arrival_p`` on the Table II round-robin fleet). Remaining keyword
-    arguments are ``SimConfig`` fields; alternatively pass a prebuilt
-    ``config=`` (its ``policy`` field is overridden by ``policy=`` only if
-    one is given explicitly).
+    ``app_arrival_p`` on the Table II round-robin fleet). ``ml`` couples
+    the schedule to real training: a ``core.realml`` backend name (e.g.
+    ``"lenet"``) or ``BatchedMLBackend`` instance — setting it forces
+    ``ml_mode="real"`` and ``build()`` constructs a fresh backend per run
+    (seeded from ``SimConfig.seed``, round mode matched to the policy's
+    ``sync_rounds``, training eta/beta defaulting to the config's);
+    ``ml_kwargs`` are extra backend constructor arguments (n_train,
+    batch_size, ...). Remaining keyword arguments are ``SimConfig``
+    fields; alternatively pass a prebuilt ``config=`` (its ``policy``
+    field is overridden by ``policy=`` only if one is given explicitly).
     """
 
     def __init__(self, policy: Union[str, Policy, None] = None,
@@ -51,6 +65,8 @@ class Scenario:
                  fleet: Union[str, Fleet, None] = None,
                  name: Optional[str] = None,
                  config: Optional[SimConfig] = None,
+                 ml: Union[str, BatchedMLBackend, None] = None,
+                 ml_kwargs: Optional[dict] = None,
                  **sim_kwargs):
         if config is not None:
             if sim_kwargs:
@@ -63,6 +79,14 @@ class Scenario:
         else:
             self.config = SimConfig(
                 policy="online" if policy is None else policy, **sim_kwargs)
+        if ml is not None and self.config.ml_mode != "real":
+            # requesting an ML backend IS requesting real mode
+            self.config = dataclasses.replace(self.config, ml_mode="real")
+        if ml is None and ml_kwargs:
+            raise ValueError("ml_kwargs without ml= has no effect; "
+                             "pass ml='lenet' (or a backend instance)")
+        self.ml = ml
+        self.ml_kwargs = dict(ml_kwargs or {})
         self.policy = resolve_policy(self.config.policy)
         # one resolution rule shared with FederatedSim: None/"bernoulli"
         # mean the paper process at the configured app_arrival_p
@@ -71,26 +95,45 @@ class Scenario:
         self.fleet = None if fleet is None else resolve_fleet(fleet)
         self.name = name if name is not None else self.policy.name
 
-    def build(self, ml_hooks: Optional[dict] = None) -> FederatedSim:
+    def build(self, ml_hooks: Optional[dict] = None,
+              ml_backend: Optional[BatchedMLBackend] = None) -> FederatedSim:
         """Construct the (seeded) simulator without running it."""
+        backend = ml_backend
+        if backend is None and self.ml is not None:
+            if ml_hooks is not None:
+                raise ValueError(
+                    "Scenario has ml= set; pass ml_hooks only to scenarios "
+                    "without a backend")
+            kw = dict(self.ml_kwargs)
+            kw.setdefault("eta", self.config.eta)
+            kw.setdefault("beta", self.config.beta)
+            kw.setdefault("seed", self.config.seed)
+            backend = make_backend(self.ml, self.config.n_users,
+                                   sync=self.policy.sync_rounds, **kw)
         return FederatedSim(self.config, ml_hooks=ml_hooks,
+                            ml_backend=backend,
                             arrivals=self.arrivals, fleet=self.fleet)
 
-    def run(self, ml_hooks: Optional[dict] = None) -> SimResult:
-        return self.build(ml_hooks=ml_hooks).run()
+    def run(self, ml_hooks: Optional[dict] = None,
+            ml_backend: Optional[BatchedMLBackend] = None) -> SimResult:
+        return self.build(ml_hooks=ml_hooks, ml_backend=ml_backend).run()
 
     def __repr__(self):
         arr = self.arrivals.name
         flt = self.fleet.name if self.fleet is not None else "paper"
+        ml = "" if self.ml is None else \
+            f", ml={getattr(self.ml, 'name', self.ml)!r}"
         return (f"Scenario({self.name!r}: policy={self.policy.name!r}, "
                 f"arrivals={arr!r}, fleet={flt!r}, "
                 f"n_users={self.config.n_users}, "
                 f"horizon_s={self.config.horizon_s}, "
-                f"engine={self.config.engine!r})")
+                f"engine={self.config.engine!r}{ml})")
 
 
 def run_experiment(scenario: Optional[Scenario] = None, *,
-                   ml_hooks: Optional[dict] = None, **kwargs) -> SimResult:
+                   ml_hooks: Optional[dict] = None,
+                   ml_backend: Optional[BatchedMLBackend] = None,
+                   **kwargs) -> SimResult:
     """Run a ``Scenario`` (or build one inline from kwargs) end to end."""
     if scenario is None:
         scenario = Scenario(**kwargs)
@@ -98,4 +141,4 @@ def run_experiment(scenario: Optional[Scenario] = None, *,
         raise TypeError(
             f"pass either a Scenario or Scenario kwargs, not both "
             f"(got {sorted(kwargs)})")
-    return scenario.run(ml_hooks=ml_hooks)
+    return scenario.run(ml_hooks=ml_hooks, ml_backend=ml_backend)

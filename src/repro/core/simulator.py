@@ -21,8 +21,10 @@ Engines (SimConfig.engine): this class's per-user object loop is the
 reference oracle ("loop"); "vectorized" runs the same semantics on
 struct-of-arrays batched state (core/vector_engine.py), "jax" compiles the
 horizon into one lax.scan, and "auto" (default) picks the vectorized
-engine for pure trace-mode runs. Seeded equivalence across engines is
-pinned by tests/test_sim_engines.py.
+engine for pure trace-mode runs AND for real-mode runs driven by a
+batched ml_backend (core/realml.py — vmap'd cohort training). Seeded
+equivalence across engines is pinned by tests/test_sim_engines.py and
+tests/test_real_mode.py.
 """
 from __future__ import annotations
 
@@ -153,11 +155,17 @@ def trace_v_norm(v_norm0: float, version) -> float:
 
 class FederatedSim:
     def __init__(self, cfg: SimConfig, ml_hooks: Optional[dict] = None, *,
+                 ml_backend=None,
                  arrivals: Union[str, ArrivalProcess, None] = None,
                  fleet: Union[str, Fleet, None] = None):
         """ml_hooks (real mode): {"pull": fn()->params_version, "push":
         fn(uid, params)->PushResult, "local_train": fn(uid, params)->params,
         "evaluate": fn()->acc, "sync_submit", "sync_aggregate", "v_norm": fn()->float}
+
+        ``ml_backend`` (real mode): a ``core.realml.BatchedMLBackend`` —
+        the batched alternative to ``ml_hooks`` that the vectorized engine
+        can drive cohort-at-a-time (the loop engine drives the same backend
+        through its ``hooks()`` adapter). Pass one or the other, not both.
 
         ``arrivals``/``fleet`` plug in non-paper arrival processes and
         device fleets (core/arrivals.py, core/fleet.py); the defaults —
@@ -168,7 +176,22 @@ class FederatedSim:
         self.cfg = cfg
         self.policy = resolve_policy(cfg.policy)
         self.rng = np.random.default_rng(cfg.seed)
-        self.ml = ml_hooks or {}
+        self.ml_backend = ml_backend
+        if ml_backend is not None:
+            if ml_hooks is not None:
+                raise ValueError(
+                    "pass either ml_hooks or ml_backend, not both")
+            if cfg.ml_mode != "real":
+                raise ValueError(
+                    "ml_backend requires ml_mode='real' (a backend couples "
+                    "the schedule to actual training)")
+            if getattr(ml_backend, "n_users", cfg.n_users) != cfg.n_users:
+                raise ValueError(
+                    f"ml_backend was built for {ml_backend.n_users} users; "
+                    f"config has n_users={cfg.n_users}")
+            self.ml = ml_backend.hooks()
+        else:
+            self.ml = ml_hooks or {}
         self.fleet = resolve_fleet(fleet if fleet is not None else "paper")
         self.fleet_spec = self.fleet.build(self.rng, cfg.n_users)
         self.users = [UserState(device=d) for d in self.fleet_spec.devices]
@@ -243,36 +266,44 @@ class FederatedSim:
 
     # ------------------------------------------------------------------ main
     def resolve_engine(self) -> str:
-        """Pick the engine to run: ``auto`` selects the vectorized SoA
-        engine whenever the run is pure trace mode (real-ML hooks other than
-        the slot-constant ``v_norm`` need the per-user object loop) and the
-        policy implements the vectorized hook. The jax backend covers
-        hook-free trace runs of jax-capable policies only — with a policy
-        lacking the jax hook (e.g. offline: knapsack DP cannot live inside
-        lax.scan) or a ``v_norm`` hook (a Python callback cannot run under
-        the scan) it degrades to the numpy engine, which honors both."""
+        """Pick the engine to run. The vectorized SoA engine covers two
+        regimes: pure trace mode (real-ML *hooks* other than the
+        slot-constant ``v_norm`` need the per-user object loop) and real
+        mode driven by a batched ``ml_backend`` (core/realml.py), whose
+        cohort-level entry points the engine dispatches once per slot.
+        ``auto`` selects it whenever the policy implements the vectorized
+        hook; real mode with per-user hooks (or no backend) stays on the
+        loop oracle. The jax backend covers hook-free trace runs of
+        jax-capable policies only — with a policy lacking the jax hook
+        (e.g. offline: knapsack DP cannot live inside lax.scan), a
+        ``v_norm`` hook, or an ml_backend (Python callbacks cannot run
+        under the scan) it degrades to the numpy engine, which honors
+        all three."""
         cfg = self.cfg
         pol = self.policy
-        vec_ok = cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}
+        vec_ok = (cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}) \
+            or (cfg.ml_mode == "real" and self.ml_backend is not None)
         engine = cfg.engine
         if engine == "auto":
             return "vectorized" if (vec_ok and pol.supports_vectorized) \
                 else "loop"
         if engine in ("vectorized", "jax") and not vec_ok:
             raise ValueError(
-                f"engine={engine!r} supports only trace-mode runs "
-                "without per-user ML hooks; use engine='loop' (or "
-                "'auto') for ml_mode='real'")
+                f"engine={engine!r} supports trace-mode runs without "
+                "per-user ML hooks, or ml_mode='real' with a batched "
+                "ml_backend; use engine='loop' (or 'auto') for "
+                "hook-based real-ML runs")
         if engine == "vectorized" and not pol.supports_vectorized:
             raise ValueError(
                 f"policy {pol.name!r} implements no vectorized hook; "
                 "use engine='loop' (or 'auto')")
         if engine == "jax":
-            if pol.supports_jax and not self.ml:
+            if pol.supports_jax and not self.ml and self.ml_backend is None:
                 return "jax"
             # degrade in capability order: numpy SoA if the policy has the
-            # hook (offline, greedy, or any policy under a v_norm
-            # callback), else the loop oracle, which runs everything
+            # hook (offline, greedy, any policy under a v_norm callback,
+            # or any real-mode backend run), else the loop oracle, which
+            # runs everything
             return "vectorized" if pol.supports_vectorized else "loop"
         return engine
 
@@ -359,8 +390,9 @@ class FederatedSim:
                 trace_E.append(sum(u.energy_j for u in self.users))
                 trace_Q.append(self.sched.Q)
                 trace_H.append(self.sched.H)
-            if self.ml.get("evaluate") and t % self.ml.get("eval_every", 600) == 0 \
-                    and t > 0:
+            eval_every = self.ml.get("eval_every", 600)
+            if self.ml.get("evaluate") and eval_every and \
+                    t % eval_every == 0 and t > 0:
                 accuracy.append((t, self.ml["evaluate"]()))
 
         if self.ml.get("evaluate"):

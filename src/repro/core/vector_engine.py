@@ -14,6 +14,13 @@ batched state as ``_NumpyEngine`` attributes and calls the policy's
 ``decide_vectorized`` hook once per slot; registered paper policies and
 any custom policy with the hook run here unmodified.
 
+Real-ML runs are batched too (core/realml.py): with an ``ml_backend`` the
+engine snapshots pulls per starting cohort (``pull_batch``) and, when a
+slot's trainers finish, dispatches ONE vmap'd local-train over the whole
+finisher cohort followed by ordered server pushes
+(``_finish_cohort``) — instead of the loop engine's n Python callbacks.
+Accuracy is sampled on the same cadence as the loop oracle.
+
 Equivalence contract: seeded runs reproduce the reference loop engine
 (``FederatedSim._run_loop``) — identical decision sequences, update counts,
 push logs and queue traces; energies match to float-sum reordering
@@ -96,6 +103,9 @@ class _NumpyEngine:
         self.sched = sim.sched             # queue state (Q, H) + decide_batch
         self.policy = sim.policy
         self._v_hook = sim.ml.get("v_norm")
+        # batched real-ML backend (core/realml.py): pull/train/push whole
+        # cohorts instead of per-user callbacks; None for trace runs
+        self.backend = sim.ml_backend
         self.ar = np.arange(self.n)
 
         # ---- per-user state, struct-of-arrays -------------------------
@@ -133,6 +143,26 @@ class _NumpyEngine:
             return self._v_hook()
         return trace_v_norm(self.cfg.v_norm0, ver)
 
+    def _finish_cohort(self, fidx, lags):
+        """Real-ML finish: one batched local-train for the slot's whole
+        finisher cohort, then sequential server application in user order
+        (the loop oracle's push ordering — each finisher's Eq. (4) gap
+        sees the momentum norm left by the previous one). Returns the
+        per-finisher gaps for the push log."""
+        b = self.backend
+        cfg = self.cfg
+        if b.sync == self.policy.sync_rounds:
+            if b.sync:
+                trained = b.local_train_batch(fidx, self.pulled_at[fidx])
+                return b.submit_batch(fidx, trained, lags, cfg.eta, cfg.beta)
+            return b.finish_async_batch(fidx, self.pulled_at[fidx], lags,
+                                        cfg.eta, cfg.beta,
+                                        need_gaps=cfg.collect_push_log)
+        # policy/backend round-mode mismatch: the loop oracle finds no
+        # matching hook and skips training; keep the log gaps consistent
+        return np.asarray(gradient_gap(b.v_norm(), lags, cfg.eta, cfg.beta),
+                          dtype=float)
+
     def begin_training(self, idx):
         """idx: user indices starting training this slot (corun iff app)."""
         ha = self.app[idx] >= 0
@@ -142,6 +172,8 @@ class _NumpyEngine:
         self.mode[idx] = MODE_TRAIN
         self.pulled_at[idx] = self.version
         self.in_flight += len(idx)
+        if self.backend is not None:
+            self.backend.pull_batch(np.asarray(idx), self.version)
 
     def run(self) -> SimResult:
         cfg = self.cfg
@@ -159,6 +191,9 @@ class _NumpyEngine:
         trace_E: List[float] = []
         trace_Q: List[float] = []
         trace_H: List[float] = []
+        accuracy: List[Tuple] = []
+        eval_every = self.backend.eval_every if self.backend is not None \
+            else 0
         # push log collected as per-slot array chunks, expanded at the end
         push_chunks: List[Tuple] = []
 
@@ -208,17 +243,25 @@ class _NumpyEngine:
                 fidx = np.nonzero(fin)[0]
                 k = len(fidx)
                 if k:
+                    gaps = None
                     if policy.sync_rounds:
                         lags = self.version - self.pulled_at[fidx]
-                        vns = self.v_norm(self.version)
+                        if self.backend is None and cfg.collect_push_log:
+                            gaps = gradient_gap(self.v_norm(self.version),
+                                                lags, cfg.eta, cfg.beta)
                     else:
                         # async finishers bump the version one by one, in
                         # user order — each sees the versions of earlier
                         # finishers
                         vers = self.version + np.arange(k)
                         lags = vers - self.pulled_at[fidx]
-                        vns = self.v_norm(vers)
+                        if self.backend is None and cfg.collect_push_log:
+                            gaps = gradient_gap(self.v_norm(vers), lags,
+                                                cfg.eta, cfg.beta)
                         self.version += k
+                    if self.backend is not None:
+                        # one vmap'd local-train + ordered server pushes
+                        gaps = self._finish_cohort(fidx, lags)
                     self.updates[fidx] += 1
                     mode[fidx] = MODE_COOL
                     self.cooldown[fidx] = cfg.ready_delay
@@ -226,13 +269,14 @@ class _NumpyEngine:
                     self.in_flight -= k
                     corun_updates += int(np.count_nonzero(self.corun[fidx]))
                     if cfg.collect_push_log:
-                        gaps = gradient_gap(vns, lags, cfg.eta, cfg.beta)
                         push_chunks.append((t, fidx, lags, gaps,
                                             self.corun[fidx].copy()))
             if policy.sync_rounds and self.round_open and \
                     not np.any(mode == MODE_TRAIN):
                 self.round_open = False
                 self.version += 1
+                if self.backend is not None and self.backend.sync:
+                    self.backend.sync_aggregate()
 
             # --- energy accounting (Eq. 10) --------------------------------
             training = mode == MODE_TRAIN
@@ -252,7 +296,11 @@ class _NumpyEngine:
                 trace_E.append(float(self.energy.sum()))
                 trace_Q.append(sched.Q)
                 trace_H.append(sched.H)
+            if eval_every and t % eval_every == 0 and t > 0:
+                accuracy.append((t, self.backend.evaluate()))
 
+        if self.backend is not None:
+            accuracy.append((T, self.backend.evaluate()))
         push_log = []
         for t, fidx, lags, gaps, cor in push_chunks:
             for j in range(len(fidx)):
@@ -265,7 +313,7 @@ class _NumpyEngine:
             updates=updates_total,
             trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
             trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
-            push_log=push_log, accuracy=[],
+            push_log=push_log, accuracy=accuracy,
             mean_Q=sum_Q / T if T else 0.0,
             mean_H=sum_H / T if T else 0.0,
             corun_fraction=corun_updates / max(updates_total, 1))

@@ -1,0 +1,129 @@
+"""Property-based tests for ``ArrivalProcess`` implementations.
+
+Every registered process must uphold the engine contract regardless of
+parameters: ``sample`` returns a boolean ``(T, n_users)`` mask plus an
+app-choice array of the same shape with every entry in
+``[0, len(APPS))`` — out-of-range choices would index the catalog tables
+from the end (numpy) or clamp (jax gather), silently corrupting energy
+accounting. ``TraceArrivals`` must replay any recorded schedule
+round-trip, including wrap-around for shorter traces.
+
+Uses the real ``hypothesis`` when installed (requirements-dev.txt);
+otherwise conftest.py installs the deterministic stub so these still
+collect and run boundary + sampled cases.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.arrivals import (BernoulliArrivals, DiurnalArrivals,
+                                 MarkovModulatedArrivals, TraceArrivals,
+                                 registered_arrivals, resolve_arrival)
+from repro.core.energy import APPS
+
+COMMON = dict(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+def check_contract(proc, T, n_users, seed):
+    rng = np.random.default_rng(seed)
+    sched, choice = proc.sample(rng, T, n_users, len(APPS))
+    sched = np.asarray(sched)
+    choice = np.asarray(choice)
+    assert sched.shape == (T, n_users)
+    assert choice.shape == (T, n_users)
+    assert sched.dtype == np.bool_
+    assert np.issubdtype(choice.dtype, np.integer)
+    if T and n_users:
+        assert choice.min() >= 0
+        assert choice.max() < len(APPS)
+    return sched, choice
+
+
+class TestSampleContract:
+    @settings(max_examples=25, **COMMON)
+    @given(T=st.integers(0, 400), n=st.integers(1, 40),
+           p=st.floats(0.0, 1.0), seed=st.integers(0, 2 ** 20))
+    def test_bernoulli(self, T, n, p, seed):
+        sched, _ = check_contract(BernoulliArrivals(p), T, n, seed)
+        if p == 0.0:
+            assert not sched.any()
+        if p == 1.0 and T:
+            assert sched.all()
+
+    @settings(max_examples=25, **COMMON)
+    @given(T=st.integers(0, 400), n=st.integers(1, 40),
+           p=st.floats(0.0, 0.5), depth=st.floats(0.0, 1.0),
+           period=st.floats(1.0, 1e5), phase=st.floats(0.0, 0.99),
+           seed=st.integers(0, 2 ** 20))
+    def test_diurnal(self, T, n, p, depth, period, phase, seed):
+        proc = DiurnalArrivals(p_mean=p, depth=depth, period_s=period,
+                               phase=phase)
+        check_contract(proc, T, n, seed)
+        rate = proc.rate(T)
+        assert rate.shape == (T,)
+        assert (rate >= 0.0).all() and (rate <= 1.0).all()
+
+    @settings(max_examples=20, **COMMON)
+    @given(T=st.integers(0, 250), n=st.integers(1, 30),
+           p_calm=st.floats(0.0, 1.0), p_burst=st.floats(0.0, 1.0),
+           start=st.floats(0.0, 1.0), stop=st.floats(0.0, 1.0),
+           seed=st.integers(0, 2 ** 20))
+    def test_bursty(self, T, n, p_calm, p_burst, start, stop, seed):
+        proc = MarkovModulatedArrivals(p_calm=p_calm, p_burst=p_burst,
+                                       burst_start=start, burst_stop=stop)
+        check_contract(proc, T, n, seed)
+
+    @settings(max_examples=15, **COMMON)
+    @given(T=st.integers(1, 200), n=st.integers(1, 16),
+           seed=st.integers(0, 2 ** 20))
+    def test_registered_default_instances(self, T, n, seed):
+        for name in registered_arrivals():
+            if name == "trace":       # needs a recorded schedule
+                continue
+            check_contract(resolve_arrival(name), T, n, seed)
+
+
+class TestTraceRoundTrip:
+    @settings(max_examples=25, **COMMON)
+    @given(Tr=st.integers(1, 120), T=st.integers(1, 300),
+           n=st.integers(1, 12), p=st.floats(0.0, 0.3),
+           seed=st.integers(0, 2 ** 20))
+    def test_replay_wraps_and_preserves(self, Tr, T, n, p, seed):
+        rng = np.random.default_rng(seed)
+        base = rng.random((Tr, n)) < p
+        choice = rng.integers(0, len(APPS), (Tr, n))
+        proc = TraceArrivals(base, choice)
+        sched, ch = check_contract(proc, T, n, seed + 1)
+        reps = -(-T // Tr)
+        np.testing.assert_array_equal(sched,
+                                      np.tile(base, (reps, 1))[:T])
+        np.testing.assert_array_equal(ch,
+                                      np.tile(choice, (reps, 1))[:T])
+
+    @settings(max_examples=10, **COMMON)
+    @given(seed=st.integers(0, 2 ** 20))
+    def test_from_sim_round_trip(self, seed):
+        """Snapshot a constructed sim's schedule, replay it through a new
+        sim, and the replayed arrivals must be draw-for-draw identical."""
+        from repro.core.simulator import FederatedSim, SimConfig
+        cfg = SimConfig(policy="immediate", n_users=6, horizon_s=300,
+                        app_arrival_p=0.02, seed=seed)
+        sim = FederatedSim(cfg)
+        replay = TraceArrivals.from_sim(sim)
+        sim2 = FederatedSim(cfg, arrivals=replay)
+        np.testing.assert_array_equal(sim2.app_sched, sim.app_sched)
+        np.testing.assert_array_equal(sim2.app_choice, sim.app_choice)
+
+    def test_user_axis_mismatch_raises(self):
+        proc = TraceArrivals(np.zeros((10, 4), dtype=bool))
+        with pytest.raises(ValueError, match="users"):
+            proc.sample(np.random.default_rng(0), 10, 5, len(APPS))
+
+    def test_out_of_range_choice_raises(self):
+        sched = np.zeros((5, 2), dtype=bool)
+        choice = np.full((5, 2), len(APPS))
+        proc = TraceArrivals(sched, choice)
+        with pytest.raises(ValueError, match="choices"):
+            proc.sample(np.random.default_rng(0), 5, 2, len(APPS))

@@ -1,0 +1,107 @@
+"""Engine-dispatch matrix: every (engine x ml_mode x policy) combination
+either resolves to a documented engine or raises the documented error.
+
+``FederatedSim.resolve_engine`` encodes the fallback rules this repo's
+engines rely on (and which the batched real-ML path relaxed):
+
+* trace mode, no hooks: ``auto`` -> vectorized when the policy has the
+  hook; ``jax`` degrades to vectorized for policies without a jax hook
+  (offline, greedy).
+* real mode WITH a batched ml_backend: vectorized-capable — ``auto`` and
+  ``vectorized`` run the batched engine, ``jax`` degrades to vectorized
+  (Python callbacks cannot live inside lax.scan), ``loop`` drives the
+  same backend through its hooks() adapter.
+* real mode WITHOUT a backend (per-user hooks or nothing): loop only —
+  ``vectorized``/``jax`` raise ValueError.
+
+Each resolvable combination is also *run* for a short horizon, so the
+matrix pins behaviour, not just the resolver's return value.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policies import registered_policies, resolve_policy
+from repro.core.realml import LeNetBackend
+from repro.core.simulator import ENGINES, FederatedSim, SimConfig
+
+ALL_POLICIES = registered_policies()
+
+TINY_ML = dict(n_train=64, n_test=32, seed=0, eval_every=300)
+
+
+def expected_engine(engine: str, ml_mode: str, policy: str,
+                    with_backend: bool):
+    """The documented resolution, or ValueError when the combo must
+    raise. Mirrors the docstring of FederatedSim.resolve_engine."""
+    pol = resolve_policy(policy)
+    vec_ok = ml_mode == "trace" or with_backend
+    if engine == "auto":
+        return "vectorized" if (vec_ok and pol.supports_vectorized) \
+            else "loop"
+    if engine == "loop":
+        return "loop"
+    if not vec_ok:
+        return ValueError
+    if engine == "vectorized":
+        return "vectorized" if pol.supports_vectorized else ValueError
+    # engine == "jax": real-mode backends and hook-less trace differ
+    if ml_mode == "real":
+        return "vectorized" if pol.supports_vectorized else "loop"
+    return "jax" if pol.supports_jax else (
+        "vectorized" if pol.supports_vectorized else "loop")
+
+
+def build(engine, ml_mode, policy):
+    n = 4
+    backend = None
+    if ml_mode == "real":
+        backend = LeNetBackend(n, sync=resolve_policy(policy).sync_rounds,
+                               **TINY_ML)
+    cfg = SimConfig(policy=policy, engine=engine, ml_mode=ml_mode,
+                    n_users=n, horizon_s=60, app_arrival_p=0.01, seed=3,
+                    collect_push_log=False)
+    return FederatedSim(cfg, ml_backend=backend)
+
+
+class TestDispatchMatrix:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    @pytest.mark.parametrize("ml_mode", ("trace", "real"))
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_resolution_and_run(self, engine, ml_mode, policy):
+        exp = expected_engine(engine, ml_mode, policy,
+                              with_backend=(ml_mode == "real"))
+        sim = build(engine, ml_mode, policy)
+        if exp is ValueError:
+            with pytest.raises(ValueError):
+                sim.run()
+            return
+        assert sim.resolve_engine() == exp
+        r = sim.run()         # the combination must actually execute
+        assert np.isfinite(r.energy_j) and r.energy_j > 0
+
+    @pytest.mark.parametrize("engine", ("vectorized", "jax"))
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_real_mode_without_backend_raises(self, engine, policy):
+        """The pre-backend rule survives: hook-based (or hook-less) real
+        mode cannot run on the batched engines."""
+        cfg = SimConfig(policy=policy, engine=engine, ml_mode="real",
+                        n_users=4, horizon_s=60)
+        with pytest.raises(ValueError, match="ml_backend|trace"):
+            FederatedSim(cfg).run()
+
+    def test_real_mode_auto_without_backend_is_loop(self):
+        cfg = SimConfig(policy="online", ml_mode="real", n_users=4,
+                        horizon_s=60)
+        assert FederatedSim(cfg).resolve_engine() == "loop"
+
+    def test_trace_mode_hooks_still_force_loop(self):
+        """Per-user hooks other than v_norm keep trace mode on the
+        loop engine under auto (unchanged rule)."""
+        cfg = SimConfig(policy="online", n_users=4, horizon_s=60)
+        sim = FederatedSim(cfg, ml_hooks={"pull": lambda uid: None})
+        assert sim.resolve_engine() == "loop"
+
+    def test_v_norm_hook_keeps_vectorized(self):
+        cfg = SimConfig(policy="online", n_users=4, horizon_s=60)
+        sim = FederatedSim(cfg, ml_hooks={"v_norm": lambda: 1.0})
+        assert sim.resolve_engine() == "vectorized"

@@ -1,0 +1,255 @@
+"""Real-ML mode: golden oracle pins + batched-engine parity.
+
+The loop engine (``FederatedSim._run_loop`` driving per-user hooks) is the
+ground truth for real-mode runs; this module pins it two ways:
+
+* ``tests/data/real_mode_golden.json`` — seeded loop-engine trajectories
+  (update counts, total energy, schedule digest, accuracy points) at
+  n_users=4 on a short horizon, regenerated with
+  ``PYTHONPATH=src python tests/test_real_mode.py``. Guards against
+  accidental semantic drift of the oracle itself.
+* loop-vs-vectorized parity — the batched backend path
+  (``core/realml.LeNetBackend`` driven cohort-at-a-time by
+  ``core/vector_engine``) must reproduce the oracle's schedule decisions
+  EXACTLY and its float metrics within tolerance.
+
+Tolerances, documented: under the paper's queue regime (L_b large, H == 0)
+every pinned policy's schedule is independent of the momentum norm — sync /
+immediate trivially, online because the H*gap term vanishes from the
+argmin — so schedule equality is exact by construction, and energy (a pure
+function of the schedule) matches to float-sum reordering (rtol 1e-9).
+Training itself runs as one vmap'd XLA program per cohort instead of k
+per-client programs, which is NOT guaranteed bit-identical, so
+accuracy points and Eq. (4) gap values carry an absolute tolerance
+(accuracy is quantized at 1/n_test; 0.03 absorbs a couple of flipped test
+samples across platforms). The offline policy's knapsack reads the evolving
+momentum norm, so its cross-engine check compares update counts and energy
+rather than the per-push digest.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.realml import LeNetBackend
+from repro.core.simulator import FederatedSim, SimConfig
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "real_mode_golden.json")
+
+# Short-horizon, 4-user setup: small V so the online policy's Q threshold
+# (Q >= V * (P_sched - P_idle) * t_d, Eq. 22) is reachable within the
+# horizon, L_b at the paper's relaxed default so H stays 0 and schedule
+# decisions are momentum-norm independent (see module docstring).
+SIM_KW = dict(n_users=4, horizon_s=900, app_arrival_p=0.004, seed=0,
+              ml_mode="real", V=5.0)
+ML_KW = dict(n_train=256, n_test=128, seed=0, eval_every=300)
+GOLDEN_POLICIES = ("online", "immediate", "sync")
+
+
+def run_real(policy: str, engine: str, sim_kw=None, ml_kw=None):
+    sim_kw = dict(SIM_KW, **(sim_kw or {}))
+    ml_kw = dict(ML_KW, **(ml_kw or {}))
+    backend = LeNetBackend(sim_kw["n_users"], sync=(policy == "sync"),
+                           **ml_kw)
+    cfg = SimConfig(policy=policy, engine=engine, **sim_kw)
+    return FederatedSim(cfg, ml_backend=backend).run()
+
+
+def schedule_digest(push_log) -> str:
+    """Digest of the schedule-determined push fields (no floats)."""
+    payload = json.dumps([(e["t"], e["user"], e["lag"], e["corun"])
+                          for e in push_log]).encode()
+    return hashlib.sha256(payload).hexdigest()
+
+
+def summarize(r) -> dict:
+    return {
+        "updates": r.updates,
+        "energy_j": r.energy_j,
+        "mean_Q": r.mean_Q,
+        "corun_fraction": r.corun_fraction,
+        "n_push": len(r.push_log),
+        "schedule_sha256": schedule_digest(r.push_log),
+        "accuracy": [[int(t), float(a)] for t, a in r.accuracy],
+    }
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """One loop + one vectorized run per pinned policy (module-cached:
+    real training is the slow part of this file)."""
+    return {(p, e): run_real(p, e)
+            for p in GOLDEN_POLICIES for e in ("loop", "vectorized")}
+
+
+class TestGoldenOracle:
+    @pytest.mark.parametrize("policy", GOLDEN_POLICIES)
+    def test_loop_matches_golden(self, golden, runs, policy):
+        g = golden[policy]
+        s = summarize(runs[(policy, "loop")])
+        assert s["updates"] == g["updates"]
+        assert s["n_push"] == g["n_push"]
+        assert s["schedule_sha256"] == g["schedule_sha256"]
+        assert s["energy_j"] == pytest.approx(g["energy_j"], rel=1e-9)
+        assert s["mean_Q"] == pytest.approx(g["mean_Q"], rel=1e-9)
+        assert s["corun_fraction"] == pytest.approx(g["corun_fraction"])
+        assert [t for t, _ in s["accuracy"]] == [t for t, _ in g["accuracy"]]
+        np.testing.assert_allclose([a for _, a in s["accuracy"]],
+                                   [a for _, a in g["accuracy"]],
+                                   atol=0.03)
+
+    @pytest.mark.parametrize("policy", GOLDEN_POLICIES)
+    def test_vectorized_matches_golden(self, golden, runs, policy):
+        """The batched engine reproduces the pinned schedule exactly and
+        the float metrics within the documented tolerance."""
+        g = golden[policy]
+        s = summarize(runs[(policy, "vectorized")])
+        assert s["updates"] == g["updates"]
+        assert s["schedule_sha256"] == g["schedule_sha256"]
+        assert s["energy_j"] == pytest.approx(g["energy_j"], rel=1e-9)
+        np.testing.assert_allclose([a for _, a in s["accuracy"]],
+                                   [a for _, a in g["accuracy"]],
+                                   atol=0.03)
+
+    @pytest.mark.parametrize("policy", GOLDEN_POLICIES)
+    def test_engine_parity(self, runs, policy):
+        """Loop vs vectorized, same process: schedule bit-for-bit, gaps
+        and accuracy within float tolerance, queue traces equal."""
+        a = runs[(policy, "loop")]
+        b = runs[(policy, "vectorized")]
+        assert a.updates == b.updates
+        assert b.energy_j == pytest.approx(a.energy_j, rel=1e-9)
+        assert b.mean_Q == pytest.approx(a.mean_Q, rel=1e-9, abs=1e-12)
+        assert b.corun_fraction == pytest.approx(a.corun_fraction)
+        np.testing.assert_array_equal(a.trace_t, b.trace_t)
+        np.testing.assert_allclose(b.trace_energy, a.trace_energy,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(b.trace_Q, a.trace_Q, rtol=1e-9,
+                                   atol=1e-12)
+        assert [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in a.push_log] == \
+               [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in b.push_log]
+        np.testing.assert_allclose([e["gap"] for e in b.push_log],
+                                   [e["gap"] for e in a.push_log],
+                                   rtol=1e-6, atol=1e-9)
+        assert [t for t, _ in a.accuracy] == [t for t, _ in b.accuracy]
+        np.testing.assert_allclose([x for _, x in b.accuracy],
+                                   [x for _, x in a.accuracy], atol=0.03)
+
+
+class TestBeyondGolden:
+    def test_offline_engine_parity(self):
+        """Offline's knapsack reads the evolving momentum norm, so only
+        schedule-aggregate metrics are compared across engines (the
+        per-push digest could legitimately differ across XLA programs)."""
+        a = run_real("offline", "loop")
+        b = run_real("offline", "vectorized")
+        assert a.updates == b.updates
+        assert b.energy_j == pytest.approx(a.energy_j, rel=1e-6)
+        assert [t for t, _ in a.accuracy] == [t for t, _ in b.accuracy]
+        np.testing.assert_allclose([x for _, x in b.accuracy],
+                                   [x for _, x in a.accuracy], atol=0.03)
+
+    def test_same_slot_full_cohort(self):
+        """Batched-dispatch worst case: a uniform fleet with no apps makes
+        every user finish in the same slot — one vmap'd cohort of the whole
+        fleet — and the schedule still matches the oracle exactly."""
+        from repro.core import TESTBED, CustomCatalogFleet
+        fleet = CustomCatalogFleet([TESTBED["Pixel2"]])
+        kw = dict(n_users=4, horizon_s=500, app_arrival_p=0.0, seed=0,
+                  ml_mode="real")
+        res = {}
+        for engine in ("loop", "vectorized"):
+            backend = LeNetBackend(4, sync=False, **ML_KW)
+            cfg = SimConfig(policy="immediate", engine=engine, **kw)
+            res[engine] = FederatedSim(cfg, ml_backend=backend,
+                                       fleet=fleet).run()
+        a, b = res["loop"], res["vectorized"]
+        # all four finish together: each push slot carries the full cohort
+        slots = [e["t"] for e in a.push_log]
+        assert a.updates == 8 and len(set(slots)) == 2
+        assert schedule_digest(a.push_log) == schedule_digest(b.push_log)
+        assert b.energy_j == pytest.approx(a.energy_j, rel=1e-9)
+        np.testing.assert_allclose([x for _, x in b.accuracy],
+                                   [x for _, x in a.accuracy], atol=0.03)
+
+    def test_scenario_ml_threading(self):
+        """Scenario(ml="lenet") builds a fresh backend per run, forces
+        ml_mode='real', matches the policy's round mode, and auto-selects
+        the vectorized engine."""
+        from repro.core import Scenario
+        scn = Scenario(policy="sync", ml="lenet", ml_kwargs=ML_KW,
+                       n_users=4, horizon_s=600, app_arrival_p=0.004,
+                       seed=0)
+        assert scn.config.ml_mode == "real"
+        sim = scn.build()
+        assert sim.ml_backend.sync is True
+        assert sim.ml_backend.n_users == 4
+        assert sim.resolve_engine() == "vectorized"
+        r = sim.run()
+        assert r.accuracy and r.accuracy[-1][0] == 600
+        # a second build must not reuse consumed server state
+        assert scn.build().ml_backend is not sim.ml_backend
+
+    def test_scenario_rejects_ml_kwargs_without_ml(self):
+        from repro.core import Scenario
+        with pytest.raises(ValueError, match="ml_kwargs"):
+            Scenario(policy="online", ml_kwargs={"n_train": 64})
+
+    def test_backend_requires_real_mode(self):
+        backend = LeNetBackend(4, **ML_KW)
+        with pytest.raises(ValueError, match="real"):
+            FederatedSim(SimConfig(n_users=4), ml_backend=backend)
+
+    def test_backend_n_users_mismatch(self):
+        backend = LeNetBackend(4, **ML_KW)
+        cfg = SimConfig(n_users=8, ml_mode="real")
+        with pytest.raises(ValueError, match="n_users"):
+            FederatedSim(cfg, ml_backend=backend)
+
+    def test_hooks_and_backend_mutually_exclusive(self):
+        backend = LeNetBackend(4, **ML_KW)
+        cfg = SimConfig(n_users=4, ml_mode="real")
+        with pytest.raises(ValueError, match="not both"):
+            FederatedSim(cfg, ml_hooks={"v_norm": lambda: 1.0},
+                         ml_backend=backend)
+
+    def test_make_ml_hooks_is_backend_adapter(self):
+        """The historical entry point now rides on LeNetBackend — same
+        server/client objects, same hook keys as the pre-backend dict."""
+        from repro.core.realml import make_ml_hooks
+        hooks, state = make_ml_hooks(4, n_train=256, n_test=128)
+        assert {"pull", "local_train", "push", "evaluate",
+                "v_norm", "eval_every"} <= set(hooks)
+        assert state["backend"].server is state["server"]
+        hooks_s, state_s = make_ml_hooks(2, sync=True, n_train=128,
+                                         n_test=64)
+        assert {"sync_submit", "sync_aggregate"} <= set(hooks_s)
+        assert "push" not in hooks_s
+
+
+def regenerate():
+    golden = {}
+    for policy in GOLDEN_POLICIES:
+        r = run_real(policy, "loop")
+        golden[policy] = summarize(r)
+        print(f"{policy}: updates={r.updates} "
+              f"energy={r.energy_j:.3f} acc={golden[policy]['accuracy']}")
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    regenerate()
