@@ -7,7 +7,11 @@ acceptance floor is 10x). Two sweeps:
 
 * cohort-size sweep (online policy) over SIZES — the scaling headline;
 * policy sweep at n_users=400 over every registry policy x engine pair the
-  policy supports (jax rows appear only for jax-capable policies).
+  policy supports (jax rows appear only for jax-capable policies);
+* fleet-scale sweep: the jax engine at n_users=100k, push-log collection
+  ON vs OFF — the streamed fixed-width event buffer must keep fleet-scale
+  logging feasible (memory stays O(jax_chunk), never O(T * n); the rows
+  record the push count so the log-on overhead is attributable).
 
 The loop engine is skipped at cohort sizes where it would dominate the
 suite's wall-clock; the jax engine reports compile and steady-state times
@@ -27,30 +31,37 @@ from repro.core.simulator import FederatedSim, SimConfig
 
 SIZES = (25, 400, 2500, 10000)
 POLICY_SWEEP_N = 400
+FLEET_N = 100_000
 JSON_PATH = "BENCH_sim_scale.json"
 
 
-def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0):
-    # push-log collection off for every engine so the comparison measures
-    # engine speed, not log-building (jax cannot collect one regardless)
+def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
+              collect_push_log: bool = False):
+    # push-log collection off by default so the engine comparison measures
+    # engine speed, not log-building; the fleet sweep flips it on to price
+    # the streamed event buffer
     cfg = SimConfig(policy=policy, n_users=n, horizon_s=horizon,
-                    engine=engine, seed=seed, collect_push_log=False)
+                    engine=engine, seed=seed,
+                    collect_push_log=collect_push_log)
     sim = FederatedSim(cfg)
     t0 = time.perf_counter()
     r = sim.run()
     return time.perf_counter() - t0, r
 
 
-def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall):
+def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
+         push_log=False):
     return {
         "bench": "sim_scale", "sweep": sweep, "policy": policy,
         "engine": engine, "n_users": n, "horizon_s": horizon,
+        "push_log": push_log,
         "wall_s": round(wall, 3),
         "slots_per_s": round(horizon / wall, 1),
         "user_slots_per_s": round(n * horizon / wall, 0),
         "compile_s": compile_s,
         "speedup_vs_loop": round(loop_wall / wall, 1) if loop_wall else "",
         "updates": r.updates,
+        "n_push": len(r.push_log),
         "energy_kj": round(r.energy_j / 1e3, 2),
     }
 
@@ -107,6 +118,17 @@ def run(fast: bool = True):
             wall = bench("policy", policy, engine, POLICY_SWEEP_N, loop_wall)
             if engine == "loop":
                 loop_wall = wall
+
+    # --- fleet-scale sweep: jax engine, n=100k, push-log on vs off -------
+    fleet_horizon = 300 if fast else 1800
+    for collect in (False, True):
+        t_first, _ = _time_run("online", "jax", FLEET_N, fleet_horizon,
+                               collect_push_log=collect)
+        wall, r = _time_run("online", "jax", FLEET_N, fleet_horizon,
+                            collect_push_log=collect)
+        rows.append(_row("fleet", "online", "jax", FLEET_N, fleet_horizon,
+                         wall, r, round(t_first - wall, 2), None,
+                         push_log=collect))
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,

@@ -10,6 +10,7 @@ from .arrivals import (ArrivalProcess, BernoulliArrivals, DiurnalArrivals,
 from .energy import (APPS, DEVICE_NAMES, TESTBED, AppProfile, DeviceProfile,
                      DeviceTables, build_tables, catalog_tables, device_ids,
                      table2_savings)
+from .engine_state import EVENT_FIELDS, EngineState, PushBuffer, PushLog
 from .fleet import (CustomCatalogFleet, Fleet, FleetSpec, PaperFleet,
                     SyntheticFleet, register_fleet, registered_fleets,
                     resolve_fleet)
@@ -33,6 +34,7 @@ __all__ = [
     "APPS", "DEVICE_NAMES", "TESTBED", "AppProfile", "DeviceProfile",
     "DeviceTables", "build_tables", "catalog_tables", "device_ids",
     "table2_savings",
+    "EVENT_FIELDS", "EngineState", "PushBuffer", "PushLog",
     "ArrivalProcess", "BernoulliArrivals", "DiurnalArrivals",
     "MarkovModulatedArrivals", "TraceArrivals",
     "register_arrival", "registered_arrivals", "resolve_arrival",

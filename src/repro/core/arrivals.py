@@ -67,12 +67,11 @@ def resolve_arrival(arrivals) -> ArrivalProcess:
                      f"got {type(arrivals).__name__}")
 
 
-def resolve_arrival_or_default(arrivals, app_arrival_p: float
-                               ) -> "ArrivalProcess":
+def resolve_arrival_or_default(arrivals, app_arrival_p) -> "ArrivalProcess":
     """The simulator-facing resolution rule, in ONE place: ``None`` or the
     name ``"bernoulli"`` mean the paper's process at the *configured*
-    ``app_arrival_p`` (never bernoulli's stock 0.001); anything else
-    resolves normally."""
+    ``app_arrival_p`` — scalar or per-user ``(n_users,)`` rate vector
+    (never bernoulli's stock 0.001); anything else resolves normally."""
     if arrivals is None or arrivals == "bernoulli":
         return BernoulliArrivals(app_arrival_p)
     return resolve_arrival(arrivals)
@@ -82,6 +81,12 @@ def resolve_arrival_or_default(arrivals, app_arrival_p: float
 class BernoulliArrivals(ArrivalProcess):
     """Paper-exact i.i.d. Bernoulli arrivals (Sec. VII.B, p = 0.001).
 
+    ``p`` is a scalar rate or an ``(n_users,)`` vector giving every user
+    its own rate (heterogeneous usage intensity — the AutoFL-style device
+    heterogeneity axis). The same ``(T, n)`` uniform block feeds both
+    forms, so a vector of identical entries is draw-for-draw the scalar
+    process.
+
     Draw order is pinned: one ``(T, n)`` uniform block for the mask, then
     one ``(T, n)`` integer block for the choices — byte-identical to the
     pre-registry ``FederatedSim.__init__`` sampling, so existing seeded
@@ -89,13 +94,26 @@ class BernoulliArrivals(ArrivalProcess):
 
     name = "bernoulli"
 
-    def __init__(self, p: float = 0.001):
-        if not 0.0 <= p <= 1.0:
+    def __init__(self, p=0.001):
+        arr = np.asarray(p, dtype=float)
+        if arr.ndim > 1:
+            raise ValueError(
+                f"arrival probability must be a scalar or an (n_users,) "
+                f"vector, got shape {arr.shape}")
+        if arr.size and not np.all((arr >= 0.0) & (arr <= 1.0)):
+            # the conjunctive form also rejects NaN entries
             raise ValueError(f"arrival probability must be in [0, 1], got {p}")
-        self.p = float(p)
+        self.p = float(arr) if arr.ndim == 0 else arr
 
     def sample(self, rng, T, n_users, n_apps, t_d=1.0):
-        sched = rng.random((T, n_users)) < self.p
+        p = self.p
+        if np.ndim(p) == 1 and len(p) != n_users:
+            raise ValueError(
+                f"per-user arrival rates cover {len(p)} users, run has "
+                f"{n_users}")
+        # scalar p compares elementwise exactly as the historical code
+        # did; a (n,) vector broadcasts across the same uniform block
+        sched = rng.random((T, n_users)) < p
         choice = rng.integers(0, n_apps, (T, n_users))
         return sched, choice
 

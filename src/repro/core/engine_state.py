@@ -1,0 +1,259 @@
+"""Unified engine state: ONE explicit state container for all three engines.
+
+Every simulator engine — the per-user loop oracle (``FederatedSim._run_loop``),
+the struct-of-arrays numpy engine and the ``jax.lax.scan`` backend
+(``core/vector_engine.py``) — threads the same ``EngineState``: the per-user
+struct-of-arrays device state, the server/scheduler scalars (version,
+in-flight count, the Eq. 15/16 queues Q and H and their running sums), an
+RNG key for stochastic policies, the policy's declarative carry pytree
+(``Policy.init_carry``), and — on the jax engine — the fixed-width push-event
+buffer that streams the push log out of the scan.
+
+``EngineState`` is a registered jax pytree, so the SAME object shape that the
+numpy engine mutates in place is the ``lax.scan`` carry on the jax backend
+(fields converted to device arrays by ``vector_engine``). ``FederatedSim``
+builds one per run (``sim.state``); the loop oracle keeps its readable
+per-user ``UserState`` objects as the working view and threads the scalar /
+carry fields through this container.
+
+The push log is no longer accumulated as per-push dicts: engines append
+fixed-width blocks to a ``PushLog`` (five columns — slot, user, lag, gap,
+corun), and the ``SimResult.push_log`` dict schema is decoded lazily on
+access, so fleet-scale runs never materialize O(pushes) Python dicts unless
+the caller actually walks the log. Inside the jax scan the same five columns
+live in a preallocated ``PushBuffer`` ``(capacity, 5)`` array filled by
+scatter; ``vector_engine`` drains it chunk-by-chunk over the horizon, so
+peak memory stays O(chunk), never O(T * n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+
+# Shared state encodings of all engines (re-exported by core/policies.py).
+MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
+PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
+
+# Column order of the fixed-width push-event records (PushBuffer rows and
+# PushLog blocks).
+EVENT_FIELDS = ("t", "user", "lag", "gap", "corun")
+
+
+class PushBuffer(NamedTuple):
+    """Fixed-width in-scan event buffer: ``rows`` is ``(capacity, 5)`` in
+    ``EVENT_FIELDS`` order, ``count`` the number of pushes recorded so far
+    (monotone within a chunk; entries past capacity are dropped by the
+    scatter, which the driver detects as ``count > capacity`` and retries
+    the chunk with a doubled buffer). NamedTuple => a native jax pytree."""
+
+    rows: Any
+    count: Any
+
+
+@dataclasses.dataclass
+class EngineState:
+    """The one state pytree threaded through every engine.
+
+    Per-user struct-of-arrays (``(n_users,)`` each): ``mode`` (wait / train /
+    cool), ``cooldown`` slots left, current ``app`` id (-1 = none), remaining
+    app / training seconds, ``corun`` flag of the current/last training run,
+    the accumulated Eq. (12) ``idle_gap``, the global ``pulled_at`` version,
+    per-user ``energy`` (J) and ``updates``, and the offline policy's
+    ``plan`` code.
+
+    Scheduler / server scalars: global model ``version``, ``in_flight``
+    trainer count, the sync-round ``round_open`` flag, the Lyapunov queues
+    ``Q`` / ``H`` (Eqs. 15/16) plus their horizon sums, and the co-run
+    update counter.
+
+    ``rng_key`` is a raw ``(2,)`` uint32 counter-key (the jax PRNGKey
+    layout) derived from ``SimConfig.seed`` — engines thread it untouched;
+    stochastic policies may split it inside their carry protocol hooks.
+
+    ``carry`` is the policy's declarative carry pytree
+    (``Policy.init_carry``) — e.g. greedy's per-user wait counters or the
+    offline policy's next plan slot. ``events`` is the jax engine's
+    ``PushBuffer`` (None elsewhere).
+    """
+
+    # ---- per-user struct-of-arrays -----------------------------------
+    mode: Any
+    cooldown: Any
+    app: Any
+    app_rem: Any
+    train_rem: Any
+    corun: Any
+    idle_gap: Any
+    pulled_at: Any
+    energy: Any
+    updates: Any
+    plan: Any
+    # ---- scheduler / server scalars ----------------------------------
+    version: Any = 0
+    in_flight: Any = 0
+    round_open: Any = False
+    Q: Any = 0.0
+    H: Any = 0.0
+    sum_Q: Any = 0.0
+    sum_H: Any = 0.0
+    corun_updates: Any = 0
+    # ---- rng / policy carry / event stream ---------------------------
+    rng_key: Any = None
+    carry: Any = None
+    events: Optional[PushBuffer] = None
+
+    @classmethod
+    def init(cls, n: int, cfg, policy) -> "EngineState":
+        """Fresh host-side (numpy) state for an ``n``-user run: everyone
+        cooling with zero cooldown (first slot moves the fleet to waiting,
+        like the historical engines), no apps, v0 model, empty queues."""
+        return cls(
+            mode=np.full(n, MODE_COOL, dtype=np.int8),
+            cooldown=np.zeros(n, dtype=np.int64),
+            app=np.full(n, -1, dtype=np.int64),
+            app_rem=np.zeros(n),
+            train_rem=np.zeros(n),
+            corun=np.zeros(n, dtype=bool),
+            idle_gap=np.zeros(n),
+            pulled_at=np.zeros(n, dtype=np.int64),
+            energy=np.zeros(n),
+            updates=np.zeros(n, dtype=np.int64),
+            plan=np.full(n, PLAN_HOLD, dtype=np.int8),
+            rng_key=np.array([0, cfg.seed & 0xFFFFFFFF], dtype=np.uint32),
+            carry=policy.init_carry(n, cfg),
+        )
+
+    def replace(self, **kw) -> "EngineState":
+        return dataclasses.replace(self, **kw)
+
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(EngineState))
+
+
+def _flatten(s: EngineState):
+    return tuple(getattr(s, f) for f in _FIELDS), None
+
+
+def _unflatten(_, children) -> EngineState:
+    return EngineState(**dict(zip(_FIELDS, children)))
+
+
+try:  # register as a jax pytree so EngineState IS the lax.scan carry
+    from jax import tree_util as _jtu
+
+    _jtu.register_pytree_node(EngineState, _flatten, _unflatten)
+except ImportError:  # pragma: no cover - jax is a hard dep of repro.core
+    pass
+
+
+class PushLog:
+    """Fixed-width push-log accumulator with the historical dict schema.
+
+    Engines append columnar blocks (``extend``) or single events
+    (``append``); the jax driver feeds decoded ``(k, 5)`` buffer slices
+    (``extend_rows``). The sequence interface decodes per-event dicts
+    ``{"t", "user", "lag", "gap", "corun"}`` lazily, so holding a
+    fleet-scale log costs five flat arrays, not O(pushes) dicts; iteration
+    and ``log == [...]`` behave exactly like the historical list of dicts.
+    """
+
+    __slots__ = ("_parts", "_n", "_cache")
+
+    def __init__(self):
+        self._parts = []          # (t, user, lag, gap, corun) array blocks
+        self._n = 0
+        self._cache = None
+
+    # ------------------------------------------------------------- builders
+    def append(self, t, user, lag, gap, corun) -> None:
+        """One event (the loop oracle's per-push path)."""
+        self._parts.append((np.asarray([t], np.int64),
+                            np.asarray([user], np.int64),
+                            np.asarray([lag], np.int64),
+                            np.asarray([gap], np.float64),
+                            np.asarray([corun], bool)))
+        self._n += 1
+        self._cache = None
+
+    def extend(self, t, users, lags, gaps, corun) -> None:
+        """One slot's finisher cohort (the numpy engine's path); ``t`` is
+        the scalar slot, the rest ``(k,)`` arrays in user order."""
+        users = np.asarray(users, np.int64)
+        k = len(users)
+        if not k:
+            return
+        self._parts.append((np.full(k, t, np.int64), users,
+                            np.asarray(lags, np.int64),
+                            np.asarray(gaps, np.float64),
+                            np.asarray(corun, bool)))
+        self._n += k
+        self._cache = None
+
+    def extend_rows(self, rows) -> None:
+        """Decode a drained ``PushBuffer`` slice: ``rows`` is ``(k, 5)``
+        float in ``EVENT_FIELDS`` order (the jax engine's path)."""
+        rows = np.asarray(rows)
+        if not len(rows):
+            return
+        self._parts.append((rows[:, 0].astype(np.int64),
+                            rows[:, 1].astype(np.int64),
+                            rows[:, 2].astype(np.int64),
+                            rows[:, 3].astype(np.float64),
+                            rows[:, 4] != 0))
+        self._n += len(rows)
+        self._cache = None
+
+    # ------------------------------------------------------------- readers
+    def arrays(self):
+        """The five concatenated columns, ``EVENT_FIELDS`` order."""
+        if self._cache is None:
+            if self._parts:
+                cols = tuple(np.concatenate([p[j] for p in self._parts])
+                             for j in range(5))
+            else:
+                cols = (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                        np.zeros(0, np.int64), np.zeros(0, np.float64),
+                        np.zeros(0, bool))
+            self._cache = cols
+        return self._cache
+
+    def field(self, name: str) -> np.ndarray:
+        return self.arrays()[EVENT_FIELDS.index(name)]
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def _event(self, i: int) -> dict:
+        t, u, l, g, c = self.arrays()
+        # python scalars on purpose: digests/reprs must match the
+        # historical dict-of-python-scalars schema byte for byte
+        return {"t": int(t[i]), "user": int(u[i]), "lag": int(l[i]),
+                "gap": float(g[i]), "corun": bool(c[i])}
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._event(j) for j in range(*i.indices(self._n))]
+        if i < 0:
+            i += self._n
+        if not 0 <= i < self._n:
+            raise IndexError(i)
+        return self._event(i)
+
+    def __iter__(self):
+        for i in range(self._n):
+            yield self._event(i)
+
+    def __eq__(self, other):
+        if isinstance(other, PushLog):
+            return list(self) == list(other)
+        if isinstance(other, (list, tuple)):
+            return list(self) == list(other)
+        return NotImplemented
+
+    def __repr__(self):
+        return f"PushLog(n={self._n})"

@@ -1,30 +1,46 @@
-"""Pluggable scheduling policies: one registry, three engine hooks.
+"""Pluggable scheduling policies: one registry, one carry protocol,
+three engine hooks.
 
 The paper evaluates four fixed schedulers (Sec. VII.B); this module turns
 them into registered ``Policy`` objects so alternative schedulers — e.g.
 the energy-minimal scheduling families of Pilla '22 or AutoFL-style
 heterogeneity-aware schedulers — plug into the simulator without touching
-any engine file. A policy implements up to three hooks, one per engine:
+any engine file.
 
-``decide_loop(sim, t, waiting, state)``
+Policy state is declarative: ``init_carry(n, cfg)`` returns ONE pytree of
+per-run policy state (e.g. greedy's per-user wait counters, offline's next
+plan slot) that every engine threads for the policy — the loop oracle and
+the numpy engine mutate it in place, the jax backend carries it through
+``lax.scan`` inside ``EngineState.carry``. A policy implements up to three
+hooks, one per engine:
+
+``decide_loop(sim, t, waiting, carry)``
     Reference semantics on the per-user object loop (the oracle). Required.
-``decide_vectorized(eng, t, state)``
+``decide_vectorized(eng, t, carry)``
     Same decisions on the struct-of-arrays numpy engine
-    (``core/vector_engine.py``); set ``supports_vectorized = True``.
-``jax_decide(sv)``
+    (``core/vector_engine.py``); the batched state is ``eng.s`` (an
+    ``EngineState``). Set ``supports_vectorized = True``.
+``scan_step(carry, sv) -> (carry, (start_mask, gap_sum))``
     Traced decision step inside the ``jax.lax.scan`` backend; set
-    ``supports_jax = True``. Policies without it transparently degrade to
-    the vectorized engine (the way the paper's offline knapsack always has).
+    ``supports_jax = True``. ``sv`` is the mutable slot view the engine
+    builds per step (masks, table gathers, queue scalars, the full-horizon
+    arrival arrays for oracle lookahead). The hook must be functional in
+    ``carry`` and may reach back to the host with ``sv.jax.pure_callback``
+    for decision logic that cannot be traced (the offline knapsack does).
+    Instance knobs must flow through ``scan_operands`` (traced operands),
+    NOT be closed over — compiled scans are cached per ``jax_cache_key()``,
+    which defaults to the policy class. Policies without the hook
+    transparently degrade to the vectorized engine.
 
 Equivalence contract: for a given seed the three hooks must produce the
-same decision sequence — tests/test_sim_engines.py and
-tests/test_scenario.py pin loop/vectorized/jax parity and bit-for-bit
-reproduction of the pre-registry results for the four paper policies.
+same decision sequence — tests/test_sim_engines.py, tests/test_scenario.py
+and tests/test_engine_matrix.py pin loop/vectorized/jax schedule parity
+(bit-for-bit under ``jax_enable_x64``) for every registered policy.
 
 Strings keep working everywhere: ``SimConfig(policy="online")`` resolves
 through the registry (``resolve_policy``), and string lookups hand out a
-per-name singleton so the jax backend's jit cache is shared across runs.
-New code should pass ``Policy`` instances (see ``core/scenario.py``).
+per-name singleton. New code should pass ``Policy`` instances (see
+``core/scenario.py``).
 """
 from __future__ import annotations
 
@@ -33,13 +49,18 @@ from typing import Dict, List, Tuple, Type
 import numpy as np
 
 from .energy import APPS
+from .engine_state import (MODE_COOL, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
+                           PLAN_HOLD, PLAN_SEP)
 from .lyapunov import UserSlotState
 from .offline import knapsack_schedule, lemma1_lag_bounds
 from .staleness import gradient_gap
 
-# Shared state encodings of the struct-of-arrays engines (numpy + jax).
-MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
-PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
+__all__ = ["Policy", "register_policy", "registered_policies",
+           "resolve_policy", "plan_window",
+           "SyncPolicy", "ImmediatePolicy", "OnlinePolicy", "OfflinePolicy",
+           "GreedyThresholdPolicy",
+           "MODE_WAIT", "MODE_TRAIN", "MODE_COOL",
+           "PLAN_HOLD", "PLAN_CORUN", "PLAN_SEP"]
 
 
 class Policy:
@@ -54,6 +75,9 @@ class Policy:
       so ``include_scheduler_overhead`` adds Table III's scheduler power
       while waiting.
     - ``supports_vectorized`` / ``supports_jax``: which engine hooks exist.
+      ``SimConfig`` validates the flags against the actual hook methods at
+      construction, so a mismatch fails fast with a clear message instead
+      of erroring mid-run.
     """
 
     name: str = ""
@@ -62,13 +86,51 @@ class Policy:
     supports_vectorized: bool = False
     supports_jax: bool = False
 
-    # ------------------------------------------------------------- loop hook
-    def loop_init(self, sim) -> dict:
-        """Per-run mutable policy state for the loop engine (policies are
-        stateless singletons; runs must not share state)."""
-        return {}
+    # ------------------------------------------------------------ carry
+    def init_carry(self, n: int, cfg):
+        """Per-run policy state as ONE pytree shared by every engine:
+        numpy arrays / scalars that the loop and numpy engines mutate in
+        place and the jax backend converts to device arrays and threads
+        through the scan (``EngineState.carry``). Return ``None`` for
+        stateless policies."""
+        return None
 
-    def decide_loop(self, sim, t: int, waiting: list, state: dict
+    def scan_operands(self, cfg) -> tuple:
+        """Instance knobs the jax hook needs, as a flat tuple of scalars.
+        They are passed as TRACED operands (``sv.consts``), so runs with
+        different knob values share one compiled scan; reading instance
+        attributes directly from ``scan_step`` instead would bake the
+        first run's values into the class-keyed executable cache."""
+        return ()
+
+    def scan_statics(self, cfg) -> tuple:
+        """Values the jax hook needs as STATIC Python constants (e.g.
+        shapes of intermediate slices), as a flat hashable tuple. Unlike
+        ``scan_operands`` these are baked into the trace (``sv.statics``)
+        and included in the jit cache key, so each distinct tuple compiles
+        its own scan — keep them to genuinely shape-like knobs."""
+        return ()
+
+    def jax_cache_key(self):
+        """Hashable token identifying this policy's ``scan_step``
+        behavior: two policies with equal keys share one compiled scan.
+
+        The default keys by CLASS when that is provably safe — the
+        instance carries no attributes, or it declares its knobs through
+        ``scan_operands`` (traced) — so fresh instances of registry
+        policies reuse one executable per shape. Any other instance is
+        keyed by itself: a ``scan_step`` that reads ad-hoc instance state
+        directly then at worst recompiles per instance, never silently
+        reuses another instance's baked-in values. Policies that override
+        ``scan_operands`` must route ALL hook-read knobs through it (or
+        ``scan_statics``)."""
+        if not vars(self) or \
+                type(self).scan_operands is not Policy.scan_operands:
+            return type(self)
+        return self
+
+    # ------------------------------------------------------------- loop hook
+    def decide_loop(self, sim, t: int, waiting: list, carry
                     ) -> Tuple[int, float]:
         """Schedule waiting users for slot ``t`` via ``sim.begin_training``.
         Returns (served, gap_sum) feeding Eqs. (15)/(16)."""
@@ -76,35 +138,29 @@ class Policy:
             f"policy {self.name!r} implements no loop hook")
 
     # ------------------------------------------------- vectorized (numpy) hook
-    def vec_init(self, eng) -> dict:
-        return {}
-
-    def decide_vectorized(self, eng, t: int, state: dict
-                          ) -> Tuple[int, float]:
-        """Same decisions on the batched engine state ``eng``
-        (see vector_engine._NumpyEngine). Returns (served, gap_sum)."""
-        raise NotImplementedError(
-            f"policy {self.name!r} implements no vectorized hook; "
-            "run it with engine='loop'")
+    def decide_vectorized(self, eng, t: int, carry) -> Tuple[int, float]:
+        """Same decisions on the batched engine ``eng`` (state:
+        ``eng.s``, an EngineState; per-slot masks: ``eng.waiting`` /
+        ``eng.has_app``). Returns (served, gap_sum). Only called when
+        ``supports_vectorized``; SimConfig validates the flag against the
+        hook at construction."""
+        raise TypeError(
+            f"policy {self.name!r} sets supports_vectorized but inherits "
+            "the base decide_vectorized; implement the hook or clear the "
+            "flag")
 
     # ----------------------------------------------------------- jax scan hook
-    def jax_decide(self, sv):
-        """Traced decision inside the lax.scan step. ``sv`` is a mutable
-        slot view (vector_engine builds it): read ``waiting``, ``has_app``,
-        per-user power gathers and queue scalars; write ``idle_gap`` /
-        ``round_open`` if the policy owns them. Returns (start_mask,
-        gap_sum)."""
-        raise NotImplementedError(
-            f"policy {self.name!r} implements no jax hook")
-
-    def jax_cache_key(self):
-        """Hashable token identifying this policy's ``jax_decide``
-        behavior: two policies with equal keys may share one compiled
-        scan. Default is the instance itself (always safe). Policies
-        whose jax hook reads no instance state should return
-        ``type(self)`` so fresh instances — the object-passing style —
-        reuse the jit cache instead of recompiling per run."""
-        return self
+    def scan_step(self, carry, sv):
+        """Traced decision inside the lax.scan step. Read the slot view
+        ``sv`` (``waiting``, ``has_app``, per-user power gathers, queue
+        scalars, ``sv.consts`` from ``scan_operands``); write ``sv.idle_gap``
+        / ``sv.round_open`` / ``sv.plan`` if the policy owns them. Return
+        ``(carry, (start_mask, gap_sum))``. Only called when
+        ``supports_jax``; SimConfig validates the flag against the hook at
+        construction."""
+        raise TypeError(
+            f"policy {self.name!r} sets supports_jax but inherits the base "
+            "scan_step; implement the hook or clear the flag")
 
 
 # ---------------------------------------------------------------------------
@@ -128,11 +184,7 @@ def registered_policies() -> Tuple[str, ...]:
 
 
 def resolve_policy(policy) -> Policy:
-    """String -> registered singleton; Policy instance -> itself.
-
-    Singletons matter for the jax backend: its jit cache is keyed on the
-    policy object, so every ``SimConfig(policy="online")`` run shares one
-    compiled executable per shape."""
+    """String -> registered singleton; Policy instance -> itself."""
     if isinstance(policy, Policy):
         return policy
     if isinstance(policy, str):
@@ -145,6 +197,21 @@ def resolve_policy(policy) -> Policy:
         return _INSTANCES[policy]
     raise ValueError(f"policy must be a name or Policy instance, "
                      f"got {type(policy).__name__}")
+
+
+def engine_support(policy: Policy) -> Dict[str, bool]:
+    """Which engine hooks ``policy`` GENUINELY implements (flag set AND
+    the base stub overridden). SimConfig uses this to reject
+    flag-vs-implementation mismatches at construction instead of letting
+    the base stubs raise mid-run."""
+    cls = type(policy)
+    return {
+        "loop": cls.decide_loop is not Policy.decide_loop,
+        "vectorized": (policy.supports_vectorized and
+                       cls.decide_vectorized is not Policy.decide_vectorized),
+        "jax": (policy.supports_jax and
+                cls.scan_step is not Policy.scan_step),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +232,90 @@ def _jax_gradient_gap(v_norm, lag, eta, beta):
 
 
 # ---------------------------------------------------------------------------
+# Offline window planning (Alg. 1) over array state — ONE implementation
+# shared by the numpy engine's decide hook and the jax engine's
+# pure_callback, so the knapsack decisions are bit-identical by
+# construction on both batched engines.
+# ---------------------------------------------------------------------------
+def plan_window(plan, t, widx, app, app_sched, app_choice, T_COR, SRATE,
+                window, v_norm, L_b, resolution, eta, beta, row0=0):
+    """One Alg. 1 plan over the look-ahead window, mutating and returning
+    ``plan`` (the per-user PLAN_* codes in ``EngineState.plan``).
+
+    Candidates are waiting users (``widx``) with an app running now or an
+    (oracle lookahead) arrival inside the window; the knapsack picks which
+    of them wait to co-run, the rest train immediately. Users without an
+    in-window arrival hold until the next plan.
+
+    ``app_sched``/``app_choice`` may be the full horizon (``row0 = 0``,
+    the numpy engine) or just a slice whose row i is absolute slot
+    ``row0 + i`` (the jax callback ships only the window to the host)."""
+    if not len(widx):
+        return plan
+    W = int(window)
+    horizon = min(t + W, row0 + app_sched.shape[0])
+    sub = app_sched[t - row0:horizon - row0][:, widx]  # (window, n_waiting)
+    if sub.shape[0]:
+        has_arr = sub.any(axis=0)
+        first = sub.argmax(axis=0)                   # first arrival offset
+    else:
+        # sub-slot window (int(window) == 0) or horizon tail: no lookahead
+        # rows — only users with an app running now are candidates (the
+        # loop oracle's semantics; bare argmax would crash on the empty
+        # axis, which the historical _plan_vec did)
+        has_arr = np.zeros(len(widx), dtype=bool)
+        first = np.zeros(len(widx), dtype=np.int64)
+    ha = app[widx] >= 0
+    cand = ha | has_arr
+    plan[widx[~cand]] = PLAN_HOLD
+    cidx = widx[cand]
+    if not len(cidx):
+        return plan
+    ta = np.where(ha[cand], t, t + first[cand])      # absolute slots
+    # np.where evaluates both branches: app-running candidates (ha) take
+    # app[cidx], but their discarded app_choice gather still needs an
+    # in-bounds row — clamp covers them (non-ha rows are in-window by
+    # construction, so the clamp never alters a selected lane)
+    if app_choice.shape[0]:
+        pick = app_choice[np.minimum(ta - row0, app_choice.shape[0] - 1),
+                          cidx]
+    else:
+        pick = np.zeros(len(cidx), dtype=np.int64)   # all-ha candidates
+    aid = np.where(ha[cand], app[cidx], pick)
+    durs = T_COR[cidx, aid]
+    savings = SRATE[cidx, aid] * durs
+    lags = lemma1_lag_bounds(np.full(len(cidx), t), ta, durs)
+    gaps = np.asarray(gradient_gap(v_norm, lags, eta, beta), dtype=float)
+    x, _ = knapsack_schedule(savings, gaps, L_b, resolution=resolution)
+    plan[cidx] = np.where(x, PLAN_CORUN, PLAN_SEP)
+    return plan
+
+
+def _offline_plan_host(t, waiting, plan, app, version, sched_w, choice_w,
+                       row0, T_COR, SRATE, window, L_b, resolution, eta,
+                       beta, v_norm0):
+    """pure_callback target for OfflinePolicy.scan_step: the same
+    ``plan_window`` the numpy engine runs, on host numpy, fed entirely by
+    traced operands (nothing closed over — the compiled scan is shared
+    across runs). ``sched_w``/``choice_w`` are just the look-ahead window
+    rows, sliced on device (row i = absolute slot ``row0 + i``), so the
+    host transfer is O(window * n), not the full horizon. Returns the new
+    plan array."""
+    from .simulator import trace_v_norm
+
+    t = int(t)
+    plan = np.array(plan)                           # functional: copy
+    widx = np.nonzero(np.asarray(waiting))[0]
+    vn = trace_v_norm(float(v_norm0), int(version))
+    out = plan_window(plan, t, widx, np.asarray(app),
+                      np.asarray(sched_w), np.asarray(choice_w),
+                      np.asarray(T_COR), np.asarray(SRATE),
+                      float(window), vn, float(L_b), float(resolution),
+                      float(eta), float(beta), row0=int(row0))
+    return out.astype(plan.dtype, copy=False)
+
+
+# ---------------------------------------------------------------------------
 # The four paper policies (Sec. VII.B)
 # ---------------------------------------------------------------------------
 @register_policy
@@ -176,7 +327,7 @@ class SyncPolicy(Policy):
     supports_vectorized = True
     supports_jax = True
 
-    def decide_loop(self, sim, t, waiting, state):
+    def decide_loop(self, sim, t, waiting, carry):
         served = 0
         if not sim._round_open and len(waiting) == sim.cfg.n_users:
             for u in waiting:
@@ -185,23 +336,21 @@ class SyncPolicy(Policy):
             sim._round_open = True
         return served, 0.0
 
-    def decide_vectorized(self, eng, t, state):
-        if not eng.round_open and \
+    def decide_vectorized(self, eng, t, carry):
+        s = eng.s
+        if not s.round_open and \
                 int(np.count_nonzero(eng.waiting)) == eng.n:
             eng.begin_training(eng.ar)
-            eng.round_open = True
+            s.round_open = True
             return eng.n, 0.0
         return 0, 0.0
 
-    def jax_cache_key(self):
-        return type(self)   # hook reads no instance state
-
-    def jax_decide(self, sv):
+    def scan_step(self, carry, sv):
         jnp = sv.jnp
         open_now = (~sv.round_open) & (jnp.sum(sv.waiting) == sv.n)
         start = sv.waiting & open_now
         sv.round_open = sv.round_open | open_now
-        return start, jnp.asarray(0.0, sv.float_dtype)
+        return carry, (start, jnp.asarray(0.0, sv.float_dtype))
 
 
 @register_policy
@@ -212,23 +361,20 @@ class ImmediatePolicy(Policy):
     supports_vectorized = True
     supports_jax = True
 
-    def decide_loop(self, sim, t, waiting, state):
+    def decide_loop(self, sim, t, waiting, carry):
         for u in waiting:
             sim.begin_training(u, t, corun=u.app is not None)
         return len(waiting), 0.0
 
-    def decide_vectorized(self, eng, t, state):
+    def decide_vectorized(self, eng, t, carry):
         if eng.waiting.any():
             widx = np.nonzero(eng.waiting)[0]
             eng.begin_training(widx)
             return len(widx), 0.0
         return 0, 0.0
 
-    def jax_cache_key(self):
-        return type(self)   # hook reads no instance state
-
-    def jax_decide(self, sv):
-        return sv.waiting, sv.jnp.asarray(0.0, sv.float_dtype)
+    def scan_step(self, carry, sv):
+        return carry, (sv.waiting, sv.jnp.asarray(0.0, sv.float_dtype))
 
 
 @register_policy
@@ -240,7 +386,7 @@ class OnlinePolicy(Policy):
     supports_vectorized = True
     supports_jax = True
 
-    def decide_loop(self, sim, t, waiting, state):
+    def decide_loop(self, sim, t, waiting, carry):
         cfg = sim.cfg
         vn = sim._v_norm()
         served = 0
@@ -264,23 +410,21 @@ class OnlinePolicy(Policy):
                 u.idle_gap += cfg.epsilon
         return served, gap_sum
 
-    def decide_vectorized(self, eng, t, state):
+    def decide_vectorized(self, eng, t, carry):
         if not eng.waiting.any():
             return 0, 0.0
+        s = eng.s
         widx = np.nonzero(eng.waiting)[0]
-        vn = eng.v_norm(eng.version)
+        vn = eng.v_norm(s.version)
         d = eng.sched.decide_batch(eng.p_if_train[widx], eng.p_if_idle[widx],
-                                   eng.idle_gap[widx], eng.in_flight, vn)
+                                   s.idle_gap[widx], s.in_flight, vn)
         if d.n_served:
             eng.begin_training(widx[d.schedule])
         if d.n_served != len(widx):
-            eng.idle_gap[widx[~d.schedule]] += eng.cfg.epsilon
+            s.idle_gap[widx[~d.schedule]] += eng.cfg.epsilon
         return d.n_served, d.gap_sum
 
-    def jax_cache_key(self):
-        return type(self)   # hook reads no instance state
-
-    def jax_decide(self, sv):
+    def scan_step(self, carry, sv):
         jnp, lax = sv.jnp, sv.lax
         f, i = sv.float_dtype, sv.int_dtype
         waiting, has_app = sv.waiting, sv.has_app
@@ -318,24 +462,33 @@ class OnlinePolicy(Policy):
         start, gap_sum = lax.cond(H > 0.0, slow, fast, None)
         sv.idle_gap = jnp.where(waiting & ~start,
                                 sv.idle_gap + sv.epsilon, sv.idle_gap)
-        return start, gap_sum
+        return carry, (start, gap_sum)
 
 
 @register_policy
 class OfflinePolicy(Policy):
-    """Oracle knapsack with look-ahead window (Alg. 1)."""
+    """Oracle knapsack with look-ahead window (Alg. 1).
+
+    Carry: the next plan slot. The window plan itself writes the per-user
+    ``plan`` codes in ``EngineState.plan`` (engine state: the engines reset
+    a user's plan to HOLD when it re-enters the waiting queue). Under the
+    jax engine the knapsack DP — host numpy, pseudo-polynomial in
+    ``L_b / resolution`` — runs through ``jax.pure_callback`` inside a
+    ``lax.cond``, so the host is consulted only at plan slots (every
+    ``offline_window`` seconds) and the decisions are bit-identical to the
+    numpy engine's, which calls the same ``plan_window``."""
 
     name = "offline"
     supports_vectorized = True
-    # no jax hook: the knapsack DP cannot live inside lax.scan
+    supports_jax = True
 
-    def loop_init(self, sim):
+    def init_carry(self, n, cfg):
         return {"next_plan": 0.0}
 
-    def decide_loop(self, sim, t, waiting, state):
+    def decide_loop(self, sim, t, waiting, carry):
         cfg = sim.cfg
-        if t >= state["next_plan"]:
-            state["next_plan"] = t + cfg.offline_window
+        if t >= carry["next_plan"]:
+            carry["next_plan"] = t + cfg.offline_window
             self._plan_loop(sim, t, waiting)
         served = 0
         for u in waiting:
@@ -350,7 +503,8 @@ class OfflinePolicy(Policy):
         return served, 0.0
 
     def _plan_loop(self, sim, t: int, waiting: List):
-        """Knapsack over the look-ahead window (Alg. 1).
+        """Knapsack over the look-ahead window (Alg. 1), object form (the
+        readable oracle; ``plan_window`` is its array twin).
 
         Users whose app arrival falls inside the window are knapsack
         candidates: selected -> wait for the arrival and co-run (x_i = 1);
@@ -393,55 +547,59 @@ class OfflinePolicy(Policy):
         for u, chosen in zip(cands, x):
             u.plan = "corun" if chosen else "separate"
 
-    def vec_init(self, eng):
-        return {"next_plan": 0.0}
-
-    def decide_vectorized(self, eng, t, state):
+    def decide_vectorized(self, eng, t, carry):
         cfg = eng.cfg
-        if t >= state["next_plan"]:
-            state["next_plan"] = t + cfg.offline_window
-            self._plan_vec(eng, t, np.nonzero(eng.waiting)[0])
-        start = eng.waiting & (((eng.plan == PLAN_CORUN) & eng.has_app) |
-                               (eng.plan == PLAN_SEP))
+        s = eng.s
+        if t >= carry["next_plan"]:
+            carry["next_plan"] = t + cfg.offline_window
+            plan_window(s.plan, t, np.nonzero(eng.waiting)[0], s.app,
+                        eng.app_sched, eng.app_choice, eng.T_COR, eng.SRATE,
+                        cfg.offline_window, eng.v_norm(s.version),
+                        cfg.L_b, cfg.offline_resolution, cfg.eta, cfg.beta)
+        start = eng.waiting & (((s.plan == PLAN_CORUN) & eng.has_app) |
+                               (s.plan == PLAN_SEP))
         if start.any():
             sidx = np.nonzero(start)[0]
             eng.begin_training(sidx)
             return len(sidx), 0.0
         return 0, 0.0
 
-    def _plan_vec(self, eng, t, widx):
-        """Vectorized Alg. 1 window plan (mirrors ``_plan_loop``).
+    def scan_statics(self, cfg) -> tuple:
+        # the look-ahead slice shipped to the host callback needs a
+        # static row count; baked into the trace + jit cache key
+        return (int(cfg.offline_window),)
 
-        Candidates are waiting users with an app running now or an (oracle
-        lookahead) arrival inside the window; the knapsack picks which of
-        them wait to co-run, the rest train immediately. Users without an
-        in-window arrival hold until the next plan."""
-        if not len(widx):
-            return
-        cfg = eng.cfg
-        app, plan = eng.app, eng.plan
-        W = int(cfg.offline_window)
-        horizon = min(t + W, eng.app_sched.shape[0])
-        sub = eng.app_sched[t:horizon][:, widx]          # (window, n_waiting)
-        has_arr = sub.any(axis=0)
-        first = sub.argmax(axis=0)                       # first arrival offset
-        ha = app[widx] >= 0
-        cand = ha | has_arr
-        plan[widx[~cand]] = PLAN_HOLD
-        cidx = widx[cand]
-        if not len(cidx):
-            return
-        ta = np.where(ha[cand], t, t + first[cand])
-        aid = np.where(ha[cand], app[cidx], eng.app_choice[ta, cidx])
-        durs = eng.T_COR[cidx, aid]
-        savings = eng.SRATE[cidx, aid] * durs
-        lags = lemma1_lag_bounds(np.full(len(cidx), t), ta, durs)
-        vn = eng.v_norm(eng.version)
-        gaps = np.asarray(gradient_gap(vn, lags, cfg.eta, cfg.beta),
-                          dtype=float)
-        x, _ = knapsack_schedule(savings, gaps, cfg.L_b,
-                                 resolution=cfg.offline_resolution)
-        plan[cidx] = np.where(x, PLAN_CORUN, PLAN_SEP)
+    def scan_step(self, carry, sv):
+        jnp, lax, jax = sv.jnp, sv.lax, sv.jax
+        nxt = carry["next_plan"]
+        do_plan = sv.t >= nxt
+        n, T, plan_dtype = sv.n, sv.T, sv.plan.dtype
+        (W,) = sv.statics
+        Wc = min(max(W, 0), T)          # static window rows
+
+        def plan_now(args):
+            t, waiting, plan, app, version = args
+            # slice just the look-ahead window for the host (inside the
+            # taken cond branch: the gather + device->host copy happen at
+            # plan slots only, and cost O(window * n), never O(T * n));
+            # the start clamps at the horizon tail, row0 re-anchors it
+            row0 = jnp.minimum(t, T - Wc)
+            sched_w = lax.dynamic_slice(sv.app_sched, (row0, 0), (Wc, n))
+            choice_w = lax.dynamic_slice(sv.app_choice, (row0, 0), (Wc, n))
+            return jax.pure_callback(
+                _offline_plan_host,
+                jax.ShapeDtypeStruct((n,), plan_dtype),
+                t, waiting, plan, app, version, sched_w, choice_w, row0,
+                sv.T_COR, sv.SRATE, sv.offline_window, sv.L_b,
+                sv.offline_resolution, sv.eta, sv.beta, sv.v_norm0)
+
+        args = (sv.t, sv.waiting, sv.plan, sv.app, sv.version)
+        sv.plan = lax.cond(do_plan, plan_now, lambda a: a[2], args)
+        nxt = jnp.where(do_plan, sv.t + sv.offline_window, nxt)
+        start = sv.waiting & (((sv.plan == PLAN_CORUN) & sv.has_app) |
+                              (sv.plan == PLAN_SEP))
+        return {"next_plan": nxt}, \
+            (start, jnp.asarray(0.0, sv.float_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -459,12 +617,17 @@ class GreedyThresholdPolicy(Policy):
     ``patience`` waiting slots, so progress is guaranteed without any queue
     machinery. A natural midpoint between "immediate" (theta = inf) and
     "wait for co-runs" (theta small, patience large).
+
+    Carry: the per-user wait counters — the canonical stateful-policy
+    example of the carry protocol (one ``(n,)`` array threaded identically
+    through the loop, numpy and lax.scan engines). ``theta``/``patience``
+    reach the traced hook as ``scan_operands``, so a parameter sweep
+    reuses one compiled scan.
     """
 
     name = "greedy"
     supports_vectorized = True
-    # no jax hook on purpose: exercises the documented jax -> vectorized
-    # degradation path for registry policies
+    supports_jax = True
 
     def __init__(self, theta: float = 0.3, patience: int = 240):
         if patience < 0:
@@ -472,11 +635,14 @@ class GreedyThresholdPolicy(Policy):
         self.theta = float(theta)
         self.patience = int(patience)
 
-    def loop_init(self, sim):
-        return {"waited": {}}
+    def init_carry(self, n, cfg):
+        return {"waited": np.zeros(n, dtype=np.int64)}
 
-    def decide_loop(self, sim, t, waiting, state):
-        waited = state["waited"]
+    def scan_operands(self, cfg):
+        return (self.theta, self.patience)
+
+    def decide_loop(self, sim, t, waiting, carry):
+        waited = carry["waited"]
         served = 0
         for u in waiting:
             a = u.app is not None
@@ -485,29 +651,37 @@ class GreedyThresholdPolicy(Policy):
                 delta = ap.p_corun - ap.p_app
             else:
                 delta = u.device.p_train - u.device.p_idle
-            w = waited.get(u._uid, 0)
-            if delta <= self.theta or w >= self.patience:
+            i = u._uid
+            if delta <= self.theta or waited[i] >= self.patience:
                 sim.begin_training(u, t, corun=a)
-                waited[u._uid] = 0
+                waited[i] = 0
                 served += 1
             else:
-                waited[u._uid] = w + 1
+                waited[i] += 1
         return served, 0.0
 
-    def vec_init(self, eng):
-        return {"waited": np.zeros(eng.n, dtype=np.int64)}
-
-    def decide_vectorized(self, eng, t, state):
+    def decide_vectorized(self, eng, t, carry):
         w = eng.waiting
         if not w.any():
             return 0, 0.0
         # p_if_train/p_if_idle are exactly (P^{a'}, P^a) with an app and
         # (P^b, P^d) without — the same operands the loop hook compares
         delta = eng.p_if_train - eng.p_if_idle
-        waited = state["waited"]
+        waited = carry["waited"]
         go = w & ((delta <= self.theta) | (waited >= self.patience))
         if go.any():
             eng.begin_training(np.nonzero(go)[0])
         waited[go] = 0
         waited[w & ~go] += 1
         return int(np.count_nonzero(go)), 0.0
+
+    def scan_step(self, carry, sv):
+        jnp = sv.jnp
+        theta, patience = sv.consts
+        waited = carry["waited"]
+        delta = jnp.where(sv.has_app, sv.pcor_g - sv.papp_g, sv.PT - sv.PI)
+        go = sv.waiting & ((delta <= theta) | (waited >= patience))
+        waited = jnp.where(go, 0,
+                           jnp.where(sv.waiting & ~go, waited + 1, waited))
+        return {"waited": waited}, \
+            (go, jnp.asarray(0.0, sv.float_dtype))

@@ -6,7 +6,9 @@ Two ways to couple a schedule to actual JAX training:
 * ``BatchedMLBackend`` — the first-class protocol. A backend owns the
   server, the per-client shards and the in-flight (pulled) parameter
   snapshots, and exposes *batched* entry points the vectorized engine
-  dispatches once per slot cohort instead of n Python callbacks:
+  dispatches once per slot cohort instead of n Python callbacks (cohort
+  indices, pull versions and lags all come from the engine's shared
+  ``EngineState`` — core/engine_state.py):
   ``pull_batch`` -> ``local_train_batch`` (one ``jax.vmap``'d masked epoch
   over the whole finisher cohort, jit-compiled once per cohort shape) ->
   ``push_batch``/``submit_batch`` (sequential server application in user
@@ -68,14 +70,17 @@ class BatchedMLBackend:
     # ------------------------------------------------------------ batched path
     def pull_batch(self, uids: np.ndarray, version: int) -> None:
         """Snapshot the current global parameters for every uid starting
-        training this slot (``version`` is the engine's global version at
-        pull time, for staleness-aware backends)."""
+        training this slot. ``version`` is the engine's global model
+        version at pull time — ``EngineState.version``, the same counter
+        every engine threads (core/engine_state.py) — for staleness-aware
+        backends."""
         raise NotImplementedError
 
     def local_train_batch(self, uids: np.ndarray, versions: np.ndarray):
         """One local epoch for the whole finisher cohort at once; returns
         the trained parameters stacked on a leading ``len(uids)`` axis.
-        ``versions`` are the per-uid versions recorded at pull time."""
+        ``versions`` are the per-uid pull versions the engine recorded in
+        ``EngineState.pulled_at``."""
         raise NotImplementedError
 
     def push_batch(self, uids: np.ndarray, trained, lags: np.ndarray,

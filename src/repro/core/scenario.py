@@ -27,6 +27,13 @@ resolves to::
                                 n_users=64, horizon_s=2400,
                                 app_arrival_p=0.004))
 
+    # per-user arrival-rate heterogeneity: app_arrival_p accepts an
+    # (n_users,) vector (propagated to the default Bernoulli process)
+    import numpy as np
+    rates = np.linspace(0.0005, 0.02, 50)
+    r = run_experiment(Scenario(policy="online", n_users=50,
+                                app_arrival_p=rates, horizon_s=3600))
+
 Strings resolve through the registries; objects pass through as-is.
 ``run_experiment(policy="online", n_users=25)`` builds the Scenario
 inline for one-liners.

@@ -20,10 +20,14 @@ training of the paper's LeNet-5 (Fig. 5 convergence results).
 Engines (SimConfig.engine): this class's per-user object loop is the
 reference oracle ("loop"); "vectorized" runs the same semantics on
 struct-of-arrays batched state (core/vector_engine.py), "jax" compiles the
-horizon into one lax.scan, and "auto" (default) picks the vectorized
+horizon into chunked lax.scans, and "auto" (default) picks the vectorized
 engine for pure trace-mode runs AND for real-mode runs driven by a
-batched ml_backend (core/realml.py — vmap'd cohort training). Seeded
-equivalence across engines is pinned by tests/test_sim_engines.py and
+batched ml_backend (core/realml.py — vmap'd cohort training). All three
+engines thread ONE state container — ``core.engine_state.EngineState``
+(``sim.state``): per-user struct-of-arrays, scheduler scalars, RNG key and
+the policy's carry pytree — and stream push events through
+``core.engine_state.PushLog``. Seeded equivalence across engines is pinned
+by tests/test_sim_engines.py, tests/test_engine_matrix.py and
 tests/test_real_mode.py.
 """
 from __future__ import annotations
@@ -35,9 +39,10 @@ import numpy as np
 
 from .arrivals import ArrivalProcess, resolve_arrival_or_default
 from .energy import APPS, DeviceProfile
+from .engine_state import EngineState, PushLog
 from .fleet import Fleet, resolve_fleet
 from .lyapunov import OnlineScheduler
-from .policies import Policy, resolve_policy
+from .policies import Policy, engine_support, resolve_policy
 from .staleness import gradient_gap
 
 
@@ -52,7 +57,9 @@ class SimConfig:
     n_users: int = 25
     horizon_s: int = 10800          # paper: 3 hours
     t_d: float = 1.0                # slot length (s)
-    app_arrival_p: float = 0.001    # paper: ~1 app per 1000 s
+    # scalar = the paper's i.i.d. rate; an (n_users,) vector gives every
+    # user its own Bernoulli rate (heterogeneous fleets)
+    app_arrival_p: Any = 0.001      # paper: ~1 app per 1000 s
     policy: Union[str, Policy] = "online"   # registry name or Policy object
     V: float = 4000.0
     L_b: float = 1000.0
@@ -68,15 +75,43 @@ class SimConfig:
     include_scheduler_overhead: bool = False
     v_norm0: float = 1.0            # trace-mode momentum-norm model scale
     engine: str = "auto"            # auto | loop | vectorized | jax
-    collect_push_log: bool = True   # per-push dicts; disable at fleet scale
+    collect_push_log: bool = True   # push events; streamed on every engine
+    jax_chunk: int = 1024           # slots per compiled scan chunk (jax)
+    push_log_capacity: int = 0      # initial per-chunk event buffer slots
+    #                                 for the jax engine (0 = auto-sized;
+    #                                 doubled + chunk retried on overflow)
 
     def __post_init__(self):
         # Fail at construction, not mid-run (a bad policy string used to
         # surface only once the first slot hit the decision branch).
-        resolve_policy(self.policy)     # raises ValueError on unknown names
+        pol = resolve_policy(self.policy)   # raises ValueError on unknowns
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; "
                              f"expected one of {ENGINES}")
+        # Engine-capability validation: a policy whose support flags claim
+        # an engine must actually implement its carry-protocol hook — a
+        # flag/hook mismatch is a property of the policy, so it is
+        # rejected for EVERY engine (auto included: auto dispatches on the
+        # flags). An explicitly requested vectorized engine additionally
+        # needs the vectorized hook. Catching this here replaces the
+        # historical NotImplementedError raised mid-run from the
+        # base-class hook stubs.
+        sup = engine_support(pol)
+        if pol.supports_vectorized and not sup["vectorized"]:
+            raise ValueError(
+                f"policy {pol.name!r} sets supports_vectorized but "
+                "implements no decide_vectorized hook; implement "
+                "decide_vectorized(eng, t, carry) or clear the flag")
+        if pol.supports_jax and not sup["jax"]:
+            raise ValueError(
+                f"policy {pol.name!r} sets supports_jax but implements no "
+                "scan_step carry hook; implement scan_step(carry, sv) or "
+                "clear the flag to degrade to the vectorized engine")
+        if self.engine == "vectorized" and not sup["vectorized"]:
+            raise ValueError(
+                f"policy {pol.name!r} implements no vectorized "
+                "(decide_vectorized) hook; use engine='loop' (or 'auto', "
+                "which falls back to the loop oracle)")
         if self.ml_mode not in ("trace", "real"):
             raise ValueError(f"unknown ml_mode {self.ml_mode!r}")
         if self.n_users <= 0:
@@ -86,9 +121,24 @@ class SimConfig:
         if self.horizon_s <= 0:
             raise ValueError(
                 f"horizon_s must be positive, got {self.horizon_s}")
-        if not 0.0 <= self.app_arrival_p <= 1.0:
+        p = np.asarray(self.app_arrival_p, dtype=float)
+        if p.ndim > 1:
+            raise ValueError(
+                f"app_arrival_p must be a scalar or an (n_users,) vector, "
+                f"got shape {p.shape}")
+        if p.ndim == 1 and p.shape[0] != self.n_users:
+            raise ValueError(
+                f"app_arrival_p vector has {p.shape[0]} entries for "
+                f"n_users={self.n_users}")
+        if p.size and not np.all((p >= 0.0) & (p <= 1.0)):
+            # the conjunctive form also rejects NaN entries
             raise ValueError(
                 f"app_arrival_p must be in [0, 1], got {self.app_arrival_p}")
+        if p.ndim == 1:
+            # normalize rate vectors to a plain tuple: keeps the
+            # dataclass-generated __eq__/repr working (an ndarray field
+            # would make config comparison raise) and the value hashable
+            self.app_arrival_p = tuple(float(x) for x in p)
         if not 0.0 <= self.beta < 1.0:
             raise ValueError(f"beta must be in [0, 1), got {self.beta}")
         if self.V < 0 or self.L_b < 0 or self.epsilon < 0:
@@ -106,6 +156,13 @@ class SimConfig:
         if self.trace_every <= 0:
             raise ValueError(
                 f"trace_every must be positive, got {self.trace_every}")
+        if self.jax_chunk <= 0:
+            raise ValueError(
+                f"jax_chunk must be positive, got {self.jax_chunk}")
+        if self.push_log_capacity < 0:
+            raise ValueError(
+                f"push_log_capacity must be non-negative, got "
+                f"{self.push_log_capacity}")
 
 
 @dataclasses.dataclass
@@ -133,7 +190,8 @@ class SimResult:
     trace_energy: np.ndarray
     trace_Q: np.ndarray
     trace_H: np.ndarray
-    push_log: List[dict]            # per push: t, user, lag, gap, corun
+    push_log: Any                   # PushLog (list-of-dicts view): per push
+    #                                 t, user, lag, gap, corun
     accuracy: List[tuple]           # (sim_t, test_acc) if ml_mode == real
     mean_Q: float
     mean_H: float
@@ -172,6 +230,12 @@ class FederatedSim:
         Bernoulli(cfg.app_arrival_p) on the Table II round-robin fleet —
         consume the seeded rng stream draw-for-draw like the historical
         hard-coded setup, so existing seeded runs reproduce bit-for-bit.
+
+        ``self.state`` is the run's ``EngineState`` — the one state pytree
+        every engine threads. The loop oracle keeps its per-user
+        ``UserState`` objects as the readable working view and routes the
+        scalar fields (version, in_flight, round_open) plus the policy
+        carry through the container; the batched engines consume it whole.
         """
         self.cfg = cfg
         self.policy = resolve_policy(cfg.policy)
@@ -197,8 +261,7 @@ class FederatedSim:
         self.users = [UserState(device=d) for d in self.fleet_spec.devices]
         self.sched = OnlineScheduler(cfg.V, cfg.L_b, cfg.eta, cfg.beta,
                                      cfg.epsilon, cfg.t_d)
-        self.version = 0
-        self.in_flight = 0
+        self.state = EngineState.init(cfg.n_users, cfg, self.policy)
         # Pre-sample the app arrival schedule (offline policy needs
         # lookahead), one row per SLOT — t_d < 1 means more slots than
         # seconds. (For t_d == 1 this matches the historical horizon_s
@@ -224,6 +287,34 @@ class FederatedSim:
                 f"arrival process {self.arrivals.name!r} produced app "
                 f"choices outside [0, {len(APPS)})")
 
+    # ------------------------------------------------------------ state views
+    # Scalar server state lives in self.state (the shared EngineState);
+    # these properties keep the historical sim.version / sim.in_flight /
+    # sim._round_open spelling for policy hooks and ML backends.
+    @property
+    def version(self) -> int:
+        return self.state.version
+
+    @version.setter
+    def version(self, v: int):
+        self.state.version = v
+
+    @property
+    def in_flight(self) -> int:
+        return self.state.in_flight
+
+    @in_flight.setter
+    def in_flight(self, v: int):
+        self.state.in_flight = v
+
+    @property
+    def _round_open(self) -> bool:
+        return self.state.round_open
+
+    @_round_open.setter
+    def _round_open(self, v: bool):
+        self.state.round_open = v
+
     # ------------------------------------------------------------------ utils
     def _v_norm(self) -> float:
         if "v_norm" in self.ml:
@@ -243,7 +334,7 @@ class FederatedSim:
         if self.ml.get("pull"):
             u._params = self.ml["pull"](u._uid)
 
-    def _finish_training(self, u: UserState, t: int, log: list):
+    def _finish_training(self, u: UserState, t: int, log: PushLog):
         lag = self.version - u.pulled_at
         gap = gradient_gap(self._v_norm(), lag, self.cfg.eta, self.cfg.beta)
         if self.policy.sync_rounds:
@@ -261,8 +352,7 @@ class FederatedSim:
         u.idle_gap = 0.0
         self.in_flight -= 1
         if self.cfg.collect_push_log:
-            log.append({"t": t, "user": u._uid, "lag": lag, "gap": gap,
-                        "corun": u.corun})
+            log.append(t, u._uid, lag, gap, u.corun)
 
     # ------------------------------------------------------------------ main
     def resolve_engine(self) -> str:
@@ -274,11 +364,13 @@ class FederatedSim:
         ``auto`` selects it whenever the policy implements the vectorized
         hook; real mode with per-user hooks (or no backend) stays on the
         loop oracle. The jax backend covers hook-free trace runs of
-        jax-capable policies only — with a policy lacking the jax hook
-        (e.g. offline: knapsack DP cannot live inside lax.scan), a
-        ``v_norm`` hook, or an ml_backend (Python callbacks cannot run
-        under the scan) it degrades to the numpy engine, which honors
-        all three."""
+        policies with the ``scan_step`` carry hook — all registry policies
+        qualify, including offline (its knapsack plan runs through a host
+        callback) and greedy (wait counters in the carry); push-log
+        collection streams out of the scan and is NOT a jax blocker. With
+        a ``v_norm`` hook or an ml_backend (Python callbacks cannot run
+        under the scan per slot) it degrades to the numpy engine, which
+        honors both; policies without scan_step degrade the same way."""
         cfg = self.cfg
         pol = self.policy
         vec_ok = (cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}) \
@@ -301,13 +393,25 @@ class FederatedSim:
             if pol.supports_jax and not self.ml and self.ml_backend is None:
                 return "jax"
             # degrade in capability order: numpy SoA if the policy has the
-            # hook (offline, greedy, any policy under a v_norm callback,
-            # or any real-mode backend run), else the loop oracle, which
-            # runs everything
+            # hook (any policy under a v_norm callback, or any real-mode
+            # backend run), else the loop oracle, which runs everything
             return "vectorized" if pol.supports_vectorized else "loop"
         return engine
 
     def run(self) -> SimResult:
+        if getattr(self, "_ran", False):
+            # a run consumes the mutable EngineState / UserState objects;
+            # reallocate them so repeated run() calls (warmup-then-timed
+            # patterns) start fresh instead of continuing silently from
+            # the previous run's state. Real-ML backends/hook closures are
+            # single-run by contract and are NOT reset here.
+            self.state = EngineState.init(self.cfg.n_users, self.cfg,
+                                          self.policy)
+            self.users = [UserState(device=d)
+                          for d in self.fleet_spec.devices]
+            self.sched.Q = 0.0
+            self.sched.H = 0.0
+        self._ran = True
         engine = self.resolve_engine()
         if engine == "loop":
             return self._run_loop()
@@ -317,19 +421,15 @@ class FederatedSim:
     def _run_loop(self) -> SimResult:
         cfg = self.cfg
         policy = self.policy
+        es = self.state                   # scalar/carry state container
         for i, u in enumerate(self.users):
             u._uid = i
             u._params = None
         T = n_slots(cfg)
         trace_t, trace_E, trace_Q, trace_H = [], [], [], []
-        push_log: List[dict] = []
+        push_log = PushLog()
         accuracy: List[tuple] = []
-        sum_Q = sum_H = 0.0
-        corun_updates = 0
-        # engine-owned because version bookkeeping is engine-owned; sync-
-        # style policies open rounds (decide_loop), the engine closes them
-        self._round_open = False
-        pstate = policy.loop_init(self)
+        carry = es.carry
 
         for t in range(T):
             arrivals = 0
@@ -355,7 +455,7 @@ class FederatedSim:
 
             # --- policy decisions for waiting users -------------------------
             waiting = [u for u in self.users if u.mode == "waiting"]
-            served, gap_sum = policy.decide_loop(self, t, waiting, pstate)
+            served, gap_sum = policy.decide_loop(self, t, waiting, carry)
 
             # --- training progression ---------------------------------------
             for u in self.users:
@@ -364,7 +464,7 @@ class FederatedSim:
                     if u.train_remaining <= 0:
                         self._finish_training(u, t, push_log)
                         if u.corun:
-                            corun_updates += 1
+                            es.corun_updates += 1
             if policy.sync_rounds and self._round_open and \
                     all(u.mode != "training" for u in self.users):
                 self._round_open = False
@@ -382,14 +482,15 @@ class FederatedSim:
 
             # --- queues ------------------------------------------------------
             self.sched.update_queues(arrivals, served, gap_sum)
-            sum_Q += self.sched.Q
-            sum_H += self.sched.H
+            es.Q, es.H = self.sched.Q, self.sched.H
+            es.sum_Q += es.Q
+            es.sum_H += es.H
 
             if t % cfg.trace_every == 0:
                 trace_t.append(t)
                 trace_E.append(sum(u.energy_j for u in self.users))
-                trace_Q.append(self.sched.Q)
-                trace_H.append(self.sched.H)
+                trace_Q.append(es.Q)
+                trace_H.append(es.H)
             eval_every = self.ml.get("eval_every", 600)
             if self.ml.get("evaluate") and eval_every and \
                     t % eval_every == 0 and t > 0:
@@ -404,6 +505,6 @@ class FederatedSim:
             trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
             trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
             push_log=push_log, accuracy=accuracy,
-            mean_Q=sum_Q / T if T else 0.0,
-            mean_H=sum_H / T if T else 0.0,
-            corun_fraction=corun_updates / max(updates, 1))
+            mean_Q=es.sum_Q / T if T else 0.0,
+            mean_H=es.sum_H / T if T else 0.0,
+            corun_fraction=es.corun_updates / max(updates, 1))

@@ -1,25 +1,29 @@
 """Struct-of-arrays vectorized simulator engine.
 
 Replaces ``FederatedSim``'s per-slot, per-user Python object loop with
-batched per-user state arrays — mode, cooldown, app id, app/train remaining,
-pulled-at version, energy, idle gap all live in ``(n_users,)`` NumPy arrays,
-and the fleet's catalog is flattened into ``(n_devices, n_apps)`` lookup
-tables (``FleetSpec.tables``) gathered per user once at startup. Every
-phase of a slot — app arrivals, cooldown transitions, policy decisions,
-training progression, Eq. (10) energy accounting, Eq. (15)/(16) queue
-updates — is a handful of vector ops instead of an O(n) Python loop.
+batched per-user state arrays — the run's ``EngineState``
+(core/engine_state.py): mode, cooldown, app id, app/train remaining,
+pulled-at version, energy, idle gap all live in ``(n_users,)`` NumPy
+arrays, and the fleet's catalog is flattened into ``(n_devices, n_apps)``
+lookup tables (``FleetSpec.tables``) gathered per user once at startup.
+Every phase of a slot — app arrivals, cooldown transitions, policy
+decisions, training progression, Eq. (10) energy accounting, Eq. (15)/(16)
+queue updates — is a handful of vector ops instead of an O(n) Python loop.
 
-Policy dispatch is pluggable (core/policies.py): the engine exposes its
-batched state as ``_NumpyEngine`` attributes and calls the policy's
-``decide_vectorized`` hook once per slot; registered paper policies and
-any custom policy with the hook run here unmodified.
+Policy dispatch is pluggable (core/policies.py): the engine exposes the
+shared state as ``eng.s`` (an ``EngineState``) plus per-slot masks and
+catalog gathers, threads the policy's carry pytree
+(``Policy.init_carry``), and calls the ``decide_vectorized`` hook once per
+slot; registered paper policies and any custom policy with the hook run
+here unmodified.
 
 Real-ML runs are batched too (core/realml.py): with an ``ml_backend`` the
-engine snapshots pulls per starting cohort (``pull_batch``) and, when a
-slot's trainers finish, dispatches ONE vmap'd local-train over the whole
-finisher cohort followed by ordered server pushes
-(``_finish_cohort``) — instead of the loop engine's n Python callbacks.
-Accuracy is sampled on the same cadence as the loop oracle.
+engine snapshots pulls per starting cohort (``pull_batch``, at the
+EngineState's global version) and, when a slot's trainers finish,
+dispatches ONE vmap'd local-train over the whole finisher cohort followed
+by ordered server pushes (``_finish_cohort``) — instead of the loop
+engine's n Python callbacks. Accuracy is sampled on the same cadence as
+the loop oracle.
 
 Equivalence contract: seeded runs reproduce the reference loop engine
 (``FederatedSim._run_loop``) — identical decision sequences, update counts,
@@ -30,24 +34,35 @@ schedules raises the next user's in-flight count); ``OnlineScheduler.
 decide_batch`` collapses it to one elementwise comparison when H == 0 (the
 gap term then cannot affect the argmin) and replays it exactly otherwise.
 
-``backend="jax"`` additionally compiles the whole trace-mode horizon into a
-single ``jax.lax.scan`` over slots (jit-compiled once per (shape, policy
-object), scalar knobs like V/L_b passed as traced operands so policy sweeps
-reuse the executable). The jax backend covers policies implementing the
-``jax_decide`` hook; others (e.g. offline's knapsack DP) stay on the numpy
-path. It returns an empty push log (per-push dicts cannot stream out of a
-scan); enable jax x64 for f64 parity with the numpy engines.
+``backend="jax"`` compiles the horizon into ``lax.scan`` chunks of
+``SimConfig.jax_chunk`` slots whose carry is the SAME ``EngineState``
+pytree (jit-compiled once per (shape, policy class); scalar knobs like
+V/L_b and policy ``scan_operands`` passed as traced operands so sweeps
+reuse the executable). The jax backend covers every policy implementing
+the ``scan_step`` carry hook — all registry policies, including offline
+(host knapsack via ``jax.pure_callback`` at plan slots) and greedy (wait
+counters carried through the scan); others stay on the numpy path.
+
+Push logs stream out of the scan through a fixed-width event buffer
+(``engine_state.PushBuffer``): each finishing user scatters one
+``(t, user, lag, gap, corun)`` row at the buffer cursor, the host drains
+and resets the buffer after every chunk, and an overflowing chunk is
+re-run with a doubled buffer (``count`` always records the true push
+total) — so ``collect_push_log=True`` costs O(chunk) memory at any fleet
+size, never O(T * n). Enable jax x64 for f64 parity with the numpy
+engines; in f32, user ids stay exact up to 2**24.
 """
 from __future__ import annotations
 
-import warnings
 from types import SimpleNamespace
 from typing import List, Tuple
 
 import numpy as np
 
-from .policies import (MODE_COOL, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
-                       PLAN_HOLD, PLAN_SEP)
+from .engine_state import (EngineState, PushBuffer, PushLog, MODE_COOL,
+                           MODE_TRAIN, MODE_WAIT, PLAN_CORUN, PLAN_HOLD,
+                           PLAN_SEP)
+from .policies import _jax_gradient_gap, _jax_trace_v_norm
 from .simulator import SimResult, n_slots, trace_v_norm
 from .staleness import gradient_gap
 
@@ -77,18 +92,21 @@ def _user_tables(sim):
 # NumPy backend
 # ======================================================================
 class _NumpyEngine:
-    """Per-run batched state + the slot loop. Policies read/mutate the
-    public attributes from their ``decide_vectorized`` hook:
+    """Per-run slot loop over the shared ``EngineState``. Policies
+    read/mutate state from their ``decide_vectorized`` hook:
 
+    - ``s``: the run's ``EngineState`` (``sim.state``) — per-user arrays,
+      scheduler scalars (version, in_flight, round_open, Q, H) and the
+      policy carry
     - ``waiting`` / ``has_app``: this slot's masks (set before dispatch)
     - ``p_if_train`` / ``p_if_idle``: Eq. (10) powers of the train/idle
-      branch per user (co-run aware, maintained incrementally)
-    - ``idle_gap``, ``plan``, ``app``, ``T_COR``, ``SRATE``, ``app_sched``,
-      ``app_choice``: policy-specific state and lookahead tables
-    - ``in_flight``, ``version``, ``round_open``: server-side counters
+      branch per user (co-run aware, maintained incrementally — derived
+      caches over ``s.app``, not canonical state)
+    - ``T_COR``, ``SRATE``, ``app_sched``, ``app_choice``: lookahead tables
     - ``begin_training(idx)``: schedule users ``idx`` this slot
     - ``v_norm(ver)``: momentum-norm model (honors the ``v_norm`` hook)
-    - ``sched``: the OnlineScheduler queue state (Q, H) + decide_batch
+    - ``sched``: the OnlineScheduler queue-update rule + decide_batch
+      (``s.Q``/``s.H`` mirror its state after every slot)
     """
 
     def __init__(self, sim):
@@ -100,7 +118,7 @@ class _NumpyEngine:
          self.T_COR, self.SRATE) = _user_tables(sim)
         self.OVERHEAD = self.PS - self.PI
         self.app_sched, self.app_choice = sim.app_sched, sim.app_choice
-        self.sched = sim.sched             # queue state (Q, H) + decide_batch
+        self.sched = sim.sched             # queue update rule + decide_batch
         self.policy = sim.policy
         self._v_hook = sim.ml.get("v_norm")
         # batched real-ML backend (core/realml.py): pull/train/push whole
@@ -108,19 +126,8 @@ class _NumpyEngine:
         self.backend = sim.ml_backend
         self.ar = np.arange(self.n)
 
-        # ---- per-user state, struct-of-arrays -------------------------
-        n = self.n
-        self.mode = np.full(n, MODE_COOL, dtype=np.int8)
-        self.cooldown = np.zeros(n, dtype=np.int64)
-        self.app = np.full(n, -1, dtype=np.int64)
-        self.app_rem = np.zeros(n)
-        self.train_rem = np.zeros(n)
-        self.corun = np.zeros(n, dtype=bool)
-        self.idle_gap = np.zeros(n)
-        self.pulled_at = np.zeros(n, dtype=np.int64)
-        self.energy = np.zeros(n)
-        self.updates = np.zeros(n, dtype=np.int64)
-        self.plan = np.full(n, PLAN_HOLD, dtype=np.int8)
+        # ---- the shared state container -------------------------------
+        self.s = sim.state
         # App-dependent lookups, maintained incrementally on the (rare) app
         # arrival/expiry events instead of re-gathered every slot:
         #   p_if_train  = Eq. 10 power if training (P^{a'} with app, else P^b)
@@ -128,13 +135,10 @@ class _NumpyEngine:
         #   t_if_corun  = co-run training duration for the current app
         self.p_if_train = self.PT.copy()
         self.p_if_idle = self.PI.copy()
-        self.t_if_corun = np.zeros(n)
+        self.t_if_corun = np.zeros(self.n)
 
-        self.version = 0
-        self.in_flight = 0
-        self.round_open = False
-        self.waiting = np.zeros(n, dtype=bool)
-        self.has_app = np.zeros(n, dtype=bool)
+        self.waiting = np.zeros(self.n, dtype=bool)
+        self.has_app = np.zeros(self.n, dtype=bool)
 
     def v_norm(self, ver):
         """ver may be a scalar or an array of per-finisher versions; the
@@ -153,9 +157,9 @@ class _NumpyEngine:
         cfg = self.cfg
         if b.sync == self.policy.sync_rounds:
             if b.sync:
-                trained = b.local_train_batch(fidx, self.pulled_at[fidx])
+                trained = b.local_train_batch(fidx, self.s.pulled_at[fidx])
                 return b.submit_batch(fidx, trained, lags, cfg.eta, cfg.beta)
-            return b.finish_async_batch(fidx, self.pulled_at[fidx], lags,
+            return b.finish_async_batch(fidx, self.s.pulled_at[fidx], lags,
                                         cfg.eta, cfg.beta,
                                         need_gaps=cfg.collect_push_log)
         # policy/backend round-mode mismatch: the loop oracle finds no
@@ -165,28 +169,27 @@ class _NumpyEngine:
 
     def begin_training(self, idx):
         """idx: user indices starting training this slot (corun iff app)."""
-        ha = self.app[idx] >= 0
-        self.corun[idx] = ha
-        self.train_rem[idx] = np.where(ha, self.t_if_corun[idx],
-                                       self.TT[idx])
-        self.mode[idx] = MODE_TRAIN
-        self.pulled_at[idx] = self.version
-        self.in_flight += len(idx)
+        s = self.s
+        ha = s.app[idx] >= 0
+        s.corun[idx] = ha
+        s.train_rem[idx] = np.where(ha, self.t_if_corun[idx], self.TT[idx])
+        s.mode[idx] = MODE_TRAIN
+        s.pulled_at[idx] = s.version
+        s.in_flight += len(idx)
         if self.backend is not None:
-            self.backend.pull_batch(np.asarray(idx), self.version)
+            self.backend.pull_batch(np.asarray(idx), s.version)
 
     def run(self) -> SimResult:
         cfg = self.cfg
         policy = self.policy
         t_d = cfg.t_d
         n, T = self.n, self.T
+        s = self.s
         sched = self.sched
         app_sched, app_choice = self.app_sched, self.app_choice
-        mode, app, app_rem = self.mode, self.app, self.app_rem
-        pstate = policy.vec_init(self)
+        mode, app, app_rem = s.mode, s.app, s.app_rem
+        carry = s.carry
 
-        sum_Q = sum_H = 0.0
-        corun_updates = 0
         trace_t: List[int] = []
         trace_E: List[float] = []
         trace_Q: List[float] = []
@@ -194,8 +197,7 @@ class _NumpyEngine:
         accuracy: List[Tuple] = []
         eval_every = self.backend.eval_every if self.backend is not None \
             else 0
-        # push log collected as per-slot array chunks, expanded at the end
-        push_chunks: List[Tuple] = []
+        push_log = PushLog()      # fixed-width blocks, decoded lazily
 
         for t in range(T):
             # --- app arrivals / progression -------------------------------
@@ -223,58 +225,57 @@ class _NumpyEngine:
             arrivals = 0
             cooling = mode == MODE_COOL
             if cooling.any():
-                self.cooldown[cooling] -= 1
-                to_wait = cooling & (self.cooldown <= 0)
+                s.cooldown[cooling] -= 1
+                to_wait = cooling & (s.cooldown <= 0)
                 arrivals = int(np.count_nonzero(to_wait))
                 if arrivals:
                     mode[to_wait] = MODE_WAIT
-                    self.plan[to_wait] = PLAN_HOLD
+                    s.plan[to_wait] = PLAN_HOLD
             self.waiting = mode == MODE_WAIT
             self.has_app = app >= 0
 
             # --- policy decisions for waiting users ------------------------
-            served, gap_sum = policy.decide_vectorized(self, t, pstate)
+            served, gap_sum = policy.decide_vectorized(self, t, carry)
 
             # --- training progression --------------------------------------
             training = mode == MODE_TRAIN
             if training.any():
-                self.train_rem[training] -= t_d
-                fin = training & (self.train_rem <= 0.0)
+                s.train_rem[training] -= t_d
+                fin = training & (s.train_rem <= 0.0)
                 fidx = np.nonzero(fin)[0]
                 k = len(fidx)
                 if k:
                     gaps = None
                     if policy.sync_rounds:
-                        lags = self.version - self.pulled_at[fidx]
+                        lags = s.version - s.pulled_at[fidx]
                         if self.backend is None and cfg.collect_push_log:
-                            gaps = gradient_gap(self.v_norm(self.version),
+                            gaps = gradient_gap(self.v_norm(s.version),
                                                 lags, cfg.eta, cfg.beta)
                     else:
                         # async finishers bump the version one by one, in
                         # user order — each sees the versions of earlier
                         # finishers
-                        vers = self.version + np.arange(k)
-                        lags = vers - self.pulled_at[fidx]
+                        vers = s.version + np.arange(k)
+                        lags = vers - s.pulled_at[fidx]
                         if self.backend is None and cfg.collect_push_log:
                             gaps = gradient_gap(self.v_norm(vers), lags,
                                                 cfg.eta, cfg.beta)
-                        self.version += k
+                        s.version += k
                     if self.backend is not None:
                         # one vmap'd local-train + ordered server pushes
                         gaps = self._finish_cohort(fidx, lags)
-                    self.updates[fidx] += 1
+                    s.updates[fidx] += 1
                     mode[fidx] = MODE_COOL
-                    self.cooldown[fidx] = cfg.ready_delay
-                    self.idle_gap[fidx] = 0.0
-                    self.in_flight -= k
-                    corun_updates += int(np.count_nonzero(self.corun[fidx]))
+                    s.cooldown[fidx] = cfg.ready_delay
+                    s.idle_gap[fidx] = 0.0
+                    s.in_flight -= k
+                    s.corun_updates += int(np.count_nonzero(s.corun[fidx]))
                     if cfg.collect_push_log:
-                        push_chunks.append((t, fidx, lags, gaps,
-                                            self.corun[fidx].copy()))
-            if policy.sync_rounds and self.round_open and \
+                        push_log.extend(t, fidx, lags, gaps, s.corun[fidx])
+            if policy.sync_rounds and s.round_open and \
                     not np.any(mode == MODE_TRAIN):
-                self.round_open = False
-                self.version += 1
+                s.round_open = False
+                s.version += 1
                 if self.backend is not None and self.backend.sync:
                     self.backend.sync_aggregate()
 
@@ -285,83 +286,93 @@ class _NumpyEngine:
                 p = np.where(mode == MODE_WAIT, p + self.OVERHEAD, p)
             if t_d != 1.0:     # p * 1.0 == p bitwise; skip the alloc
                 p *= t_d
-            self.energy += p
+            s.energy += p
 
             # --- queues -----------------------------------------------------
             sched.update_queues(arrivals, served, gap_sum)
-            sum_Q += sched.Q
-            sum_H += sched.H
+            s.Q, s.H = sched.Q, sched.H
+            s.sum_Q += s.Q
+            s.sum_H += s.H
             if t % cfg.trace_every == 0:
                 trace_t.append(t)
-                trace_E.append(float(self.energy.sum()))
-                trace_Q.append(sched.Q)
-                trace_H.append(sched.H)
+                trace_E.append(float(s.energy.sum()))
+                trace_Q.append(s.Q)
+                trace_H.append(s.H)
             if eval_every and t % eval_every == 0 and t > 0:
                 accuracy.append((t, self.backend.evaluate()))
 
         if self.backend is not None:
             accuracy.append((T, self.backend.evaluate()))
-        push_log = []
-        for t, fidx, lags, gaps, cor in push_chunks:
-            for j in range(len(fidx)):
-                push_log.append({"t": t, "user": int(fidx[j]),
-                                 "lag": int(lags[j]), "gap": float(gaps[j]),
-                                 "corun": bool(cor[j])})
-        updates_total = int(self.updates.sum())
+        updates_total = int(s.updates.sum())
         return SimResult(
-            energy_j=float(self.energy.sum()),
+            energy_j=float(s.energy.sum()),
             updates=updates_total,
             trace_t=np.array(trace_t), trace_energy=np.array(trace_E),
             trace_Q=np.array(trace_Q), trace_H=np.array(trace_H),
             push_log=push_log, accuracy=accuracy,
-            mean_Q=sum_Q / T if T else 0.0,
-            mean_H=sum_H / T if T else 0.0,
-            corun_fraction=corun_updates / max(updates_total, 1))
+            mean_Q=s.sum_Q / T if T else 0.0,
+            mean_H=s.sum_H / T if T else 0.0,
+            corun_fraction=s.corun_updates / max(updates_total, 1))
 
 
 # ======================================================================
-# JAX backend: the whole horizon as one lax.scan, jitted per config shape
+# JAX backend: the horizon as chunked lax.scans over the EngineState
+# pytree, jitted per (shape, policy class, chunk, buffer capacity)
 # ======================================================================
 _JAX_FN_CACHE: dict = {}
-_JAX_FN_CACHE_MAX = 16
+_JAX_FN_CACHE_MAX = 32
 
 
-def _jax_step_fn(n: int, T: int, policy, overhead: bool):
-    """Build + jit the scan over slots, memoized on (shapes,
-    ``policy.jax_cache_key()``, overhead flag). Parameter-free registry
-    policies key by class, so both ``SimConfig(policy="online")`` and a
-    fresh ``OnlinePolicy()`` per run share one executable; scalar knobs
-    (V, L_b, ...) are traced operands, so e.g. a V-sweep compiles once.
-    The policy's ``jax_decide`` hook supplies the decision block;
-    everything else — arrivals, cooldowns, training progression, Eq. 10
-    energy, Eq. 15/16 queues — is engine code shared by every policy."""
-    key = (n, T, policy.jax_cache_key(), overhead)
+def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
+                  collect: bool, capacity: int, statics: tuple = ()):
+    """Build + jit one scan chunk, memoized on (shapes,
+    ``policy.jax_cache_key()``, overhead/collect flags, event-buffer
+    capacity, the policy's ``scan_statics``). Policies key by class by
+    default, so both ``SimConfig(policy="online")`` and a fresh
+    ``OnlinePolicy()`` per run share one executable; scalar knobs (V,
+    L_b, ..., ``scan_operands``) are traced operands, so e.g. a V-sweep
+    compiles once. The policy's ``scan_step`` hook supplies the decision
+    block; everything else — arrivals, cooldowns, training progression,
+    Eq. 10 energy, Eq. 15/16 queues, the push-event scatter — is engine
+    code shared by every policy."""
+    key = (n, chunk, T, policy.jax_cache_key(), overhead, collect, capacity,
+           statics)
     fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
     if fn is None:
-        fn = _build_jax_step_fn(n, T, policy, overhead)
+        fn = _build_jax_chunk_fn(n, chunk, T, policy, overhead, collect,
+                                 capacity, statics)
         if len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
             _JAX_FN_CACHE.pop(next(iter(_JAX_FN_CACHE)))  # evict LRU
     _JAX_FN_CACHE[key] = fn
     return fn
 
 
-def _build_jax_step_fn(n: int, T: int, policy, overhead: bool):
+def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
+                        collect: bool, capacity: int, statics: tuple = ()):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    def simulate(tables, app_sched, app_choice, scalars):
-        PT, TT, PI, PS, P_APP, P_COR, T_COR = tables
-        (V, L_b, epsilon, eta, beta, v_norm0, t_d, ready_delay) = scalars
+    def simulate(tables, app_sched, app_choice, scalars, pol_ops, t0,
+                 state):
+        PT, TT, PI, PS, P_APP, P_COR, T_COR, SRATE = tables
+        (V, L_b, epsilon, eta, beta, v_norm0, t_d, ready_delay,
+         offline_window, offline_resolution) = scalars
         f = PT.dtype
         i = jnp.asarray(0).dtype     # default int dtype (honors x64)
         ar = jnp.arange(n)
+        sched_c = lax.dynamic_slice(app_sched, (t0, 0), (chunk, n))
+        choice_c = lax.dynamic_slice(app_choice, (t0, 0), (chunk, n))
+        ts = t0 + jnp.arange(chunk)
 
-        def step(carry, xs):
-            (mode, cooldown, app, app_rem, train_rem, corun, idle_gap,
-             pulled_at, energy, updates, version, in_flight, round_open,
-             Q, H, sum_Q, sum_H, corun_upd) = carry
-            srow, crow = xs
+        def step(s, xs):
+            srow, crow, t = xs
+            mode, cooldown, app, app_rem = s.mode, s.cooldown, s.app, \
+                s.app_rem
+            train_rem, corun, idle_gap = s.train_rem, s.corun, s.idle_gap
+            pulled_at, energy, updates = s.pulled_at, s.energy, s.updates
+            version, in_flight = s.version, s.in_flight
+            Q, H = s.Q, s.H
 
             # apps
             has_app0 = app >= 0
@@ -382,23 +393,32 @@ def _build_jax_step_fn(n: int, T: int, policy, overhead: bool):
             cooldown = jnp.where(cooling, cooldown - 1, cooldown)
             to_wait = cooling & (cooldown <= 0)
             mode = jnp.where(to_wait, MODE_WAIT, mode)
+            plan = jnp.where(to_wait, PLAN_HOLD, s.plan)
             arrivals = jnp.sum(to_wait)
             waiting = mode == MODE_WAIT
             has_app = app >= 0
 
-            # decisions: the policy's jax hook, on a mutable slot view
+            # decisions: the policy's carry hook, on a mutable slot view
             sv = SimpleNamespace(
-                jnp=jnp, lax=lax, n=n, float_dtype=f, int_dtype=i,
-                waiting=waiting, has_app=has_app,
+                jnp=jnp, lax=lax, jax=jax, n=n, T=T,
+                float_dtype=f, int_dtype=i, t=t,
+                waiting=waiting, has_app=has_app, app=app, updates=updates,
                 pcor_g=pcor_g, papp_g=papp_g, tcor_g=tcor_g,
-                PT=PT, TT=TT, PI=PI, PS=PS,
-                idle_gap=idle_gap, in_flight=in_flight, version=version,
-                round_open=round_open, Q=Q, H=H,
+                PT=PT, TT=TT, PI=PI, PS=PS, T_COR=T_COR, SRATE=SRATE,
+                app_sched=app_sched, app_choice=app_choice,
+                plan=plan, idle_gap=idle_gap, in_flight=in_flight,
+                version=version, round_open=s.round_open, Q=Q, H=H,
+                rng_key=s.rng_key,
                 V=V, L_b=L_b, epsilon=epsilon, eta=eta, beta=beta,
-                v_norm0=v_norm0, t_d=t_d)
-            start, gap_sum = policy.jax_decide(sv)
+                v_norm0=v_norm0, t_d=t_d,
+                offline_window=offline_window,
+                offline_resolution=offline_resolution,
+                consts=pol_ops, statics=statics)
+            carry, (start, gap_sum) = policy.scan_step(s.carry, sv)
             idle_gap = sv.idle_gap
             round_open = sv.round_open
+            plan = sv.plan
+            rng_key = sv.rng_key
             served = jnp.sum(start)
 
             # begin training
@@ -419,7 +439,32 @@ def _build_jax_step_fn(n: int, T: int, policy, overhead: bool):
             cooldown = jnp.where(fin, ready_delay, cooldown)
             idle_gap = jnp.where(fin, 0.0, idle_gap)
             in_flight = in_flight - kfin
-            corun_upd = corun_upd + jnp.sum(fin & corun)
+            corun_updates = s.corun_updates + jnp.sum(fin & corun)
+
+            # push events: scatter one fixed-width row per finisher at the
+            # buffer cursor (user-index order within the slot, the loop
+            # oracle's push order); rows past capacity drop, count stays
+            # exact so the driver can detect overflow and retry
+            events = s.events
+            if collect:
+                rank = jnp.cumsum(fin) - fin
+                if policy.sync_rounds:
+                    lag = version - pulled_at
+                    vn = _jax_trace_v_norm(v_norm0, version, jnp)
+                else:
+                    vers = version + rank
+                    lag = vers - pulled_at
+                    vn = _jax_trace_v_norm(v_norm0, vers, jnp)
+                gap = _jax_gradient_gap(vn, lag, eta, beta)
+                rows = jnp.stack(
+                    [jnp.broadcast_to(t, (n,)).astype(f), ar.astype(f),
+                     lag.astype(f), gap.astype(f), corun.astype(f)],
+                    axis=1)
+                pos = jnp.where(fin, events.count + rank, capacity)
+                events = PushBuffer(
+                    events.rows.at[pos].set(rows, mode="drop"),
+                    events.count + kfin)
+
             if policy.sync_rounds:
                 closed = round_open & (jnp.sum(mode == MODE_TRAIN) == 0)
                 version = version + closed
@@ -439,64 +484,157 @@ def _build_jax_step_fn(n: int, T: int, policy, overhead: bool):
             # queues (Eqs. 15-16)
             Q = jnp.maximum(Q - served, 0.0) + arrivals
             H = jnp.maximum(H + gap_sum - L_b, 0.0)
-            sum_Q = sum_Q + Q
-            sum_H = sum_H + H
-            carry = (mode, cooldown, app, app_rem, train_rem, corun,
-                     idle_gap, pulled_at, energy, updates, version,
-                     in_flight, round_open, Q, H, sum_Q, sum_H, corun_upd)
-            return carry, (Q, H, jnp.sum(energy))
+            s2 = EngineState(
+                mode=mode, cooldown=cooldown, app=app, app_rem=app_rem,
+                train_rem=train_rem, corun=corun, idle_gap=idle_gap,
+                pulled_at=pulled_at, energy=energy, updates=updates,
+                plan=plan, version=version, in_flight=in_flight,
+                round_open=round_open, Q=Q, H=H,
+                sum_Q=s.sum_Q + Q, sum_H=s.sum_H + H,
+                corun_updates=corun_updates, rng_key=rng_key,
+                carry=carry, events=events)
+            return s2, (Q, H, jnp.sum(energy))
 
-        init = (jnp.full(n, MODE_COOL, i), jnp.zeros(n, i),
-                jnp.full(n, -1, i), jnp.zeros(n, f), jnp.zeros(n, f),
-                jnp.zeros(n, bool), jnp.zeros(n, f), jnp.zeros(n, i),
-                jnp.zeros(n, f), jnp.zeros(n, i), jnp.asarray(0, i),
-                jnp.asarray(0, i), jnp.asarray(False),
-                jnp.asarray(0.0, f), jnp.asarray(0.0, f),
-                jnp.asarray(0.0, f), jnp.asarray(0.0, f), jnp.asarray(0, i))
-        carry, traces = lax.scan(step, init, (app_sched, app_choice))
-        return carry, traces
+        return lax.scan(step, state, (sched_c, choice_c, ts))
 
     return jax.jit(simulate)
 
 
+def _state_to_jax(es: EngineState, jax, jnp, f, i) -> EngineState:
+    """Device-array twin of a host EngineState: floats to the run's float
+    dtype (honors x64), ints to the default int dtype, bools and the
+    uint32 rng key as-is; the policy carry pytree converts leaf-wise."""
+    def cast(x):
+        a = np.asarray(x)
+        if a.dtype == np.bool_ or a.dtype == np.uint32:
+            return jnp.asarray(a)
+        if np.issubdtype(a.dtype, np.floating):
+            return jnp.asarray(a, f)
+        return jnp.asarray(a, i)
+
+    return EngineState(
+        mode=cast(es.mode), cooldown=cast(es.cooldown), app=cast(es.app),
+        app_rem=cast(es.app_rem), train_rem=cast(es.train_rem),
+        corun=cast(es.corun), idle_gap=cast(es.idle_gap),
+        pulled_at=cast(es.pulled_at), energy=cast(es.energy),
+        updates=cast(es.updates), plan=cast(es.plan),
+        version=cast(es.version), in_flight=cast(es.in_flight),
+        round_open=cast(es.round_open), Q=cast(es.Q), H=cast(es.H),
+        sum_Q=cast(es.sum_Q), sum_H=cast(es.sum_H),
+        corun_updates=cast(es.corun_updates), rng_key=cast(es.rng_key),
+        carry=jax.tree.map(cast, es.carry), events=None)
+
+
+def _state_to_host(state: EngineState, jax) -> EngineState:
+    """Host (numpy) twin of the final device EngineState: arrays come
+    back as numpy, scalars as python — so ``sim.state`` reads the same
+    after a jax run as after a loop/vectorized one."""
+    return EngineState(
+        mode=np.asarray(state.mode), cooldown=np.asarray(state.cooldown),
+        app=np.asarray(state.app), app_rem=np.asarray(state.app_rem),
+        train_rem=np.asarray(state.train_rem),
+        corun=np.asarray(state.corun), idle_gap=np.asarray(state.idle_gap),
+        pulled_at=np.asarray(state.pulled_at),
+        energy=np.asarray(state.energy), updates=np.asarray(state.updates),
+        plan=np.asarray(state.plan),
+        version=int(state.version), in_flight=int(state.in_flight),
+        round_open=bool(state.round_open),
+        Q=float(state.Q), H=float(state.H),
+        sum_Q=float(state.sum_Q), sum_H=float(state.sum_H),
+        corun_updates=int(state.corun_updates),
+        rng_key=np.asarray(state.rng_key),
+        carry=jax.tree.map(np.asarray, state.carry), events=None)
+
+
+def _next_pow2(k: int) -> int:
+    c = 1
+    while c < k:
+        c <<= 1
+    return c
+
+
 def _run_jax(sim) -> SimResult:
+    import jax
     import jax.numpy as jnp
 
     cfg = sim.cfg
-    if not sim.policy.supports_jax:  # resolve_engine reroutes; be safe
+    policy = sim.policy
+    if not policy.supports_jax:  # resolve_engine reroutes; be safe
         return _NumpyEngine(sim).run()
-    if cfg.collect_push_log:
-        warnings.warn(
-            "engine='jax' cannot stream per-push records out of lax.scan; "
-            "SimResult.push_log will be empty (set collect_push_log=False "
-            "to silence, or use engine='vectorized' for push logs)",
-            RuntimeWarning, stacklevel=3)
     n = cfg.n_users
     T = n_slots(cfg)
-    PT, TT, PI, PS, P_APP, P_COR, T_COR, _ = _user_tables(sim)
+    collect = cfg.collect_push_log
     f = jnp.zeros(0).dtype          # honors jax_enable_x64
-    tables = tuple(jnp.asarray(a, f)
-                   for a in (PT, TT, PI, PS, P_APP, P_COR, T_COR))
+    i = jnp.asarray(0).dtype
+    tables = tuple(jnp.asarray(a, f) for a in _user_tables(sim))
     app_sched = jnp.asarray(sim.app_sched[:T])
     app_choice = jnp.asarray(sim.app_choice[:T], jnp.int32)
     scalars = tuple(jnp.asarray(s, f) for s in (
         cfg.V, cfg.L_b, cfg.epsilon, cfg.eta, cfg.beta, cfg.v_norm0,
-        cfg.t_d)) + (jnp.asarray(cfg.ready_delay),)
+        cfg.t_d)) + (jnp.asarray(cfg.ready_delay),) + tuple(
+        jnp.asarray(s, f) for s in (cfg.offline_window,
+                                    cfg.offline_resolution))
+    pol_ops = tuple(jnp.asarray(v) for v in policy.scan_operands(cfg))
+    statics = tuple(policy.scan_statics(cfg))
+    overhead = cfg.include_scheduler_overhead
+    state = _state_to_jax(sim.state, jax, jnp, f, i)
+    cap = 0
+    if collect:
+        # initial per-chunk event capacity; an overflowing chunk is
+        # re-run from its saved entry state with a doubled buffer, so the
+        # guess only costs (rare) recompiles, never correctness
+        cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n))
+        state = state.replace(events=PushBuffer(
+            jnp.zeros((cap, 5), f), jnp.asarray(0, i)))
 
-    fn = _jax_step_fn(n, T, sim.policy, cfg.include_scheduler_overhead)
-    carry, (qs, hs, es) = fn(tables, app_sched, app_choice, scalars)
-    energy_total = float(jnp.sum(carry[8]))
-    updates_total = int(jnp.sum(carry[9]))
-    sum_Q, sum_H = float(carry[15]), float(carry[16])
-    corun_updates = int(carry[17])
+    log = PushLog()
+    qs_parts, hs_parts, e_parts = [], [], []
+    chunk = min(cfg.jax_chunk, T) if T else 0
+    t0 = 0
+    while t0 < T:
+        clen = min(chunk, T - t0)
+        fn = _jax_chunk_fn(n, clen, T, policy, overhead, collect, cap,
+                           statics)
+        prev = state
+        state, (qs, hs, esum) = fn(tables, app_sched, app_choice, scalars,
+                                   pol_ops, jnp.asarray(t0, i), state)
+        if collect:
+            cnt = int(state.events.count)
+            if cnt > cap:
+                # buffer overflow: double and re-run this chunk from its
+                # saved entry state (count is exact, rows past cap dropped)
+                cap = _next_pow2(cnt)
+                state = prev.replace(events=PushBuffer(
+                    jnp.zeros((cap, 5), f), jnp.asarray(0, i)))
+                continue
+            if cnt:
+                log.extend_rows(np.asarray(state.events.rows[:cnt]))
+            state = state.replace(events=PushBuffer(
+                state.events.rows, jnp.asarray(0, i)))
+        qs_parts.append(np.asarray(qs, dtype=float))
+        hs_parts.append(np.asarray(hs, dtype=float))
+        e_parts.append(np.asarray(esum, dtype=float))
+        t0 += clen
+
+    # the run's final state, readable on the host like the other engines'
+    sim.state = _state_to_host(state, jax)
+    energy_total = float(jnp.sum(state.energy))
+    updates_total = int(jnp.sum(state.updates))
+    sum_Q, sum_H = float(state.sum_Q), float(state.sum_H)
+    corun_updates = int(state.corun_updates)
     idx = np.arange(0, T, cfg.trace_every)
-    qs, hs, es = (np.asarray(a, dtype=float) for a in (qs, hs, es))
+    if qs_parts:
+        qs = np.concatenate(qs_parts)
+        hs = np.concatenate(hs_parts)
+        es = np.concatenate(e_parts)
+    else:
+        qs = hs = es = np.zeros(0)
     return SimResult(
         energy_j=energy_total,
         updates=updates_total,
         trace_t=idx.copy(), trace_energy=es[idx],
         trace_Q=qs[idx], trace_H=hs[idx],
-        push_log=[], accuracy=[],
+        push_log=log, accuracy=[],
         mean_Q=sum_Q / T if T else 0.0,
         mean_H=sum_H / T if T else 0.0,
         corun_fraction=corun_updates / max(updates_total, 1))

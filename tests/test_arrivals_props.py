@@ -85,6 +85,72 @@ class TestSampleContract:
             check_contract(resolve_arrival(name), T, n, seed)
 
 
+class TestPerUserRates:
+    """Per-user arrival-rate heterogeneity: BernoulliArrivals accepts an
+    (n_users,) rate vector; a vector of identical entries must be
+    bit-identical to the scalar process (same uniform block, same
+    comparison), so existing seeded runs are untouched."""
+
+    @settings(max_examples=25, **COMMON)
+    @given(T=st.integers(0, 300), n=st.integers(1, 32),
+           p=st.floats(0.0, 1.0), seed=st.integers(0, 2 ** 20))
+    def test_uniform_vector_bit_identical_to_scalar(self, T, n, p, seed):
+        a_sched, a_choice = BernoulliArrivals(p).sample(
+            np.random.default_rng(seed), T, n, len(APPS))
+        b_sched, b_choice = BernoulliArrivals(np.full(n, p)).sample(
+            np.random.default_rng(seed), T, n, len(APPS))
+        np.testing.assert_array_equal(a_sched, b_sched)
+        np.testing.assert_array_equal(a_choice, b_choice)
+
+    @settings(max_examples=25, **COMMON)
+    @given(T=st.integers(1, 300), n=st.integers(2, 32),
+           seed=st.integers(0, 2 ** 20))
+    def test_heterogeneous_rates_respected(self, T, n, seed):
+        rates = np.zeros(n)
+        rates[0] = 1.0                 # always arrives
+        sched, _ = check_contract(BernoulliArrivals(rates), T, n, seed)
+        assert sched[:, 0].all()
+        assert not sched[:, 1:].any()  # zero-rate users never arrive
+
+    def test_vector_length_mismatch_raises(self):
+        proc = BernoulliArrivals(np.full(4, 0.01))
+        with pytest.raises(ValueError, match="users"):
+            proc.sample(np.random.default_rng(0), 10, 5, len(APPS))
+
+    def test_bad_vector_rejected(self):
+        with pytest.raises(ValueError, match="\\[0, 1\\]"):
+            BernoulliArrivals(np.array([0.1, 1.5]))
+        with pytest.raises(ValueError, match="scalar or"):
+            BernoulliArrivals(np.zeros((2, 2)))
+
+    def test_simconfig_accepts_and_validates_vector(self):
+        from repro.core.simulator import FederatedSim, SimConfig
+        rates = np.linspace(0.0, 0.05, 6)
+        cfg = SimConfig(policy="immediate", n_users=6, horizon_s=300,
+                        app_arrival_p=rates, seed=0)
+        sim = FederatedSim(cfg)
+        assert not sim.app_sched[:, 0].any()    # rate-0 user
+        with pytest.raises(ValueError, match="entries"):
+            SimConfig(policy="immediate", n_users=4,
+                      app_arrival_p=np.zeros(3))
+        with pytest.raises(ValueError, match="\\[0, 1\\]"):
+            SimConfig(policy="immediate", n_users=2,
+                      app_arrival_p=[0.5, 1.5])
+
+    def test_vector_rate_engine_parity(self):
+        """Heterogeneous rates flow through Scenario to every engine."""
+        from repro.core import Scenario
+        rates = np.linspace(0.002, 0.03, 8)
+        kw = dict(policy="online", n_users=8, horizon_s=900, seed=3,
+                  app_arrival_p=rates)
+        a = Scenario(engine="loop", **kw).run()
+        b = Scenario(engine="vectorized", **kw).run()
+        assert a.updates == b.updates
+        assert a.energy_j == pytest.approx(b.energy_j, rel=1e-9)
+        assert [(e["t"], e["user"]) for e in a.push_log] == \
+               [(e["t"], e["user"]) for e in b.push_log]
+
+
 class TestTraceRoundTrip:
     @settings(max_examples=25, **COMMON)
     @given(Tr=st.integers(1, 120), T=st.integers(1, 300),

@@ -50,8 +50,6 @@ class TestSingleUser:
     @pytest.mark.parametrize("engine", ALL_ENGINES)
     @pytest.mark.parametrize("policy", POLICIES)
     def test_n_users_1_runs_and_agrees(self, engine, policy):
-        if engine == "jax" and policy == "offline":
-            pytest.skip("offline degrades to vectorized (no jax hook)")
         kw = dict(n_users=1, horizon_s=800, app_arrival_p=0.01, seed=5)
         a = run("loop", policy=policy, **kw)
         b = run(engine, policy=policy, **kw)

@@ -1,22 +1,27 @@
 """Engine-dispatch matrix: every (engine x ml_mode x policy) combination
-either resolves to a documented engine or raises the documented error.
+either resolves to a documented engine or raises the documented error —
+plus the carry-protocol parity matrix pinning every registry policy's
+schedule on every engine against the loop oracle, bit for bit.
 
 ``FederatedSim.resolve_engine`` encodes the fallback rules this repo's
 engines rely on (and which the batched real-ML path relaxed):
 
 * trace mode, no hooks: ``auto`` -> vectorized when the policy has the
-  hook; ``jax`` degrades to vectorized for policies without a jax hook
-  (offline, greedy).
+  hook; ``jax`` runs every policy with the ``scan_step`` carry hook (all
+  registry policies, offline and greedy included) and degrades to
+  vectorized only for custom policies without it.
 * real mode WITH a batched ml_backend: vectorized-capable — ``auto`` and
   ``vectorized`` run the batched engine, ``jax`` degrades to vectorized
-  (Python callbacks cannot live inside lax.scan), ``loop`` drives the
-  same backend through its hooks() adapter.
+  (per-slot Python callbacks cannot live inside lax.scan), ``loop``
+  drives the same backend through its hooks() adapter.
 * real mode WITHOUT a backend (per-user hooks or nothing): loop only —
   ``vectorized``/``jax`` raise ValueError.
 
 Each resolvable combination is also *run* for a short horizon, so the
 matrix pins behaviour, not just the resolver's return value.
 """
+import hashlib
+
 import numpy as np
 import pytest
 
@@ -105,3 +110,60 @@ class TestDispatchMatrix:
         cfg = SimConfig(policy="online", n_users=4, horizon_s=60)
         sim = FederatedSim(cfg, ml_hooks={"v_norm": lambda: 1.0})
         assert sim.resolve_engine() == "vectorized"
+
+
+# ---------------------------------------------------------------------------
+# Carry-protocol parity matrix (policy x engine): the batched engines must
+# reproduce the loop oracle's SCHEDULE bit for bit — every push event's
+# (slot, user, lag, corun) — including the stateful policies whose carry
+# (greedy wait counters, offline plan slots) now threads through lax.scan.
+# ---------------------------------------------------------------------------
+def schedule_digest(push_log) -> str:
+    return hashlib.sha256(
+        ";".join(f'{e["t"]},{e["user"]},{e["lag"]},{int(e["corun"])}'
+                 for e in push_log).encode()).hexdigest()
+
+
+class TestCarryProtocolParity:
+    @pytest.fixture(autouse=True)
+    def _x64(self):
+        """f64 keeps the jax engine bit-comparable with the loop oracle."""
+        import jax
+        prev = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        yield
+        jax.config.update("jax_enable_x64", prev)
+
+    # tight L_b builds staleness pressure (H > 0) inside the short
+    # horizon, so the online policy's sequential in-slot coupling and the
+    # offline knapsack's budget both actually bind
+    KW = dict(n_users=10, horizon_s=1500, app_arrival_p=0.01, seed=11,
+              V=2000.0, L_b=2.0)
+
+    @pytest.fixture(scope="class")
+    def oracle(self):
+        cache = {}
+
+        def get(policy):
+            if policy not in cache:
+                cache[policy] = FederatedSim(SimConfig(
+                    policy=policy, engine="loop", **self.KW)).run()
+            return cache[policy]
+
+        return get
+
+    @pytest.mark.parametrize("engine", ("vectorized", "jax"))
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_schedule_bit_equality_vs_loop(self, oracle, policy, engine):
+        a = oracle(policy)
+        r = FederatedSim(SimConfig(policy=policy, engine=engine,
+                                   **self.KW)).run()
+        assert r.updates == a.updates
+        assert len(r.push_log) == len(a.push_log)
+        assert schedule_digest(r.push_log) == schedule_digest(a.push_log)
+        assert r.energy_j == pytest.approx(a.energy_j, rel=1e-9)
+        assert r.mean_Q == pytest.approx(a.mean_Q, rel=1e-9, abs=1e-12)
+        assert r.mean_H == pytest.approx(a.mean_H, rel=1e-6, abs=1e-9)
+        np.testing.assert_allclose([e["gap"] for e in r.push_log],
+                                   [e["gap"] for e in a.push_log],
+                                   rtol=1e-9, atol=1e-15)

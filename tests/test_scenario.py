@@ -5,6 +5,12 @@ arrival / fleet compositions, and loop-vs-vectorized parity for all of them.
 paper policies as produced by the pre-registry engines (PR 1): registry-
 constructed policies must reproduce them bit-for-bit — energies, update
 counts, queue means and the full push-log digest — on every engine.
+
+(Push-log digests: PR 4's ``PushLog`` normalizes every engine's entries to
+python scalars, so the loop engine's digests — which historically hashed
+``np.float64`` reprs — were regenerated to the values the vectorized
+engine always produced; the numeric content is unchanged and all engines
+now digest identically.)
 """
 import hashlib
 import json
@@ -371,10 +377,24 @@ class TestGreedyPolicy:
         assert g.updates == i.updates
         assert g.energy_j == pytest.approx(i.energy_j, rel=1e-12)
 
-    def test_jax_request_degrades_to_vectorized(self):
+    def test_greedy_runs_on_jax(self):
+        """The carry protocol carries greedy's wait counters through the
+        scan: engine='jax' resolves to the jax engine (it used to degrade
+        to vectorized) and reproduces the loop schedule."""
+        import jax
         sim = Scenario(policy="greedy", engine="jax", n_users=8,
                        horizon_s=300).build()
-        assert sim.resolve_engine() == "vectorized"
+        assert sim.resolve_engine() == "jax"
+        prev = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        try:
+            kw = dict(n_users=10, horizon_s=1200, seed=4, app_arrival_p=0.02)
+            a = Scenario(policy="greedy", engine="loop", **kw).run()
+            b = Scenario(policy="greedy", engine="jax", **kw).run()
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+        assert a.updates > 0
+        assert_equivalent(a, b)
 
     def test_jax_request_degrades_to_loop_for_loop_only_policy(self):
         class _LoopOnly(Policy):
@@ -389,13 +409,19 @@ class TestGreedyPolicy:
 
     def test_fresh_policy_instances_share_jax_jit_cache(self):
         """Object-passing style (a new OnlinePolicy() per run) must not
-        recompile the scan: parameter-free policies key the cache by
-        class."""
-        from repro.core import OnlinePolicy
-        from repro.core.vector_engine import _jax_step_fn
-        a = _jax_step_fn(8, 100, OnlinePolicy(), False)
-        b = _jax_step_fn(8, 100, OnlinePolicy(), False)
+        recompile the scan: policies key the cache by class, with
+        instance knobs delivered through scan_operands."""
+        from repro.core import GreedyThresholdPolicy, OnlinePolicy
+        from repro.core.vector_engine import _jax_chunk_fn
+        a = _jax_chunk_fn(8, 100, 100, OnlinePolicy(), False, False, 0)
+        b = _jax_chunk_fn(8, 100, 100, OnlinePolicy(), False, False, 0)
         assert a is b
+        # knob-carrying policies share too: theta/patience are traced
+        g1 = _jax_chunk_fn(8, 100, 100, GreedyThresholdPolicy(0.1, 10),
+                           False, False, 0)
+        g2 = _jax_chunk_fn(8, 100, 100, GreedyThresholdPolicy(0.9, 999),
+                           False, False, 0)
+        assert g1 is g2
 
     def test_waits_for_cheap_slots(self):
         """With a tight threshold and long patience the greedy policy

@@ -112,29 +112,73 @@ class TestJaxBackend:
         yield
         jax.config.update("jax_enable_x64", prev)
 
-    @pytest.mark.parametrize("policy", ("sync", "immediate", "online"))
+    @pytest.mark.parametrize("policy",
+                             ("sync", "immediate", "online", "offline",
+                              "greedy"))
     def test_seeded_parity(self, policy):
-        a = run(policy, "loop")
+        a = run(policy, "loop", collect_push_log=False)
         b = run(policy, "jax", collect_push_log=False)
-        # no push log out of lax.scan; energies via jnp pairwise sums
+        # energies via jnp pairwise sums
         assert_equivalent(a, b, energy_rtol=1e-9, push_log=False)
         assert b.push_log == []
 
-    def test_warns_when_push_log_requested(self):
-        with pytest.warns(RuntimeWarning, match="push_log"):
-            run("online", "jax")  # collect_push_log defaults to True
+    @pytest.mark.parametrize("policy",
+                             ("sync", "immediate", "online", "offline",
+                              "greedy"))
+    def test_push_log_streams_out_of_scan(self, policy):
+        """collect_push_log=True on engine='jax' (regression: it used to
+        warn and return an empty log): the streamed event buffer must
+        reproduce the loop oracle's push log exactly — every engine, same
+        events."""
+        import warnings
+        a = run(policy, "loop")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")        # the old path warned
+            b = run(policy, "jax")
+        assert len(b.push_log) == len(a.push_log) > 0
+        assert_equivalent(a, b)
+
+    def test_push_log_identical_across_all_three_engines(self):
+        """The satellite regression pin: one seeded online run, three
+        engines, byte-identical push events."""
+        a, b, c = (run("online", e, app_arrival_p=0.01, horizon_s=1500,
+                       n_users=16, seed=7, V=2000.0, L_b=2.0) for e in
+                   ("loop", "vectorized", "jax"))
+        key = [(e["t"], e["user"], e["lag"], e["corun"]) for e in a.push_log]
+        assert len(key) > 0
+        assert [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in b.push_log] == key
+        assert [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in c.push_log] == key
+        np.testing.assert_allclose([e["gap"] for e in c.push_log],
+                                   [e["gap"] for e in a.push_log],
+                                   rtol=1e-9, atol=1e-15)
+
+    def test_push_log_chunk_and_overflow_invariance(self):
+        """The streamed log must not depend on scan chunking or on the
+        initial event-buffer capacity (overflow doubles + retries)."""
+        base = run("immediate", "loop")
+        tiny = run("immediate", "jax", jax_chunk=64, push_log_capacity=2)
+        assert_equivalent(base, tiny)
 
     def test_parity_with_staleness_pressure(self):
         kw = dict(L_b=2.0, V=2000.0, app_arrival_p=0.01, horizon_s=2000,
                   n_users=16)
         a = run("online", "loop", **kw)
-        b = run("online", "jax", collect_push_log=False, **kw)
+        b = run("online", "jax", **kw)
         assert a.mean_H > 0
-        assert_equivalent(a, b, push_log=False)
+        assert_equivalent(a, b)
 
-    def test_offline_falls_back_to_numpy(self):
-        a = run("offline", "vectorized")
+    def test_offline_runs_on_jax(self):
+        """The offline knapsack plans through a host callback at window
+        slots: engine='jax' resolves to jax (it used to degrade to the
+        numpy engine) and matches the oracle, push log included."""
+        sim = FederatedSim(SimConfig(policy="offline", engine="jax",
+                                     horizon_s=2000, n_users=12, seed=2))
+        assert sim.resolve_engine() == "jax"
+        a = run("offline", "loop")
         b = run("offline", "jax")
+        assert a.updates > 0
         assert_equivalent(a, b)
 
     def test_v_norm_hook_falls_back_to_numpy(self):
