@@ -25,6 +25,13 @@ uses the paper's setup (Table II fleet, Dirichlet shards, batch 20,
 training FLOPs both engines share and the speedup compresses — that
 floor is documented, not hidden.
 
+An aggregation-rule sweep (vectorized engine at n=64) rides along: the
+four registered rules of core/aggregation.py on the same workload, with
+``slowdown_vs_replace`` reporting what the staleness-aware weighted push
+scan costs over the paper's replace rule (the rule's ``scan_weight``
+runs INSIDE the fused train+push program, so the expected answer is
+~1.0x).
+
 Besides the CSV stream every run persists ``BENCH_real_scale.json`` (see
 ``common.write_json``) so the real-mode scaling trajectory is
 machine-readable across PRs.
@@ -39,24 +46,34 @@ from repro.core.realml import LeNetBackend
 from repro.core.simulator import FederatedSim, SimConfig
 
 SIZES = (8, 64, 256)
+# aggregation-rule sweep (vectorized engine, mid fleet size): what the
+# staleness-aware weighted push scan costs relative to replace —
+# core/aggregation.py runs the rule's scan_weight INSIDE the fused
+# train+push program, so the answer should be ~nothing
+AGG_RULES = ("replace", "fedasync_poly", "gap_aware", "hetero_aware")
+AGG_N = 64
 JSON_PATH = "BENCH_real_scale.json"
 
 
-def _run(engine: str, n: int, horizon: int, fast: bool, seed: int = 0):
+def _run(engine: str, n: int, horizon: int, fast: bool, seed: int = 0,
+         aggregation: str = "replace"):
     if fast:
         backend = LeNetBackend(n, sync=False, n_train=n, n_test=256,
                                seed=seed, eval_every=1200, batch_size=1,
-                               partition="uniform", cohort_pad=64)
+                               partition="uniform", cohort_pad=64,
+                               aggregation=aggregation)
         fleet = CustomCatalogFleet([TESTBED["Pixel2"]])
         arrival_p = 0.0
     else:
         backend = LeNetBackend(n, sync=False, n_train=400 * n, n_test=1000,
-                               seed=seed, eval_every=1200, batch_size=20)
+                               seed=seed, eval_every=1200, batch_size=20,
+                               aggregation=aggregation)
         fleet = None                     # Table II round-robin
         arrival_p = 0.004
     cfg = SimConfig(policy="immediate", n_users=n, horizon_s=horizon,
                     engine=engine, seed=seed, ml_mode="real",
-                    app_arrival_p=arrival_p, collect_push_log=False)
+                    app_arrival_p=arrival_p, collect_push_log=False,
+                    aggregation=aggregation)
     sim = FederatedSim(cfg, ml_backend=backend, fleet=fleet)
     t0 = time.perf_counter()
     r = sim.run()
@@ -74,6 +91,7 @@ def run(fast: bool = True):
             wall, r = _run(engine, n, horizon, fast)
             rows.append({
                 "bench": "real_scale", "engine": engine, "n_users": n,
+                "aggregation": "replace",
                 "horizon_s": horizon, "fast": fast,
                 "wall_s": round(wall, 3),
                 "warmup_s": round(warmup_s, 3),
@@ -84,9 +102,36 @@ def run(fast: bool = True):
                 "energy_kj": round(r.energy_j / 1e3, 2),
                 "speedup_vs_loop":
                     round(loop_wall / wall, 2) if loop_wall else "",
+                "slowdown_vs_replace": "",
             })
             if engine == "loop":
                 loop_wall = wall
+
+    # aggregation-rule sweep: same workload, vectorized engine, the four
+    # registered rules (replace is the baseline row above repeated here
+    # so the sweep is self-contained)
+    replace_wall = None
+    for agg in AGG_RULES:
+        warmup_s, _ = _run("vectorized", AGG_N, warmup_horizon, fast,
+                           aggregation=agg)
+        wall, r = _run("vectorized", AGG_N, horizon, fast, aggregation=agg)
+        rows.append({
+            "bench": "real_scale", "engine": "vectorized",
+            "n_users": AGG_N, "aggregation": agg,
+            "horizon_s": horizon, "fast": fast,
+            "wall_s": round(wall, 3),
+            "warmup_s": round(warmup_s, 3),
+            "updates": r.updates,
+            "updates_per_s": round(r.updates / wall, 1),
+            "final_acc": round(r.accuracy[-1][1], 4) if r.accuracy
+            else "",
+            "energy_kj": round(r.energy_j / 1e3, 2),
+            "speedup_vs_loop": "",
+            "slowdown_vs_replace":
+                round(wall / replace_wall, 2) if replace_wall else "",
+        })
+        if agg == "replace":
+            replace_wall = wall
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,

@@ -28,19 +28,33 @@ def main():
     ap.add_argument("--users", type=int, default=8)
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "loop", "vectorized"])
+    ap.add_argument("--aggregation", default="replace",
+                    choices=["replace", "fedasync_poly", "gap_aware",
+                             "hetero_aware"],
+                    help="how the server applies pushes "
+                         "(core/aggregation.py); weighted rules mix "
+                         "inside the fused train+push scan")
+    ap.add_argument("--n-train", type=int, default=4000,
+                    help="training-set size (CI smoke uses a tiny one)")
+    ap.add_argument("--n-test", type=int, default=1000)
     args = ap.parse_args()
 
     scn = Scenario(policy=args.policy, ml="lenet",
-                   ml_kwargs=dict(n_train=4000, n_test=1000),
+                   ml_kwargs=dict(n_train=args.n_train, n_test=args.n_test),
                    horizon_s=args.horizon, n_users=args.users,
+                   aggregation=args.aggregation,
                    app_arrival_p=0.004, seed=0, engine=args.engine)
     sim = scn.build()
     t0 = time.time()
     r = sim.run()
     print(f"\npolicy={args.policy}  engine={sim.resolve_engine()}  "
-          f"wall={time.time() - t0:.0f}s")
+          f"aggregation={args.aggregation}  wall={time.time() - t0:.0f}s")
     print(f"energy: {r.energy_j / 1e3:.1f} kJ   updates: {r.updates}   "
           f"co-run fraction: {r.corun_fraction:.2f}")
+    if r.push_log:
+        w = [e["weight"] for e in r.push_log]
+        print(f"applied push weights: mean {sum(w) / len(w):.3f}   "
+              f"min {min(w):.3f}")
     print("accuracy trace (sim-time s, test acc):")
     for t, a in r.accuracy:
         print(f"  {t:6d}  {a:.3f}")

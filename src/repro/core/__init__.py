@@ -3,6 +3,10 @@ federated training (energy model, staleness metrics, offline knapsack,
 online Lyapunov scheduler, async parameter server, slotted-time simulator
 with loop / vectorized / jax engines), behind a composable Scenario API
 (pluggable policies, arrival processes, and device fleets)."""
+from .aggregation import (AggregationRule, FedAsyncPolyRule, GapAwareRule,
+                          HeteroAwareRule, ReplaceRule,
+                          register_aggregation, registered_aggregations,
+                          resolve_aggregation)
 from .arrivals import (ArrivalProcess, BernoulliArrivals, DiurnalArrivals,
                        MarkovModulatedArrivals, TraceArrivals,
                        register_arrival, registered_arrivals,
@@ -18,9 +22,10 @@ from .lyapunov import (BatchDecision, OnlineScheduler, UserSlotState,
                        schedule_threshold)
 from .offline import (knapsack_schedule, lemma1_lag_bounds,
                       lemma1_lag_bounds_loop, offline_schedule)
-from .policies import (GreedyThresholdPolicy, ImmediatePolicy, OfflinePolicy,
-                       OnlinePolicy, Policy, SyncPolicy, register_policy,
-                       registered_policies, resolve_policy)
+from .policies import (EpsGreedyPolicy, GreedyThresholdPolicy,
+                       ImmediatePolicy, OfflinePolicy, OnlinePolicy, Policy,
+                       SyncPolicy, register_policy, registered_policies,
+                       resolve_policy)
 from .realml import (BatchedMLBackend, LeNetBackend, make_backend,
                      make_ml_hooks, register_ml_backend,
                      registered_ml_backends)
@@ -31,6 +36,9 @@ from .staleness import (LagTracker, gradient_gap, momentum_scale,
                         predict_weights, tree_l2_norm, true_gap)
 
 __all__ = [
+    "AggregationRule", "FedAsyncPolyRule", "GapAwareRule",
+    "HeteroAwareRule", "ReplaceRule", "register_aggregation",
+    "registered_aggregations", "resolve_aggregation",
     "APPS", "DEVICE_NAMES", "TESTBED", "AppProfile", "DeviceProfile",
     "DeviceTables", "build_tables", "catalog_tables", "device_ids",
     "table2_savings",
@@ -44,8 +52,8 @@ __all__ = [
     "schedule_threshold",
     "knapsack_schedule", "lemma1_lag_bounds", "lemma1_lag_bounds_loop",
     "offline_schedule",
-    "GreedyThresholdPolicy", "ImmediatePolicy", "OfflinePolicy",
-    "OnlinePolicy", "Policy", "SyncPolicy",
+    "EpsGreedyPolicy", "GreedyThresholdPolicy", "ImmediatePolicy",
+    "OfflinePolicy", "OnlinePolicy", "Policy", "SyncPolicy",
     "register_policy", "registered_policies", "resolve_policy",
     "BatchedMLBackend", "LeNetBackend", "make_backend", "make_ml_hooks",
     "register_ml_backend", "registered_ml_backends",

@@ -17,13 +17,14 @@ per-user ``UserState`` objects as the working view and threads the scalar /
 carry fields through this container.
 
 The push log is no longer accumulated as per-push dicts: engines append
-fixed-width blocks to a ``PushLog`` (five columns — slot, user, lag, gap,
-corun), and the ``SimResult.push_log`` dict schema is decoded lazily on
-access, so fleet-scale runs never materialize O(pushes) Python dicts unless
-the caller actually walks the log. Inside the jax scan the same five columns
-live in a preallocated ``PushBuffer`` ``(capacity, 5)`` array filled by
-scatter; ``vector_engine`` drains it chunk-by-chunk over the horizon, so
-peak memory stays O(chunk), never O(T * n).
+fixed-width blocks to a ``PushLog`` (six columns — slot, user, lag, gap,
+corun, applied aggregation weight), and the ``SimResult.push_log`` dict
+schema is decoded lazily on access, so fleet-scale runs never materialize
+O(pushes) Python dicts unless the caller actually walks the log. Inside
+the jax scan the same six columns live in a preallocated ``PushBuffer``
+``(capacity, 6)`` array filled by scatter; ``vector_engine`` drains it
+chunk-by-chunk over the horizon, so peak memory stays O(chunk), never
+O(T * n).
 """
 from __future__ import annotations
 
@@ -37,12 +38,13 @@ MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
 PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
 
 # Column order of the fixed-width push-event records (PushBuffer rows and
-# PushLog blocks).
-EVENT_FIELDS = ("t", "user", "lag", "gap", "corun")
+# PushLog blocks). ``weight`` is the aggregation rule's applied mixing
+# weight (core/aggregation.py) — 1.0 under the paper's replace rule.
+EVENT_FIELDS = ("t", "user", "lag", "gap", "corun", "weight")
 
 
 class PushBuffer(NamedTuple):
-    """Fixed-width in-scan event buffer: ``rows`` is ``(capacity, 5)`` in
+    """Fixed-width in-scan event buffer: ``rows`` is ``(capacity, 6)`` in
     ``EVENT_FIELDS`` order, ``count`` the number of pushes recorded so far
     (monotone within a chunk; entries past capacity are dropped by the
     scatter, which the driver detects as ``count > capacity`` and retries
@@ -74,8 +76,11 @@ class EngineState:
 
     ``carry`` is the policy's declarative carry pytree
     (``Policy.init_carry``) — e.g. greedy's per-user wait counters or the
-    offline policy's next plan slot. ``events`` is the jax engine's
-    ``PushBuffer`` (None elsewhere).
+    offline policy's next plan slot. ``agg_carry`` is the aggregation
+    rule's carry pytree (``AggregationRule.init_carry``,
+    core/aggregation.py) — e.g. hetero_aware's per-user device-class
+    scales. ``events`` is the jax engine's ``PushBuffer`` (None
+    elsewhere).
     """
 
     # ---- per-user struct-of-arrays -----------------------------------
@@ -102,13 +107,16 @@ class EngineState:
     # ---- rng / policy carry / event stream ---------------------------
     rng_key: Any = None
     carry: Any = None
+    agg_carry: Any = None
     events: Optional[PushBuffer] = None
 
     @classmethod
-    def init(cls, n: int, cfg, policy) -> "EngineState":
+    def init(cls, n: int, cfg, policy, agg=None, fleet=None) -> "EngineState":
         """Fresh host-side (numpy) state for an ``n``-user run: everyone
         cooling with zero cooldown (first slot moves the fleet to waiting,
-        like the historical engines), no apps, v0 model, empty queues."""
+        like the historical engines), no apps, v0 model, empty queues.
+        ``agg``/``fleet`` (the run's aggregation rule and FleetSpec)
+        initialize the rule carry; ``None`` leaves it empty."""
         return cls(
             mode=np.full(n, MODE_COOL, dtype=np.int8),
             cooldown=np.zeros(n, dtype=np.int64),
@@ -123,6 +131,8 @@ class EngineState:
             plan=np.full(n, PLAN_HOLD, dtype=np.int8),
             rng_key=np.array([0, cfg.seed & 0xFFFFFFFF], dtype=np.uint32),
             carry=policy.init_carry(n, cfg),
+            agg_carry=None if agg is None
+            else agg.init_carry(n, cfg, fleet),
         )
 
     def replace(self, **kw) -> "EngineState":
@@ -152,34 +162,37 @@ class PushLog:
     """Fixed-width push-log accumulator with the historical dict schema.
 
     Engines append columnar blocks (``extend``) or single events
-    (``append``); the jax driver feeds decoded ``(k, 5)`` buffer slices
+    (``append``); the jax driver feeds decoded ``(k, 6)`` buffer slices
     (``extend_rows``). The sequence interface decodes per-event dicts
-    ``{"t", "user", "lag", "gap", "corun"}`` lazily, so holding a
-    fleet-scale log costs five flat arrays, not O(pushes) dicts; iteration
-    and ``log == [...]`` behave exactly like the historical list of dicts.
+    ``{"t", "user", "lag", "gap", "corun", "weight"}`` lazily, so holding
+    a fleet-scale log costs six flat arrays, not O(pushes) dicts;
+    iteration and ``log == [...]`` behave exactly like the historical
+    list of dicts.
     """
 
     __slots__ = ("_parts", "_n", "_cache")
 
     def __init__(self):
-        self._parts = []          # (t, user, lag, gap, corun) array blocks
+        self._parts = []   # (t, user, lag, gap, corun, weight) blocks
         self._n = 0
         self._cache = None
 
     # ------------------------------------------------------------- builders
-    def append(self, t, user, lag, gap, corun) -> None:
+    def append(self, t, user, lag, gap, corun, weight=1.0) -> None:
         """One event (the loop oracle's per-push path)."""
         self._parts.append((np.asarray([t], np.int64),
                             np.asarray([user], np.int64),
                             np.asarray([lag], np.int64),
                             np.asarray([gap], np.float64),
-                            np.asarray([corun], bool)))
+                            np.asarray([corun], bool),
+                            np.asarray([weight], np.float64)))
         self._n += 1
         self._cache = None
 
-    def extend(self, t, users, lags, gaps, corun) -> None:
+    def extend(self, t, users, lags, gaps, corun, weights=None) -> None:
         """One slot's finisher cohort (the numpy engine's path); ``t`` is
-        the scalar slot, the rest ``(k,)`` arrays in user order."""
+        the scalar slot, the rest ``(k,)`` arrays in user order.
+        ``weights=None`` means full-weight (replace) pushes."""
         users = np.asarray(users, np.int64)
         k = len(users)
         if not k:
@@ -187,12 +200,14 @@ class PushLog:
         self._parts.append((np.full(k, t, np.int64), users,
                             np.asarray(lags, np.int64),
                             np.asarray(gaps, np.float64),
-                            np.asarray(corun, bool)))
+                            np.asarray(corun, bool),
+                            np.ones(k, np.float64) if weights is None
+                            else np.asarray(weights, np.float64)))
         self._n += k
         self._cache = None
 
     def extend_rows(self, rows) -> None:
-        """Decode a drained ``PushBuffer`` slice: ``rows`` is ``(k, 5)``
+        """Decode a drained ``PushBuffer`` slice: ``rows`` is ``(k, 6)``
         float in ``EVENT_FIELDS`` order (the jax engine's path)."""
         rows = np.asarray(rows)
         if not len(rows):
@@ -201,21 +216,22 @@ class PushLog:
                             rows[:, 1].astype(np.int64),
                             rows[:, 2].astype(np.int64),
                             rows[:, 3].astype(np.float64),
-                            rows[:, 4] != 0))
+                            rows[:, 4] != 0,
+                            rows[:, 5].astype(np.float64)))
         self._n += len(rows)
         self._cache = None
 
     # ------------------------------------------------------------- readers
     def arrays(self):
-        """The five concatenated columns, ``EVENT_FIELDS`` order."""
+        """The six concatenated columns, ``EVENT_FIELDS`` order."""
         if self._cache is None:
             if self._parts:
                 cols = tuple(np.concatenate([p[j] for p in self._parts])
-                             for j in range(5))
+                             for j in range(6))
             else:
                 cols = (np.zeros(0, np.int64), np.zeros(0, np.int64),
                         np.zeros(0, np.int64), np.zeros(0, np.float64),
-                        np.zeros(0, bool))
+                        np.zeros(0, bool), np.zeros(0, np.float64))
             self._cache = cols
         return self._cache
 
@@ -229,11 +245,12 @@ class PushLog:
         return self._n > 0
 
     def _event(self, i: int) -> dict:
-        t, u, l, g, c = self.arrays()
+        t, u, l, g, c, w = self.arrays()
         # python scalars on purpose: digests/reprs must match the
         # historical dict-of-python-scalars schema byte for byte
         return {"t": int(t[i]), "user": int(u[i]), "lag": int(l[i]),
-                "gap": float(g[i]), "corun": bool(c[i])}
+                "gap": float(g[i]), "corun": bool(c[i]),
+                "weight": float(w[i])}
 
     def __getitem__(self, i):
         if isinstance(i, slice):

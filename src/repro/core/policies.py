@@ -58,7 +58,7 @@ from .staleness import gradient_gap
 __all__ = ["Policy", "register_policy", "registered_policies",
            "resolve_policy", "plan_window",
            "SyncPolicy", "ImmediatePolicy", "OnlinePolicy", "OfflinePolicy",
-           "GreedyThresholdPolicy",
+           "GreedyThresholdPolicy", "EpsGreedyPolicy",
            "MODE_WAIT", "MODE_TRAIN", "MODE_COOL",
            "PLAN_HOLD", "PLAN_CORUN", "PLAN_SEP"]
 
@@ -685,3 +685,96 @@ class GreedyThresholdPolicy(Policy):
                            jnp.where(sv.waiting & ~go, waited + 1, waited))
         return {"waited": waited}, \
             (go, jnp.asarray(0.0, sv.float_dtype))
+
+
+# ---------------------------------------------------------------------------
+# A stochastic registry policy: draws ride the run's EngineState.rng_key
+# through the carry protocol, so the SAME threefry stream drives the loop
+# oracle, the numpy engine and the lax.scan backend bit-identically.
+# ---------------------------------------------------------------------------
+def _eps_draw(rng_key, n):
+    """One slot's exploration draws on the host: split the run key, draw
+    ``(n,)`` f32 uniforms. jax's counter-based threefry PRNG produces the
+    SAME bits eagerly (here) and traced (inside ``scan_step``), which is
+    what makes the three engine hooks decision-identical."""
+    import jax
+    import jax.numpy as jnp
+
+    k2, sub = jax.random.split(jnp.asarray(rng_key))
+    u = jax.random.uniform(sub, (n,), jnp.float32)
+    return np.asarray(k2, dtype=np.uint32), np.asarray(u)
+
+
+@register_policy
+class EpsGreedyPolicy(Policy):
+    """Epsilon-greedy exploration over the greedy marginal-power rule.
+
+    Exploit: schedule a waiting user when training is marginally cheap
+    (the ``GreedyThresholdPolicy`` comparison, ``delta <= theta``).
+    Explore: with probability ``eps`` per user per slot, schedule anyway
+    — a stochastic escape hatch that guarantees progress without wait
+    counters and trades energy for staleness at a tunable rate.
+
+    The randomness is drawn from ``EngineState.rng_key`` — the seeded
+    ``(2,)`` uint32 counter key every engine threads — via one
+    ``jax.random.split`` + ``(n,)`` uniform per slot, consumed
+    UNCONDITIONALLY (even with nobody waiting) so the key chain advances
+    identically on every engine: the loop and numpy hooks draw eagerly
+    and write the split key back into the state, the jax hook draws
+    traced inside the scan and threads it through ``sv.rng_key``.
+    threefry is counter-based and jit-invariant, so the decisions are
+    bit-identical across all three engines (pinned by the engine
+    matrix). ``eps``/``theta`` reach the traced hook as
+    ``scan_operands``, so a parameter sweep reuses one compiled scan.
+    """
+
+    name = "eps_greedy"
+    supports_vectorized = True
+    supports_jax = True
+
+    def __init__(self, eps: float = 0.05, theta: float = 0.3):
+        if not 0.0 <= eps <= 1.0:
+            raise ValueError(f"eps must be in [0, 1], got {eps}")
+        self.eps = float(eps)
+        self.theta = float(theta)
+
+    def scan_operands(self, cfg):
+        return (self.eps, self.theta)
+
+    def decide_loop(self, sim, t, waiting, carry):
+        s = sim.state
+        s.rng_key, u = _eps_draw(s.rng_key, sim.cfg.n_users)
+        served = 0
+        for usr in waiting:
+            a = usr.app is not None
+            if a:
+                ap = usr.device.apps[usr.app]
+                delta = ap.p_corun - ap.p_app
+            else:
+                delta = usr.device.p_train - usr.device.p_idle
+            if u[usr._uid] < self.eps or delta <= self.theta:
+                sim.begin_training(usr, t, corun=a)
+                served += 1
+        return served, 0.0
+
+    def decide_vectorized(self, eng, t, carry):
+        s = eng.s
+        s.rng_key, u = _eps_draw(s.rng_key, eng.n)
+        w = eng.waiting
+        if not w.any():
+            return 0, 0.0
+        delta = eng.p_if_train - eng.p_if_idle
+        go = w & ((u < self.eps) | (delta <= self.theta))
+        if go.any():
+            eng.begin_training(np.nonzero(go)[0])
+        return int(np.count_nonzero(go)), 0.0
+
+    def scan_step(self, carry, sv):
+        jnp, jax = sv.jnp, sv.jax
+        eps, theta = sv.consts
+        k2, sub = jax.random.split(sv.rng_key)
+        u = jax.random.uniform(sub, (sv.n,), jnp.float32)
+        sv.rng_key = k2
+        delta = jnp.where(sv.has_app, sv.pcor_g - sv.papp_g, sv.PT - sv.PI)
+        go = sv.waiting & ((u < eps) | (delta <= theta))
+        return carry, (go, jnp.asarray(0.0, sv.float_dtype))

@@ -28,13 +28,17 @@ programs are not bit-identical to their per-client counterparts).
 from __future__ import annotations
 
 import functools
+from types import SimpleNamespace
 from typing import Dict, Optional, Type, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aggregation import (AggregationRule, ReplaceRule,
+                                    aggregation_support)
 from repro.core.client import Client
+from repro.core.policies import _jax_gradient_gap
 from repro.core.server import AsyncParameterServer, SyncServer
 from repro.core.staleness import gradient_gap
 from repro.data.synthetic import cifarlike_dataset, dirichlet_partition
@@ -67,6 +71,14 @@ class BatchedMLBackend:
         the same backend state behind the historical hook protocol."""
         raise NotImplementedError
 
+    def bind_fleet(self, fleet_spec, cfg=None) -> None:
+        """Receive the run's ``FleetSpec`` and ``SimConfig``
+        (``FederatedSim`` calls this at construction). Fleet-conditioned
+        aggregation rules (core/aggregation.py ``hetero_aware``) need
+        the fleet to derive device-class scales, and the config is
+        forwarded to the rule's ``scan_operands``/``init_carry`` on the
+        fused push-scan path; the default is a no-op."""
+
     # ------------------------------------------------------------ batched path
     def pull_batch(self, uids: np.ndarray, version: int) -> None:
         """Snapshot the current global parameters for every uid starting
@@ -84,28 +96,33 @@ class BatchedMLBackend:
         raise NotImplementedError
 
     def push_batch(self, uids: np.ndarray, trained, lags: np.ndarray,
-                   eta: float, beta: float) -> np.ndarray:
+                   eta: float, beta: float):
         """Apply the cohort's pushes to the async server sequentially in
-        ``uids`` order (the loop oracle's ordering), returning the Eq. (4)
-        gap of each push evaluated against the momentum norm *before* that
-        push was applied — exactly what the loop's per-user finish does."""
+        ``uids`` order (the loop oracle's ordering), returning
+        ``(gaps, weights)``: the Eq. (4) gap of each push evaluated
+        against the momentum norm *before* that push was applied —
+        exactly what the loop's per-user finish does — and the
+        aggregation rule's applied mixing weight per push."""
         raise NotImplementedError
 
     def submit_batch(self, uids: np.ndarray, trained, lags: np.ndarray,
-                     eta: float, beta: float) -> np.ndarray:
+                     eta: float, beta: float):
         """Sync-mode twin of ``push_batch``: submit the cohort's results
-        to the FedAvg server (aggregation happens at round close)."""
+        to the FedAvg server (aggregation happens at round close).
+        Returns ``(gaps, weights)`` with unit weights (FedAvg averages;
+        there is no per-push weight)."""
         raise NotImplementedError
 
     def finish_async_batch(self, uids: np.ndarray, versions: np.ndarray,
                            lags: np.ndarray, eta: float, beta: float,
                            need_gaps: bool = True):
         """Whole async finish for a cohort: local_train_batch followed by
-        push_batch. Backends may override with a fused implementation (one
-        device dispatch for train + ordered pushes). With
-        ``need_gaps=False`` (no push log collected) the return value is
-        ignored and backends may skip the gap computation — and with it
-        any host-device synchronization."""
+        push_batch; returns ``(gaps, weights)``. Backends may override
+        with a fused implementation (one device dispatch for train +
+        weighted ordered pushes). With ``need_gaps=False`` (no push log
+        collected) the return value is ignored and backends may skip the
+        gap/weight read-back — and with it any host-device
+        synchronization."""
         trained = self.local_train_batch(uids, versions)
         return self.push_batch(uids, trained, lags, eta, beta)
 
@@ -231,47 +248,96 @@ def _train_chunk(params, idx, mask, flat_x, flat_y, eta, beta, shared):
     )(_lanes(params, idx, shared), idx, mask)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("eta", "beta", "shared", "need_norms"))
-def _finish_chunk(params, idx, mask, valid, server_params,
-                  server_v, flat_x, flat_y, eta, beta, shared,
-                  need_norms=True):
+_FINISH_FN_CACHE: dict = {}
+_FINISH_FN_CACHE_MAX = 16
+
+
+def _finish_chunk_fn(rule, eta, beta, shared, need_gaps):
+    """The fused-finish executable for one (rule, hyperparams, layout)
+    combination, memoized on ``rule.jax_cache_key()`` — the same keying
+    the trace engine's scan cache uses, so fresh knob-configured
+    instances of operand-driven rules (knobs ride the traced ``agg_ops``)
+    share ONE compiled program instead of retracing the most expensive
+    jit in the repo per instance."""
+    key = (rule.jax_cache_key(), eta, beta, shared, need_gaps)
+    fn = _FINISH_FN_CACHE.pop(key, None)    # pop+reinsert = LRU order
+    if fn is None:
+        fn = _build_finish_chunk(rule, eta, beta, shared, need_gaps)
+        if len(_FINISH_FN_CACHE) >= _FINISH_FN_CACHE_MAX:
+            _FINISH_FN_CACHE.pop(next(iter(_FINISH_FN_CACHE)))
+    _FINISH_FN_CACHE[key] = fn
+    return fn
+
+
+def _build_finish_chunk(rule, eta, beta, shared, need_gaps):
     """Fused async finish: train the whole chunk (vmap) then apply the
-    pushes sequentially in lane order (lax.scan) with the paper's
-    "replace" rule and the server momentum recursion of
+    pushes sequentially in lane order (lax.scan) with the aggregation
+    rule's mixing weight (core/aggregation.py — the rule's traced
+    ``scan_weight`` hook runs IN the scan, so weighted rules cost zero
+    per-push host round-trips) and the server momentum recursion of
     ``AsyncParameterServer.push``:
 
-        params <- trained_j
-        s       = (params_old - trained_j) / eta
+        w       = rule.scan_weight(lag_j, gap_j, ||v||_pre)
+        params <- w * trained_j + (1 - w) * params
+        s       = (params_old - params_new) / eta
         v      <- beta * v + (1 - beta) * s
 
-    Emits ``||v||`` at each step *start* — the momentum norm each push's
-    Eq. (4) gap is evaluated against in the loop oracle (the norm left by
-    the previous finisher) — plus the final post-cohort norm. Invalid
-    (padding) lanes leave the carry untouched.
+    Under the paper's "replace" rule the weight math is skipped entirely
+    (``params <- trained_j``, the historical op sequence, kept
+    bit-identical for the golden oracle). Emits ``||v||`` and the
+    applied weight at each step *start* — the momentum norm each push's
+    Eq. (4) gap is evaluated against in the loop oracle (the norm left
+    by the previous finisher). Invalid (padding) lanes leave the carry
+    untouched.
     """
-    trained = jax.vmap(
-        lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta, beta)
-    )(_lanes(params, idx, shared), idx, mask)
+    replace = isinstance(rule, ReplaceRule)
+    # per-step pre-push norms feed the push-log gaps AND gap-reading
+    # rule weights; without either they are dead weight (10 tree
+    # reductions per push)
+    need_norms = need_gaps or rule.needs_gap
     eta_s = max(eta, 1e-12)
 
-    def push_step(carry, xs):
-        p, v = carry
-        t_j, ok = xs
-        # per-step pre-push norms only feed the push-log gaps; without a
-        # log they are dead weight (10 tree reductions per push)
-        vnorm_pre = _tree_l2_norm_traced(v) if need_norms \
-            else jnp.asarray(0.0, jnp.float32)
-        s = jax.tree.map(lambda o, n_: (o - n_) / eta_s, p, t_j)
-        v2 = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g, v, s)
-        p = jax.tree.map(lambda n_, o: jnp.where(ok, n_, o), t_j, p)
-        v = jax.tree.map(lambda a, b: jnp.where(ok, a, b), v2, v)
-        return (p, v), vnorm_pre
+    @jax.jit
+    def finish(params, idx, mask, valid, lags, uids, agg_carry, agg_ops,
+               server_params, server_v, flat_x, flat_y):
+        trained = jax.vmap(
+            lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta,
+                                          beta)
+        )(_lanes(params, idx, shared), idx, mask)
 
-    (p_out, v_out), vnorms = jax.lax.scan(push_step,
-                                          (server_params, server_v),
-                                          (trained, valid))
-    return p_out, v_out, vnorms, _tree_l2_norm_traced(v_out)
+        def push_step(carry, xs):
+            p, v = carry
+            t_j, ok, lag_j, uid_j = xs
+            vnorm_pre = _tree_l2_norm_traced(v) if need_norms \
+                else jnp.asarray(0.0, jnp.float32)
+            if replace:
+                w = jnp.asarray(1.0, jnp.float32)
+                p_new = t_j
+            else:
+                # Eq. (4) gap against the pre-push norm, the value the
+                # server's host path feeds the rule — the same traced
+                # twin the jax trace engine uses
+                gap_j = _jax_gradient_gap(vnorm_pre, lag_j, eta, beta)
+                pv = SimpleNamespace(jnp=jnp, lag=lag_j, gap=gap_j,
+                                     v_norm=vnorm_pre, users=uid_j,
+                                     consts=agg_ops,
+                                     float_dtype=vnorm_pre.dtype)
+                _, w = rule.scan_weight(agg_carry, pv)
+                p_new = jax.tree.map(lambda n_, o: w * n_ + (1 - w) * o,
+                                     t_j, p)
+            s = jax.tree.map(lambda o, n_: (o - n_) / eta_s, p, p_new)
+            v2 = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g,
+                              v, s)
+            p = jax.tree.map(lambda a, b: jnp.where(ok, a, b), p_new, p)
+            v = jax.tree.map(lambda a, b: jnp.where(ok, a, b), v2, v)
+            return (p, v), (vnorm_pre, w)
+
+        (p_out, v_out), (vnorms, ws) = jax.lax.scan(
+            push_step, (server_params, server_v),
+            (trained, valid, lags, uids))
+        return p_out, v_out, vnorms, ws, _tree_l2_norm_traced(v_out)
+
+    return finish
 
 
 @register_ml_backend
@@ -295,11 +361,14 @@ class LeNetBackend(BatchedMLBackend):
     and never blocks. Shards are ragged
     (Dirichlet split): every lane runs ``S_max`` scan steps with per-step
     masks, where ``S_max`` is the fleet-wide maximum steps-per-epoch, and
-    masked steps leave (params, momentum) untouched. With the paper's
-    "replace" aggregation the whole finish — cohort epoch + ordered
-    sequential pushes + per-push momentum norms — is one device dispatch
-    (``_finish_chunk``); other aggregation rules fall back to per-push
-    server calls.
+    masked steps leave (params, momentum) untouched. The whole finish —
+    cohort epoch + ordered weighted sequential pushes + per-push momentum
+    norms — is one device dispatch (``_finish_chunk_fn``) for EVERY
+    aggregation rule with a traced ``scan_weight`` hook (all registered
+    rules: replace, fedasync_poly, gap_aware, hetero_aware —
+    core/aggregation.py), the weights mixed inside the push scan with no
+    per-push host round-trips; only custom numpy-only rules fall back to
+    per-push server calls.
 
     noise=8.0 calibrates cifarlike difficulty so LeNet accuracy climbs
     gradually over many local epochs (CIFAR-10-like convergence dynamics)
@@ -312,7 +381,8 @@ class LeNetBackend(BatchedMLBackend):
                  eta: float = 0.01, beta: float = 0.9,
                  n_train: int = 10000, n_test: int = 2000,
                  alpha: float = 100.0, batch_size: int = 20,
-                 aggregation: str = "replace", noise: float = 8.0,
+                 aggregation: Union[str, AggregationRule] = "replace",
+                 noise: float = 8.0,
                  seed: int = 0, eval_every: int = 600,
                  cohort_pad: int = 16, partition: str = "dirichlet"):
         # construction order (data -> shards -> clients -> params -> server)
@@ -351,6 +421,11 @@ class LeNetBackend(BatchedMLBackend):
         self.batch_size = batch_size
         self.eval_every = eval_every
         self.cohort_pad = max(int(cohort_pad), 1)
+        # the run's FleetSpec/SimConfig and the aggregation rule's carry
+        # (device arrays for the fused push scan), set by bind_fleet
+        self.fleet_spec = None
+        self._sim_cfg = None
+        self._agg_carry = None
 
         # ---- batched-training layout ---------------------------------
         # client shards concatenated flat; per-epoch minibatch gathers are
@@ -409,6 +484,22 @@ class LeNetBackend(BatchedMLBackend):
         else:
             hooks["push"] = lambda uid, params: self.server.push(uid, params)
         return hooks
+
+    def bind_fleet(self, fleet_spec, cfg=None) -> None:
+        """Bind the run's FleetSpec + SimConfig (FederatedSim calls
+        this): the fleet is forwarded to the async server for
+        fleet-conditioned host-path weights, the rule carry (e.g.
+        hetero_aware's per-user scales) is gathered once as device
+        arrays for the fused push scan, and the config is kept so the
+        rule's ``scan_operands`` sees the same cfg the trace engines
+        pass."""
+        self.fleet_spec = fleet_spec
+        self._sim_cfg = cfg
+        if isinstance(self.server, AsyncParameterServer):
+            self.server.fleet_spec = fleet_spec
+            carry = self.server.rule.init_carry(self.n_users, cfg,
+                                                fleet_spec)
+            self._agg_carry = jax.tree.map(jnp.asarray, carry)
 
     # ------------------------------------------------------------ batched path
     def _next_perm(self, uid: int) -> np.ndarray:
@@ -504,27 +595,47 @@ class LeNetBackend(BatchedMLBackend):
 
     def finish_async_batch(self, uids, versions, lags, eta, beta,
                            need_gaps=True):
-        """Fused finish (replace aggregation): each chunk is ONE device
-        dispatch covering the vmap'd cohort epoch and the ordered
-        sequential pushes; the host only updates server bookkeeping and
-        never blocks — with ``need_gaps=False`` the whole finish is
-        async dispatch (the momentum norm stays a lazy device scalar).
-        Other aggregation rules need per-push weights, so they take the
-        generic local_train_batch + push_batch path."""
-        if self.server.aggregation != "replace":
+        """Fused finish: each chunk is ONE device dispatch covering the
+        vmap'd cohort epoch and the ordered weighted sequential pushes
+        (the aggregation rule's ``scan_weight`` runs IN the scan — no
+        per-push host round-trips for any registered rule); the host
+        only updates server bookkeeping and never blocks — with
+        ``need_gaps=False`` the whole finish is async dispatch (the
+        momentum norm stays a lazy device scalar). Custom numpy-only
+        rules (no traced hook) take the generic local_train_batch +
+        push_batch path."""
+        rule = self.server.rule
+        if not aggregation_support(rule)["jax"] or \
+                (type(rule).init_carry is not AggregationRule.init_carry
+                 and self._agg_carry is None):
+            # no traced weight hook (or a carry-needing rule without a
+            # bound fleet): per-push server calls
             return super().finish_async_batch(uids, versions, lags,
                                               eta, beta, need_gaps)
         uids = np.asarray(uids)
-        vnorms = []
+        lags = np.asarray(lags)
+        agg_ops = tuple(jnp.asarray(x)
+                        for x in rule.scan_operands(self._sim_cfg))
+        vnorms, weights = [], []
         p, v = self.server.params, self.server._v
         vn_out = None
+        pos = 0
         for params, shared, idx, mask, valid, k in self._cohort_chunks(uids):
-            p, v, vn, vn_out = _finish_chunk(
-                params, idx, mask, valid, p, v,
-                self._flat_x, self._flat_y, self.eta, self.beta, shared,
-                need_norms=need_gaps)
+            C = len(valid)
+            lag_c = np.zeros(C, np.int64)
+            lag_c[:k] = lags[pos:pos + k]
+            uid_c = np.zeros(C, np.int64)
+            uid_c[:k] = uids[pos:pos + k]
+            pos += k
+            fn = _finish_chunk_fn(rule, self.eta, self.beta, shared,
+                                  need_gaps)
+            p, v, vn, ws, vn_out = fn(
+                params, idx, mask, valid, jnp.asarray(lag_c),
+                jnp.asarray(uid_c), self._agg_carry, agg_ops, p, v,
+                self._flat_x, self._flat_y)
             if need_gaps:
                 vnorms.append(np.asarray(vn[:k], dtype=np.float64))
+                weights.append(np.asarray(ws[:k], dtype=np.float64))
         self.server.params = p
         self.server._v = v
         # lazy: a 0-d device scalar; v_norm() converts on demand so
@@ -534,21 +645,24 @@ class LeNetBackend(BatchedMLBackend):
             self.server.lag_tracker.on_push(int(uid))
             self.server.in_flight.discard(int(uid))
         if not need_gaps:
-            return None
+            return None, None
         # Eq. (4) gaps against the pre-push momentum norms (loop ordering)
-        return np.asarray(gradient_gap(np.concatenate(vnorms),
-                                       np.asarray(lags), eta, beta),
-                          dtype=float)
+        return (np.asarray(gradient_gap(np.concatenate(vnorms), lags,
+                                        eta, beta), dtype=float),
+                np.concatenate(weights))
 
     def push_batch(self, uids, trained, lags, eta, beta):
         gaps = np.empty(len(uids))
+        weights = np.empty(len(uids))
         for j, uid in enumerate(np.asarray(uids)):
             uid = int(uid)
             # loop-oracle order: the gap uses the momentum norm *before*
             # this push (but after every earlier finisher's in this slot)
             gaps[j] = gradient_gap(self.v_norm(), int(lags[j]), eta, beta)
-            self.server.push(uid, jax.tree.map(lambda a: a[j], trained))
-        return gaps
+            res = self.server.push(uid,
+                                   jax.tree.map(lambda a: a[j], trained))
+            weights[j] = res.applied_weight
+        return gaps, weights
 
     def submit_batch(self, uids, trained, lags, eta, beta):
         gaps = np.empty(len(uids))
@@ -556,7 +670,7 @@ class LeNetBackend(BatchedMLBackend):
             uid = int(uid)
             gaps[j] = gradient_gap(self.v_norm(), int(lags[j]), eta, beta)
             self.server.submit(jax.tree.map(lambda a: a[j], trained))
-        return gaps
+        return gaps, np.ones(len(uids))
 
     def sync_aggregate(self):
         self.server.aggregate()

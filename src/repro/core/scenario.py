@@ -111,10 +111,19 @@ class Scenario:
                 raise ValueError(
                     "Scenario has ml= set; pass ml_hooks only to scenarios "
                     "without a backend")
+            from .aggregation import resolve_aggregation
             kw = dict(self.ml_kwargs)
             kw.setdefault("eta", self.config.eta)
             kw.setdefault("beta", self.config.beta)
             kw.setdefault("seed", self.config.seed)
+            # the backend's server applies the pushes, so it gets the
+            # config's aggregation rule (core/aggregation.py) — but only
+            # when a non-default rule was requested: custom registered
+            # backends predating the kwarg must keep building under the
+            # default replace rule
+            if resolve_aggregation(self.config.aggregation).name \
+                    != "replace":
+                kw.setdefault("aggregation", self.config.aggregation)
             backend = make_backend(self.ml, self.config.n_users,
                                    sync=self.policy.sync_rounds, **kw)
         return FederatedSim(self.config, ml_hooks=ml_hooks,

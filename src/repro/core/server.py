@@ -3,9 +3,12 @@
 The async server implements the paper's protocol: clients pull the current
 global model, train locally with momentum SGD (Eq. 1), and push; the server
 applies the push immediately (lock-free) and advances the version counter.
-On top of the paper's plain "replace" rule we provide staleness-aware
-application rules (FedAsync polynomial and gap-aware dampening, refs [30,31])
-as first-class options — `aggregation="replace"` reproduces the paper.
+HOW a push is applied is delegated to a first-class ``AggregationRule``
+(core/aggregation.py): ``aggregation="replace"`` reproduces the paper,
+while ``fedasync_poly`` / ``gap_aware`` / ``hetero_aware`` mix stale
+pushes at reduced weight — the same registry the simulator engines thread
+(``SimConfig.aggregation``), so the loop oracle and the batched engines
+see one rule implementation.
 
 The server also maintains the global momentum-norm estimate that drives the
 Eq. (4) gradient-gap predictions: v <- beta * v + (1-beta) * s with
@@ -15,13 +18,15 @@ clients — the paper's O(1)-per-client distributed implementation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .staleness import LagTracker, tree_l2_norm
+from .aggregation import (AggregationRule, FedAsyncPolyRule, GapAwareRule,
+                          resolve_aggregation)
+from .staleness import LagTracker, gradient_gap, tree_l2_norm
 
 
 def _tree_sub(a, b):
@@ -40,23 +45,37 @@ def _tree_mix(new, old, alpha):
 @dataclasses.dataclass
 class PushResult:
     lag: int
-    gap_estimate: float
-    applied_weight: float
+    gap_estimate: float     # Eq. (4) gap at push ARRIVAL (pre-application)
+    applied_weight: float   # the rule's mixing weight, 1.0 under replace
     version: int
 
 
 class AsyncParameterServer:
     def __init__(self, params: Any, eta: float, beta: float,
-                 aggregation: str = "replace",
+                 aggregation: Union[str, AggregationRule] = "replace",
                  fedasync_alpha: float = 0.6, fedasync_a: float = 0.5,
-                 gap_ref: float = 1.0):
+                 gap_ref: float = 1.0, fleet=None):
+        """``aggregation`` is a registry name or ``AggregationRule``
+        instance (core/aggregation.py). The legacy knob kwargs
+        (``fedasync_alpha``/``fedasync_a``/``gap_ref``) still construct
+        the matching rule when a name is given with non-default values;
+        new code should pass a configured rule instance. ``fleet`` binds
+        the run's ``FleetSpec`` for fleet-conditioned rules
+        (``hetero_aware``) — ``FederatedSim`` binds it automatically."""
         self.params = params
         self.eta = eta
         self.beta = beta
-        self.aggregation = aggregation
-        self.fedasync_alpha = fedasync_alpha
-        self.fedasync_a = fedasync_a
-        self.gap_ref = gap_ref
+        if isinstance(aggregation, str) and aggregation == "fedasync_poly" \
+                and (fedasync_alpha != 0.6 or fedasync_a != 0.5):
+            self.rule: AggregationRule = FedAsyncPolyRule(fedasync_alpha,
+                                                          fedasync_a)
+        elif isinstance(aggregation, str) and aggregation == "gap_aware" \
+                and gap_ref != 1.0:
+            self.rule = GapAwareRule(gap_ref)
+        else:
+            self.rule = resolve_aggregation(aggregation)
+        self.aggregation = self.rule.name
+        self.fleet_spec = fleet
         self.lag_tracker = LagTracker()
         self._v = jax.tree.map(jnp.zeros_like, params)
         self.v_norm = 0.0
@@ -78,17 +97,14 @@ class AsyncParameterServer:
         self.in_flight.discard(client_id)
         old = self.params
 
-        if self.aggregation == "replace":          # paper Sec. VI
-            weight = 1.0
-        elif self.aggregation == "fedasync_poly":  # alpha*(1+lag)^-a
-            weight = self.fedasync_alpha * (1.0 + lag) ** (-self.fedasync_a)
-        elif self.aggregation == "gap_aware":      # dampen by estimated gap
-            from .staleness import gradient_gap
-            g = gradient_gap(self.v_norm, lag, self.eta, self.beta)
-            weight = 1.0 / (1.0 + g / max(self.gap_ref, 1e-9))
-        else:
-            raise ValueError(self.aggregation)
-
+        # Eq. (4) gap at push arrival — the momentum norm BEFORE this
+        # push is applied (the norm the loop oracle's push log records).
+        # Computed once: the rule's weight and the returned gap_estimate
+        # share it.
+        gap = gradient_gap(self.v_norm, lag, self.eta, self.beta)
+        weight = float(self.rule.weight(lag, gap, self.v_norm,
+                                        fleet=self.fleet_spec,
+                                        users=client_id))
         self.params = _tree_mix(new_params, old, weight)
 
         # server momentum for Eq. (4): s = (theta_old - theta_new)/eta
@@ -96,9 +112,6 @@ class AsyncParameterServer:
         self._v = jax.tree.map(lambda v, g_: self.beta * v + (1 - self.beta) * g_,
                                self._v, s)
         self.v_norm = tree_l2_norm(self._v)
-
-        from .staleness import gradient_gap
-        gap = gradient_gap(self.v_norm, lag, self.eta, self.beta)
         return PushResult(lag=lag, gap_estimate=gap, applied_weight=weight,
                           version=self.lag_tracker.version)
 

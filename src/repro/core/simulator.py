@@ -37,6 +37,8 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+from .aggregation import (AggregationRule, aggregation_support,
+                          resolve_aggregation)
 from .arrivals import ArrivalProcess, resolve_arrival_or_default
 from .energy import APPS, DeviceProfile
 from .engine_state import EngineState, PushLog
@@ -70,6 +72,11 @@ class SimConfig:
     offline_resolution: float = 0.01
     seed: int = 0
     ml_mode: str = "trace"          # trace | real
+    # how the server APPLIES pushes (core/aggregation.py): registry name
+    # or AggregationRule instance; "replace" is the paper's Sec. VI rule.
+    # Every engine logs the applied weight per push (push_log "weight"
+    # column); in real mode the weight actually mixes the global model.
+    aggregation: Union[str, AggregationRule] = "replace"
     ready_delay: int = 5            # slots between push and re-arrival
     trace_every: int = 30           # slots between trace samples
     include_scheduler_overhead: bool = False
@@ -114,6 +121,24 @@ class SimConfig:
                 "which falls back to the loop oracle)")
         if self.ml_mode not in ("trace", "real"):
             raise ValueError(f"unknown ml_mode {self.ml_mode!r}")
+        # Aggregation-rule validation mirrors the policy validation: the
+        # name must resolve, and a rule whose supports_jax flag claims a
+        # traced path must actually implement scan_weight (rules without
+        # one degrade the jax engine to the numpy path, see
+        # resolve_engine).
+        agg = resolve_aggregation(self.aggregation)  # raises on unknowns
+        asup = aggregation_support(agg)
+        if not asup["host"]:
+            raise ValueError(
+                f"aggregation rule {agg.name!r} implements no weight() "
+                "host path; every rule needs one (the loop oracle and "
+                "the numpy engine run on it)")
+        if agg.supports_jax and not asup["jax"]:
+            raise ValueError(
+                f"aggregation rule {agg.name!r} sets supports_jax but "
+                "implements no scan_weight hook; implement "
+                "scan_weight(carry, pv) or clear the flag to degrade to "
+                "the numpy engines")
         if self.n_users <= 0:
             raise ValueError(f"n_users must be positive, got {self.n_users}")
         if self.t_d <= 0:
@@ -239,6 +264,7 @@ class FederatedSim:
         """
         self.cfg = cfg
         self.policy = resolve_policy(cfg.policy)
+        self.agg = resolve_aggregation(cfg.aggregation)
         self.rng = np.random.default_rng(cfg.seed)
         self.ml_backend = ml_backend
         if ml_backend is not None:
@@ -261,7 +287,41 @@ class FederatedSim:
         self.users = [UserState(device=d) for d in self.fleet_spec.devices]
         self.sched = OnlineScheduler(cfg.V, cfg.L_b, cfg.eta, cfg.beta,
                                      cfg.epsilon, cfg.t_d)
-        self.state = EngineState.init(cfg.n_users, cfg, self.policy)
+        self.state = EngineState.init(cfg.n_users, cfg, self.policy,
+                                      agg=self.agg, fleet=self.fleet_spec)
+        if ml_backend is not None:
+            # fleet-conditioned aggregation (hetero_aware) needs the
+            # run's FleetSpec; the backend forwards it to its server,
+            # gathers the rule carry for the fused push scan, and keeps
+            # the config for the rule's scan_operands
+            ml_backend.bind_fleet(self.fleet_spec, cfg)
+            brule = getattr(getattr(ml_backend, "server", None), "rule",
+                            None)
+
+            def _knobs(r):   # public instance attrs = the rule's knobs
+                return {k: v for k, v in vars(r).items()
+                        if not k.startswith("_")}
+
+            def _same_knobs(a, b):
+                # per-value np.array_equal: dict != would raise the
+                # ambiguous-truth ValueError on array-valued knobs
+                return a.keys() == b.keys() and \
+                    all(np.array_equal(a[k], b[k]) for k in a)
+
+            if brule is not None and brule is not self.agg and \
+                    (brule.name != self.agg.name or
+                     not _same_knobs(_knobs(brule), _knobs(self.agg))):
+                # name AND knobs must match: same-class rules with
+                # different alpha/a/gap_ref would silently attribute the
+                # run to the wrong hyperparameters
+                raise ValueError(
+                    f"ml_backend was built with aggregation rule "
+                    f"{brule.name!r} ({_knobs(brule) or 'no knobs'}) "
+                    f"but the config says {self.agg.name!r} "
+                    f"({_knobs(self.agg) or 'no knobs'}); in real mode "
+                    "the backend's server applies the pushes, so the "
+                    "two must agree (Scenario threads cfg.aggregation "
+                    "automatically)")
         # Pre-sample the app arrival schedule (offline policy needs
         # lookahead), one row per SLOT — t_d < 1 means more slots than
         # seconds. (For t_d == 1 this matches the historical horizon_s
@@ -336,7 +396,9 @@ class FederatedSim:
 
     def _finish_training(self, u: UserState, t: int, log: PushLog):
         lag = self.version - u.pulled_at
-        gap = gradient_gap(self._v_norm(), lag, self.cfg.eta, self.cfg.beta)
+        vn = self._v_norm()
+        gap = gradient_gap(vn, lag, self.cfg.eta, self.cfg.beta)
+        res = None
         if self.policy.sync_rounds:
             if self.ml.get("sync_submit"):
                 trained = self.ml["local_train"](u._uid, u._params)
@@ -345,14 +407,26 @@ class FederatedSim:
             self.version += 1
             if self.ml.get("push"):
                 trained = self.ml["local_train"](u._uid, u._params)
-                self.ml["push"](u._uid, trained)
+                res = self.ml["push"](u._uid, trained)
         u.updates += 1
         u.mode = "cooldown"
         u.cooldown = self.cfg.ready_delay
         u.idle_gap = 0.0
         self.in_flight -= 1
         if self.cfg.collect_push_log:
-            log.append(t, u._uid, lag, gap, u.corun)
+            # applied aggregation weight, only materialized for the log:
+            # what the server DID (real mode), the rule's value (trace),
+            # or 1.0 for FedAvg rounds (no per-push weight)
+            if self.policy.sync_rounds:
+                weight = 1.0
+            elif res is not None and \
+                    getattr(res, "applied_weight", None) is not None:
+                weight = float(res.applied_weight)
+            else:
+                weight = float(self.agg.weight(lag, gap, vn,
+                                               fleet=self.fleet_spec,
+                                               users=u._uid))
+            log.append(t, u._uid, lag, gap, u.corun, weight)
 
     # ------------------------------------------------------------------ main
     def resolve_engine(self) -> str:
@@ -390,7 +464,13 @@ class FederatedSim:
                 f"policy {pol.name!r} implements no vectorized hook; "
                 "use engine='loop' (or 'auto')")
         if engine == "jax":
-            if pol.supports_jax and not self.ml and self.ml_backend is None:
+            # a push log under a rule without a traced scan_weight cannot
+            # fill the weight column in-scan: degrade like a policy
+            # without scan_step (weight-free runs are unaffected)
+            agg_jax = aggregation_support(self.agg)["jax"] or \
+                not cfg.collect_push_log
+            if pol.supports_jax and agg_jax and not self.ml and \
+                    self.ml_backend is None:
                 return "jax"
             # degrade in capability order: numpy SoA if the policy has the
             # hook (any policy under a v_norm callback, or any real-mode
@@ -406,7 +486,8 @@ class FederatedSim:
             # the previous run's state. Real-ML backends/hook closures are
             # single-run by contract and are NOT reset here.
             self.state = EngineState.init(self.cfg.n_users, self.cfg,
-                                          self.policy)
+                                          self.policy, agg=self.agg,
+                                          fleet=self.fleet_spec)
             self.users = [UserState(device=d)
                           for d in self.fleet_spec.devices]
             self.sched.Q = 0.0

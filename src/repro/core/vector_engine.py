@@ -45,7 +45,11 @@ counters carried through the scan); others stay on the numpy path.
 
 Push logs stream out of the scan through a fixed-width event buffer
 (``engine_state.PushBuffer``): each finishing user scatters one
-``(t, user, lag, gap, corun)`` row at the buffer cursor, the host drains
+``(t, user, lag, gap, corun, weight)`` row at the buffer cursor — the
+``weight`` column is the aggregation rule's applied mixing weight
+(core/aggregation.py, ``SimConfig.aggregation``), computed in-jit through
+the rule's ``scan_weight`` hook with its carry riding in
+``EngineState.agg_carry`` — the host drains
 and resets the buffer after every chunk, and an overflowing chunk is
 re-run with a doubled buffer (``count`` always records the true push
 total) — so ``collect_push_log=True`` costs O(chunk) memory at any fleet
@@ -120,6 +124,8 @@ class _NumpyEngine:
         self.app_sched, self.app_choice = sim.app_sched, sim.app_choice
         self.sched = sim.sched             # queue update rule + decide_batch
         self.policy = sim.policy
+        self.agg = sim.agg                 # aggregation rule (weight path)
+        self.fleet_spec = sim.fleet_spec
         self._v_hook = sim.ml.get("v_norm")
         # batched real-ML backend (core/realml.py): pull/train/push whole
         # cohorts instead of per-user callbacks; None for trace runs
@@ -152,20 +158,28 @@ class _NumpyEngine:
         finisher cohort, then sequential server application in user order
         (the loop oracle's push ordering — each finisher's Eq. (4) gap
         sees the momentum norm left by the previous one). Returns the
-        per-finisher gaps for the push log."""
+        per-finisher ``(gaps, weights)`` for the push log."""
         b = self.backend
         cfg = self.cfg
         if b.sync == self.policy.sync_rounds:
             if b.sync:
                 trained = b.local_train_batch(fidx, self.s.pulled_at[fidx])
-                return b.submit_batch(fidx, trained, lags, cfg.eta, cfg.beta)
+                return b.submit_batch(fidx, trained, lags, cfg.eta,
+                                      cfg.beta)
             return b.finish_async_batch(fidx, self.s.pulled_at[fidx], lags,
                                         cfg.eta, cfg.beta,
                                         need_gaps=cfg.collect_push_log)
         # policy/backend round-mode mismatch: the loop oracle finds no
-        # matching hook and skips training; keep the log gaps consistent
-        return np.asarray(gradient_gap(b.v_norm(), lags, cfg.eta, cfg.beta),
+        # matching hook and skips training; keep the log gaps AND the
+        # rule-fallback weights consistent with the oracle's
+        vn = b.v_norm()
+        gaps = np.asarray(gradient_gap(vn, lags, cfg.eta, cfg.beta),
                           dtype=float)
+        if self.policy.sync_rounds:
+            return gaps, np.ones(len(lags))
+        return gaps, np.asarray(self.agg.weight(lags, gaps, vn,
+                                                fleet=self.fleet_spec,
+                                                users=fidx), dtype=float)
 
     def begin_training(self, idx):
         """idx: user indices starting training this slot (corun iff app)."""
@@ -245,12 +259,14 @@ class _NumpyEngine:
                 fidx = np.nonzero(fin)[0]
                 k = len(fidx)
                 if k:
-                    gaps = None
+                    gaps = weights = None
                     if policy.sync_rounds:
                         lags = s.version - s.pulled_at[fidx]
                         if self.backend is None and cfg.collect_push_log:
                             gaps = gradient_gap(self.v_norm(s.version),
                                                 lags, cfg.eta, cfg.beta)
+                            # FedAvg rounds average; no per-push weight
+                            weights = np.ones(k)
                     else:
                         # async finishers bump the version one by one, in
                         # user order — each sees the versions of earlier
@@ -258,12 +274,16 @@ class _NumpyEngine:
                         vers = s.version + np.arange(k)
                         lags = vers - s.pulled_at[fidx]
                         if self.backend is None and cfg.collect_push_log:
-                            gaps = gradient_gap(self.v_norm(vers), lags,
-                                                cfg.eta, cfg.beta)
+                            vns = self.v_norm(vers)
+                            gaps = gradient_gap(vns, lags, cfg.eta,
+                                                cfg.beta)
+                            weights = self.agg.weight(
+                                lags, gaps, vns, fleet=self.fleet_spec,
+                                users=fidx)
                         s.version += k
                     if self.backend is not None:
                         # one vmap'd local-train + ordered server pushes
-                        gaps = self._finish_cohort(fidx, lags)
+                        gaps, weights = self._finish_cohort(fidx, lags)
                     s.updates[fidx] += 1
                     mode[fidx] = MODE_COOL
                     s.cooldown[fidx] = cfg.ready_delay
@@ -271,7 +291,8 @@ class _NumpyEngine:
                     s.in_flight -= k
                     s.corun_updates += int(np.count_nonzero(s.corun[fidx]))
                     if cfg.collect_push_log:
-                        push_log.extend(t, fidx, lags, gaps, s.corun[fidx])
+                        push_log.extend(t, fidx, lags, gaps, s.corun[fidx],
+                                        weights)
             if policy.sync_rounds and s.round_open and \
                     not np.any(mode == MODE_TRAIN):
                 s.round_open = False
@@ -324,23 +345,30 @@ _JAX_FN_CACHE_MAX = 32
 
 
 def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
-                  collect: bool, capacity: int, statics: tuple = ()):
+                  collect: bool, capacity: int, statics: tuple = (),
+                  agg=None):
     """Build + jit one scan chunk, memoized on (shapes,
     ``policy.jax_cache_key()``, overhead/collect flags, event-buffer
-    capacity, the policy's ``scan_statics``). Policies key by class by
-    default, so both ``SimConfig(policy="online")`` and a fresh
-    ``OnlinePolicy()`` per run share one executable; scalar knobs (V,
-    L_b, ..., ``scan_operands``) are traced operands, so e.g. a V-sweep
-    compiles once. The policy's ``scan_step`` hook supplies the decision
-    block; everything else — arrivals, cooldowns, training progression,
-    Eq. 10 energy, Eq. 15/16 queues, the push-event scatter — is engine
-    code shared by every policy."""
+    capacity, the policy's ``scan_statics``, and — when the push log is
+    collected — the aggregation rule's ``jax_cache_key()``). Policies
+    and rules key by class by default, so both
+    ``SimConfig(policy="online")`` and a fresh ``OnlinePolicy()`` per
+    run share one executable; scalar knobs (V, L_b, ...,
+    ``scan_operands``) are traced operands, so e.g. a V-sweep compiles
+    once. The policy's ``scan_step`` hook supplies the decision block
+    and the rule's ``scan_weight`` the push-log weight column;
+    everything else — arrivals, cooldowns, training progression, Eq. 10
+    energy, Eq. 15/16 queues, the push-event scatter — is engine code
+    shared by every policy."""
+    if agg is None:
+        from .aggregation import resolve_aggregation
+        agg = resolve_aggregation("replace")
     key = (n, chunk, T, policy.jax_cache_key(), overhead, collect, capacity,
-           statics)
+           statics, agg.jax_cache_key() if collect else None)
     fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
     if fn is None:
         fn = _build_jax_chunk_fn(n, chunk, T, policy, overhead, collect,
-                                 capacity, statics)
+                                 capacity, statics, agg)
         if len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
             _JAX_FN_CACHE.pop(next(iter(_JAX_FN_CACHE)))  # evict LRU
     _JAX_FN_CACHE[key] = fn
@@ -348,13 +376,14 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
 
 
 def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
-                        collect: bool, capacity: int, statics: tuple = ()):
+                        collect: bool, capacity: int, statics: tuple = (),
+                        agg=None):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    def simulate(tables, app_sched, app_choice, scalars, pol_ops, t0,
-                 state):
+    def simulate(tables, app_sched, app_choice, scalars, pol_ops, agg_ops,
+                 t0, state):
         PT, TT, PI, PS, P_APP, P_COR, T_COR, SRATE = tables
         (V, L_b, epsilon, eta, beta, v_norm0, t_d, ready_delay,
          offline_window, offline_resolution) = scalars
@@ -446,6 +475,7 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             # oracle's push order); rows past capacity drop, count stays
             # exact so the driver can detect overflow and retry
             events = s.events
+            agg_carry = s.agg_carry
             if collect:
                 rank = jnp.cumsum(fin) - fin
                 if policy.sync_rounds:
@@ -456,9 +486,20 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                     lag = vers - pulled_at
                     vn = _jax_trace_v_norm(v_norm0, vers, jnp)
                 gap = _jax_gradient_gap(vn, lag, eta, beta)
+                if policy.sync_rounds:
+                    # FedAvg rounds average; no per-push weight
+                    w = jnp.ones((n,), f)
+                else:
+                    pv = SimpleNamespace(
+                        jnp=jnp, lax=lax, jax=jax, float_dtype=f,
+                        lag=lag, gap=gap, v_norm=vn, users=ar,
+                        consts=agg_ops)
+                    agg_carry, w = agg.scan_weight(agg_carry, pv)
+                    w = jnp.broadcast_to(w, (n,))
                 rows = jnp.stack(
                     [jnp.broadcast_to(t, (n,)).astype(f), ar.astype(f),
-                     lag.astype(f), gap.astype(f), corun.astype(f)],
+                     lag.astype(f), gap.astype(f), corun.astype(f),
+                     w.astype(f)],
                     axis=1)
                 pos = jnp.where(fin, events.count + rank, capacity)
                 events = PushBuffer(
@@ -492,7 +533,7 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 round_open=round_open, Q=Q, H=H,
                 sum_Q=s.sum_Q + Q, sum_H=s.sum_H + H,
                 corun_updates=corun_updates, rng_key=rng_key,
-                carry=carry, events=events)
+                carry=carry, agg_carry=agg_carry, events=events)
             return s2, (Q, H, jnp.sum(energy))
 
         return lax.scan(step, state, (sched_c, choice_c, ts))
@@ -522,7 +563,8 @@ def _state_to_jax(es: EngineState, jax, jnp, f, i) -> EngineState:
         round_open=cast(es.round_open), Q=cast(es.Q), H=cast(es.H),
         sum_Q=cast(es.sum_Q), sum_H=cast(es.sum_H),
         corun_updates=cast(es.corun_updates), rng_key=cast(es.rng_key),
-        carry=jax.tree.map(cast, es.carry), events=None)
+        carry=jax.tree.map(cast, es.carry),
+        agg_carry=jax.tree.map(cast, es.agg_carry), events=None)
 
 
 def _state_to_host(state: EngineState, jax) -> EngineState:
@@ -543,7 +585,8 @@ def _state_to_host(state: EngineState, jax) -> EngineState:
         sum_Q=float(state.sum_Q), sum_H=float(state.sum_H),
         corun_updates=int(state.corun_updates),
         rng_key=np.asarray(state.rng_key),
-        carry=jax.tree.map(np.asarray, state.carry), events=None)
+        carry=jax.tree.map(np.asarray, state.carry),
+        agg_carry=jax.tree.map(np.asarray, state.agg_carry), events=None)
 
 
 def _next_pow2(k: int) -> int:
@@ -559,8 +602,11 @@ def _run_jax(sim) -> SimResult:
 
     cfg = sim.cfg
     policy = sim.policy
-    if not policy.supports_jax:  # resolve_engine reroutes; be safe
-        return _NumpyEngine(sim).run()
+    agg = sim.agg
+    from .aggregation import aggregation_support
+    if not policy.supports_jax or \
+            (cfg.collect_push_log and not aggregation_support(agg)["jax"]):
+        return _NumpyEngine(sim).run()  # resolve_engine reroutes; be safe
     n = cfg.n_users
     T = n_slots(cfg)
     collect = cfg.collect_push_log
@@ -575,6 +621,7 @@ def _run_jax(sim) -> SimResult:
         jnp.asarray(s, f) for s in (cfg.offline_window,
                                     cfg.offline_resolution))
     pol_ops = tuple(jnp.asarray(v) for v in policy.scan_operands(cfg))
+    agg_ops = tuple(jnp.asarray(v) for v in agg.scan_operands(cfg))
     statics = tuple(policy.scan_statics(cfg))
     overhead = cfg.include_scheduler_overhead
     state = _state_to_jax(sim.state, jax, jnp, f, i)
@@ -585,7 +632,7 @@ def _run_jax(sim) -> SimResult:
         # guess only costs (rare) recompiles, never correctness
         cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n))
         state = state.replace(events=PushBuffer(
-            jnp.zeros((cap, 5), f), jnp.asarray(0, i)))
+            jnp.zeros((cap, 6), f), jnp.asarray(0, i)))
 
     log = PushLog()
     qs_parts, hs_parts, e_parts = [], [], []
@@ -594,10 +641,11 @@ def _run_jax(sim) -> SimResult:
     while t0 < T:
         clen = min(chunk, T - t0)
         fn = _jax_chunk_fn(n, clen, T, policy, overhead, collect, cap,
-                           statics)
+                           statics, agg)
         prev = state
         state, (qs, hs, esum) = fn(tables, app_sched, app_choice, scalars,
-                                   pol_ops, jnp.asarray(t0, i), state)
+                                   pol_ops, agg_ops, jnp.asarray(t0, i),
+                                   state)
         if collect:
             cnt = int(state.events.count)
             if cnt > cap:
@@ -605,7 +653,7 @@ def _run_jax(sim) -> SimResult:
                 # saved entry state (count is exact, rows past cap dropped)
                 cap = _next_pow2(cnt)
                 state = prev.replace(events=PushBuffer(
-                    jnp.zeros((cap, 5), f), jnp.asarray(0, i)))
+                    jnp.zeros((cap, 6), f), jnp.asarray(0, i)))
                 continue
             if cnt:
                 log.extend_rows(np.asarray(state.events.rows[:cnt]))

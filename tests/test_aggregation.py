@@ -1,0 +1,394 @@
+"""The first-class aggregation layer (core/aggregation.py): registry,
+rule semantics, hypothesis properties of the weight functions, server
+delegation, SimConfig validation, and the weighted real-ML fused push
+scan.
+
+Properties held for every registered rule: the applied weight is a valid
+mixing weight in ``[0, 1]`` over the whole (lag, v_norm) domain, and
+``fedasync_poly`` is monotone non-increasing in lag (staler pushes never
+count MORE). Uses the real ``hypothesis`` when installed
+(requirements-dev.txt); otherwise conftest.py installs the deterministic
+stub so these still collect and run boundary + sampled cases.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AggregationRule, FedAsyncPolyRule, GapAwareRule,
+                        HeteroAwareRule, PaperFleet, ReplaceRule, Scenario,
+                        SimConfig, FederatedSim, gradient_gap,
+                        register_aggregation, registered_aggregations,
+                        resolve_aggregation)
+from repro.core.aggregation import aggregation_support, hetero_scales
+from repro.core.server import AsyncParameterServer
+
+COMMON = dict(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+ALL_RULES = ("replace", "fedasync_poly", "gap_aware", "hetero_aware")
+
+
+def paper_spec(n=8, seed=0):
+    return PaperFleet().build(np.random.default_rng(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_shipped_rules_registered(self):
+        assert set(ALL_RULES) <= set(registered_aggregations())
+
+    def test_resolve_roundtrip_singleton(self):
+        a = resolve_aggregation("fedasync_poly")
+        assert a is resolve_aggregation("fedasync_poly")
+        assert resolve_aggregation(a) is a
+        assert a.name == "fedasync_poly"
+
+    def test_resolve_unknown_raises(self):
+        with pytest.raises(ValueError, match="aggregation"):
+            resolve_aggregation("krum")
+        with pytest.raises(ValueError, match="aggregation"):
+            resolve_aggregation(7)
+
+    def test_custom_registration(self):
+        @register_aggregation
+        class _Half(AggregationRule):
+            name = "half-test"
+            supports_jax = False
+
+            def weight(self, lag, gap, v_norm, fleet=None, users=None):
+                return 0.5 * np.ones(np.shape(lag))
+
+        try:
+            assert "half-test" in registered_aggregations()
+            r = FederatedSim(SimConfig(policy="immediate", n_users=4,
+                                       horizon_s=400, app_arrival_p=0.01,
+                                       aggregation="half-test",
+                                       seed=0)).run()
+            assert r.updates > 0
+            assert all(e["weight"] == 0.5 for e in r.push_log)
+            # no traced hook: a jax request with a push log degrades to
+            # the numpy engine instead of mis-filling the weight column
+            sim = FederatedSim(SimConfig(policy="immediate", n_users=4,
+                                         horizon_s=400, engine="jax",
+                                         aggregation="half-test"))
+            assert sim.resolve_engine() == "vectorized"
+            sim2 = FederatedSim(SimConfig(policy="immediate", n_users=4,
+                                          horizon_s=400, engine="jax",
+                                          collect_push_log=False,
+                                          aggregation="half-test"))
+            assert sim2.resolve_engine() == "jax"
+        finally:
+            from repro.core import aggregation as _a
+            _a._REGISTRY.pop("half-test", None)
+            _a._INSTANCES.pop("half-test", None)
+
+    def test_knob_validation(self):
+        with pytest.raises(ValueError, match="alpha"):
+            FedAsyncPolyRule(alpha=1.5)
+        with pytest.raises(ValueError, match="non-negative"):
+            FedAsyncPolyRule(a=-0.1)
+        with pytest.raises(ValueError, match="gap_ref"):
+            GapAwareRule(gap_ref=0.0)
+        with pytest.raises(ValueError, match="non-negative"):
+            HeteroAwareRule(a=-1.0)
+
+    def test_simconfig_rejects_unknown_rule(self):
+        with pytest.raises(ValueError, match="aggregation"):
+            SimConfig(aggregation="krum")
+
+    def test_simconfig_rejects_flag_without_hook(self):
+        class _Liar(AggregationRule):
+            name = "liar-agg-test"
+
+            def weight(self, lag, gap, v_norm, fleet=None, users=None):
+                return 1.0
+
+        with pytest.raises(ValueError, match="scan_weight"):
+            SimConfig(aggregation=_Liar())
+
+    def test_simconfig_rejects_rule_without_host_path(self):
+        class _NoHost(AggregationRule):
+            name = "nohost-agg-test"
+            supports_jax = False
+
+        with pytest.raises(ValueError, match="weight"):
+            SimConfig(aggregation=_NoHost())
+
+    def test_fused_finish_shares_executable_across_knob_instances(self):
+        """The fused train+push program is memoized on jax_cache_key:
+        fresh knob-configured instances of operand-driven rules (knobs
+        ride the traced agg_ops) reuse ONE compiled executable instead
+        of retracing the most expensive jit in the repo; ad-hoc
+        instance-keyed rules never share."""
+        from repro.core.realml import _finish_chunk_fn
+        a = _finish_chunk_fn(FedAsyncPolyRule(0.6, 0.5), 0.01, 0.9,
+                             True, True)
+        b = _finish_chunk_fn(FedAsyncPolyRule(0.9, 1.0), 0.01, 0.9,
+                             True, True)
+        assert a is b
+        c = _finish_chunk_fn(GapAwareRule(1.0), 0.01, 0.9, True, True)
+        assert c is not a
+        # cache keys follow the policy convention: class-keyed only when
+        # provably safe (paramless, or knobs declared via scan_operands)
+        assert FedAsyncPolyRule(0.6, 0.5).jax_cache_key() is \
+            FedAsyncPolyRule(0.9, 1.0).jax_cache_key()
+
+        class _AdHoc(AggregationRule):
+            name = "adhoc-key-test"
+            supports_jax = False
+
+            def __init__(self, k):
+                self.k = k
+
+            def weight(self, lag, gap, v_norm, fleet=None, users=None):
+                return self.k
+
+        x, y = _AdHoc(0.5), _AdHoc(0.5)
+        assert x.jax_cache_key() is x and y.jax_cache_key() is y
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties of the weight functions
+# ---------------------------------------------------------------------------
+class TestWeightProperties:
+    @settings(max_examples=60, **COMMON)
+    @given(rule=st.sampled_from(ALL_RULES), lag=st.integers(0, 100000),
+           v_norm=st.floats(0.0, 1e6), eta=st.floats(0.0, 1.0),
+           beta=st.floats(0.0, 0.99), uid=st.integers(0, 7))
+    def test_weight_bounded_in_unit_interval(self, rule, lag, v_norm, eta,
+                                             beta, uid):
+        r = resolve_aggregation(rule)
+        gap = gradient_gap(v_norm, lag, eta, beta)
+        w = r.weight(lag, gap, v_norm, fleet=paper_spec(), users=uid)
+        assert 0.0 <= float(w) <= 1.0
+
+    @settings(max_examples=40, **COMMON)
+    @given(alpha=st.floats(0.0, 1.0), a=st.floats(0.0, 4.0),
+           lag=st.integers(0, 10000), step=st.integers(1, 1000))
+    def test_fedasync_poly_monotone_nonincreasing_in_lag(self, alpha, a,
+                                                         lag, step):
+        r = FedAsyncPolyRule(alpha=alpha, a=a)
+        w0 = float(r.weight(lag, 0.0, 0.0))
+        w1 = float(r.weight(lag + step, 0.0, 0.0))
+        assert w1 <= w0
+        assert w0 <= alpha        # lag 0 caps the whole curve
+
+    @settings(max_examples=40, **COMMON)
+    @given(gap=st.floats(0.0, 1e9), ref=st.floats(1e-6, 1e3))
+    def test_gap_aware_shrinks_with_gap(self, gap, ref):
+        r = GapAwareRule(gap_ref=ref)
+        w = float(r.weight(0, gap, 1.0))
+        assert 0.0 < w <= 1.0
+        assert float(r.weight(0, 2.0 * gap, 1.0)) <= w
+
+    @settings(max_examples=25, **COMMON)
+    @given(lags=st.lists(st.integers(0, 500), min_size=1, max_size=8),
+           rule=st.sampled_from(ALL_RULES))
+    def test_array_path_matches_scalar_path(self, lags, rule):
+        """The numpy cohort path (vectorized engine) must equal per-push
+        scalar evaluation (the loop server) element-wise, bit for bit."""
+        r = resolve_aggregation(rule)
+        fleet = paper_spec()
+        lags_a = np.asarray(lags)
+        users = np.arange(len(lags)) % 8
+        gaps = gradient_gap(1.3, lags_a, 0.01, 0.9)
+        batch = np.asarray(r.weight(lags_a, gaps, 1.3, fleet=fleet,
+                                    users=users), dtype=float)
+        scal = [float(r.weight(int(l), float(g), 1.3, fleet=fleet,
+                               users=int(u)))
+                for l, g, u in zip(lags_a, gaps, users)]
+        np.testing.assert_array_equal(batch, scal)
+
+
+# ---------------------------------------------------------------------------
+# hetero_aware fleet conditioning
+# ---------------------------------------------------------------------------
+class TestHeteroAware:
+    def test_scales_favor_fast_devices(self):
+        spec = paper_spec(8)
+        sc = hetero_scales(spec)
+        assert sc.max() == 1.0 and np.all((sc > 0.0) & (sc <= 1.0))
+        tt = np.asarray(spec.tables.t_train)
+        assert sc[np.argmin(tt)] == 1.0          # fastest class at 1.0
+        # strictly slower class -> strictly smaller scale
+        assert sc[np.argmax(tt)] == pytest.approx(tt.min() / tt.max())
+
+    def test_weight_requires_fleet(self):
+        r = HeteroAwareRule()
+        with pytest.raises(ValueError, match="fleet"):
+            r.weight(1, 0.0, 1.0)
+        with pytest.raises(ValueError, match="FleetSpec"):
+            r.init_carry(4)
+
+    def test_carry_matches_host_path_per_user(self):
+        spec = paper_spec(8)
+        r = HeteroAwareRule(a=0.5)
+        carry = r.init_carry(8, None, spec)
+        for uid in range(8):
+            w_host = float(r.weight(3, 0.0, 1.0, fleet=spec, users=uid))
+            assert w_host == pytest.approx(
+                float(carry["scale"][uid]) * 4.0 ** -0.5)
+
+    def test_same_lag_fast_device_outweighs_slow(self):
+        spec = paper_spec(8)
+        tt = np.asarray(spec.tables.t_train)[spec.device_ids]
+        fast, slow = int(np.argmin(tt)), int(np.argmax(tt))
+        r = HeteroAwareRule()
+        assert float(r.weight(2, 0.0, 1.0, fleet=spec, users=fast)) > \
+            float(r.weight(2, 0.0, 1.0, fleet=spec, users=slow))
+
+
+# ---------------------------------------------------------------------------
+# Server delegation (the if/elif ladder is gone; the rule decides)
+# ---------------------------------------------------------------------------
+class TestServerDelegation:
+    def _params(self, v=0.0):
+        return {"w": jnp.full((4,), v)}
+
+    def test_server_resolves_rule_and_exposes_name(self):
+        s = AsyncParameterServer(self._params(), eta=0.1, beta=0.9,
+                                 aggregation="fedasync_poly")
+        assert isinstance(s.rule, FedAsyncPolyRule)
+        assert s.aggregation == "fedasync_poly"   # compat spelling
+
+    def test_server_accepts_rule_instance(self):
+        rule = FedAsyncPolyRule(alpha=0.4, a=1.0)
+        s = AsyncParameterServer(self._params(0.0), eta=0.1, beta=0.9,
+                                 aggregation=rule)
+        assert s.rule is rule
+        s.pull("a")
+        s.pull("b")
+        s.push("b", self._params(1.0))
+        res = s.push("a", self._params(1.0))
+        assert res.lag == 1
+        assert res.applied_weight == pytest.approx(0.4 * 0.5)
+
+    def test_legacy_knob_kwargs_still_configure(self):
+        s = AsyncParameterServer(self._params(), eta=0.1, beta=0.9,
+                                 aggregation="fedasync_poly",
+                                 fedasync_alpha=0.3, fedasync_a=1.0)
+        assert s.rule.alpha == 0.3 and s.rule.a == 1.0
+        s2 = AsyncParameterServer(self._params(), eta=0.1, beta=0.9,
+                                  aggregation="gap_aware", gap_ref=2.0)
+        assert s2.rule.gap_ref == 2.0
+
+    def test_gap_computed_once_at_arrival(self):
+        """PushResult.gap_estimate is the Eq. (4) gap at push ARRIVAL —
+        the same pre-push value the rule's weight was derived from and
+        the loop oracle's push log records."""
+        s = AsyncParameterServer(self._params(0.0), eta=0.1, beta=0.9)
+        s.pull("a")
+        s.push("a", self._params(1.0))     # v_norm now > 0
+        vn_before = s.v_norm
+        s.pull("b")
+        s.pull("c")
+        s.push("c", self._params(2.0))
+        vn_mid = s.v_norm
+        res = s.push("b", self._params(3.0))
+        assert res.gap_estimate == pytest.approx(
+            gradient_gap(vn_mid, res.lag, 0.1, 0.9))
+        assert vn_mid != pytest.approx(vn_before)
+
+    def test_hetero_server_needs_bound_fleet(self):
+        s = AsyncParameterServer(self._params(), eta=0.1, beta=0.9,
+                                 aggregation="hetero_aware")
+        s.pull(0)
+        with pytest.raises(ValueError, match="fleet"):
+            s.push(0, self._params(1.0))
+        spec = paper_spec(4)
+        s2 = AsyncParameterServer(self._params(), eta=0.1, beta=0.9,
+                                  aggregation="hetero_aware", fleet=spec)
+        s2.pull(0)
+        res = s2.push(0, self._params(1.0))
+        assert 0.0 < res.applied_weight <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Real mode: the weighted mix runs INSIDE the fused push scan
+# ---------------------------------------------------------------------------
+class TestRealModeWeighted:
+    SIM = dict(n_users=4, horizon_s=900, app_arrival_p=0.004, seed=0,
+               ml_mode="real", V=5.0)
+    ML = dict(n_train=256, n_test=128, seed=0, eval_every=300)
+
+    def _run(self, engine, agg, forbid_generic=False):
+        from repro.core.realml import LeNetBackend
+        backend = LeNetBackend(self.SIM["n_users"], sync=False,
+                               aggregation=agg, **self.ML)
+        if forbid_generic:
+            def _boom(*a, **k):
+                raise AssertionError(
+                    "fused finish fell back to per-push host round-trips")
+            backend.push_batch = _boom
+        cfg = SimConfig(policy="online", engine=engine, aggregation=agg,
+                        **self.SIM)
+        return FederatedSim(cfg, ml_backend=backend).run()
+
+    @pytest.mark.parametrize("agg", ("fedasync_poly", "hetero_aware"))
+    def test_fused_weighted_parity_vs_loop(self, agg):
+        """Weighted rules run fused (the generic per-push path is
+        forbidden on the vectorized run) and reproduce the loop oracle's
+        schedule exactly, weights/accuracy within float tolerance."""
+        a = self._run("loop", agg)
+        b = self._run("vectorized", agg, forbid_generic=True)
+        assert a.updates == b.updates > 0
+        assert [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in a.push_log] == \
+               [(e["t"], e["user"], e["lag"], e["corun"])
+                for e in b.push_log]
+        np.testing.assert_allclose([e["weight"] for e in b.push_log],
+                                   [e["weight"] for e in a.push_log],
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose([x for _, x in b.accuracy],
+                                   [x for _, x in a.accuracy], atol=0.03)
+
+    def test_weighted_mix_changes_training_not_schedule(self):
+        """Under the paper's H == 0 regime the schedule is weight-free,
+        but the learned model differs: dampened pushes pull the global
+        parameters less far."""
+        a = self._run("vectorized", "replace")
+        b = self._run("vectorized", "fedasync_poly", forbid_generic=True)
+        assert [(e["t"], e["user"]) for e in a.push_log] == \
+               [(e["t"], e["user"]) for e in b.push_log]
+        assert any(e["weight"] < 1.0 for e in b.push_log)
+        assert all(e["weight"] == 1.0 for e in a.push_log)
+
+    def test_backend_config_rule_mismatch_rejected(self):
+        from repro.core.realml import LeNetBackend
+        backend = LeNetBackend(4, sync=False, aggregation="replace",
+                               **self.ML)
+        cfg = SimConfig(policy="online", aggregation="fedasync_poly",
+                        **self.SIM)
+        with pytest.raises(ValueError, match="aggregation"):
+            FederatedSim(cfg, ml_backend=backend)
+
+    def test_backend_config_knob_mismatch_rejected(self):
+        """Same rule NAME but different knobs must be rejected too —
+        otherwise the run silently uses the backend's knobs while the
+        config records others."""
+        from repro.core.realml import LeNetBackend
+        backend = LeNetBackend(4, sync=False, aggregation="fedasync_poly",
+                               **self.ML)      # default alpha=0.6, a=0.5
+        cfg = SimConfig(policy="online",
+                        aggregation=FedAsyncPolyRule(alpha=0.9, a=1.0),
+                        **self.SIM)
+        with pytest.raises(ValueError, match="agree"):
+            FederatedSim(cfg, ml_backend=backend)
+        # equal knobs in a fresh instance are NOT a mismatch
+        backend2 = LeNetBackend(4, sync=False,
+                                aggregation=FedAsyncPolyRule(0.6, 0.5),
+                                **self.ML)
+        cfg2 = SimConfig(policy="online", aggregation="fedasync_poly",
+                         **self.SIM)
+        FederatedSim(cfg2, ml_backend=backend2)   # no raise
+
+    def test_scenario_threads_aggregation_into_backend(self):
+        scn = Scenario(policy="online", ml="lenet", ml_kwargs=self.ML,
+                       aggregation="gap_aware", n_users=4, horizon_s=300,
+                       app_arrival_p=0.004, seed=0)
+        sim = scn.build()
+        assert sim.ml_backend.server.rule.name == "gap_aware"
+        assert sim.agg.name == "gap_aware"

@@ -1,7 +1,9 @@
 """Engine-dispatch matrix: every (engine x ml_mode x policy) combination
 either resolves to a documented engine or raises the documented error —
 plus the carry-protocol parity matrix pinning every registry policy's
-schedule on every engine against the loop oracle, bit for bit.
+schedule on every engine against the loop oracle, bit for bit, and the
+aggregation-rule parity matrix pinning the weighted push path
+(core/aggregation.py) across rule x engine x policy.
 
 ``FederatedSim.resolve_engine`` encodes the fallback rules this repo's
 engines rely on (and which the batched real-ML path relaxed):
@@ -167,3 +169,74 @@ class TestCarryProtocolParity:
         np.testing.assert_allclose([e["gap"] for e in r.push_log],
                                    [e["gap"] for e in a.push_log],
                                    rtol=1e-9, atol=1e-15)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation-rule parity matrix (rule x engine x policy): the loop oracle
+# is pinned as ground truth for the staleness-aware weighted rules — the
+# batched engines must reproduce its SCHEDULE bit for bit and its applied
+# per-push weights (the push log's sixth column, computed in-jit on the
+# jax engine through the rule's scan_weight hook).
+# ---------------------------------------------------------------------------
+class TestAggregationRuleParity:
+    @pytest.fixture(autouse=True)
+    def _x64(self):
+        import jax
+        prev = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        yield
+        jax.config.update("jax_enable_x64", prev)
+
+    ALL_RULES = ("replace", "fedasync_poly", "gap_aware", "hetero_aware")
+    # online (queue-coupled) + eps_greedy (stochastic, rng in the carry
+    # protocol): the two policies whose engine hooks exercise every piece
+    # of shared scan machinery the weight column rides on
+    POLICIES = ("online", "eps_greedy")
+    KW = dict(n_users=10, horizon_s=1500, app_arrival_p=0.01, seed=11,
+              V=2000.0, L_b=2.0)
+
+    @pytest.fixture(scope="class")
+    def oracle(self):
+        cache = {}
+
+        def get(policy, rule):
+            if (policy, rule) not in cache:
+                cache[(policy, rule)] = FederatedSim(SimConfig(
+                    policy=policy, engine="loop", aggregation=rule,
+                    **self.KW)).run()
+            return cache[(policy, rule)]
+
+        return get
+
+    @pytest.mark.parametrize("engine", ("vectorized", "jax"))
+    @pytest.mark.parametrize("rule", ALL_RULES)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_weights_match_loop_oracle(self, oracle, policy, rule, engine):
+        a = oracle(policy, rule)
+        r = FederatedSim(SimConfig(policy=policy, engine=engine,
+                                   aggregation=rule, **self.KW)).run()
+        assert a.updates == r.updates > 0
+        assert schedule_digest(r.push_log) == schedule_digest(a.push_log)
+        np.testing.assert_allclose([e["weight"] for e in r.push_log],
+                                   [e["weight"] for e in a.push_log],
+                                   rtol=1e-9, atol=1e-15)
+        np.testing.assert_allclose([e["gap"] for e in r.push_log],
+                                   [e["gap"] for e in a.push_log],
+                                   rtol=1e-9, atol=1e-15)
+
+    @pytest.mark.parametrize("rule", ALL_RULES)
+    def test_weights_are_valid_mixing_weights(self, oracle, rule):
+        ws = np.array([e["weight"] for e in oracle("online", rule).push_log])
+        assert len(ws) and np.all((ws >= 0.0) & (ws <= 1.0))
+        if rule == "replace":
+            assert np.all(ws == 1.0)    # the paper's Sec. VI rule
+        else:
+            assert ws.min() < 1.0       # staleness actually dampens
+
+    def test_trace_schedule_is_rule_independent(self, oracle):
+        """In trace mode the weight is observational: the schedule the
+        engines produce must not depend on the aggregation rule (only
+        real mode feeds the weight back into training)."""
+        a = oracle("online", "replace")
+        b = oracle("online", "fedasync_poly")
+        assert schedule_digest(a.push_log) == schedule_digest(b.push_log)

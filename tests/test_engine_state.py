@@ -25,6 +25,7 @@ class TestEngineState:
         assert es.round_open is False
         assert es.Q == 0.0 and es.H == 0.0
         assert es.carry is None and es.events is None
+        assert es.agg_carry is None      # no rule bound in the bare init
 
     def test_rng_key_is_seed_derived(self):
         cfg = SimConfig(policy="online", n_users=3, seed=42)
@@ -140,14 +141,18 @@ class TestPushLog:
 
     def test_append_and_decode_python_scalars(self):
         log = PushLog()
-        log.append(5, 2, 1, 0.25, True)
+        log.append(5, 2, 1, 0.25, True, 0.5)
         assert len(log) == 1
         e = log[0]
         assert e == {"t": 5, "user": 2, "lag": 1, "gap": 0.25,
-                     "corun": True}
+                     "corun": True, "weight": 0.5}
         # digests/reprs depend on python scalar types, not numpy ones
         assert type(e["t"]) is int and type(e["gap"]) is float
         assert type(e["corun"]) is bool
+        assert type(e["weight"]) is float
+        # weight defaults to the replace rule's full-weight push
+        log.append(6, 0, 0, 0.0, False)
+        assert log[1]["weight"] == 1.0
 
     def test_extend_block(self):
         log = PushLog()
@@ -159,13 +164,14 @@ class TestPushLog:
 
     def test_extend_rows_matches_event_fields_order(self):
         log = PushLog()
-        rows = np.array([[4.0, 9.0, 2.0, 0.125, 1.0],
-                         [4.0, 11.0, 3.0, 0.5, 0.0]])
+        rows = np.array([[4.0, 9.0, 2.0, 0.125, 1.0, 0.75],
+                         [4.0, 11.0, 3.0, 0.5, 0.0, 1.0]])
         log.extend_rows(rows)
         assert log[0] == {"t": 4, "user": 9, "lag": 2, "gap": 0.125,
-                          "corun": True}
+                          "corun": True, "weight": 0.75}
         assert log[1]["corun"] is False
-        assert tuple(EVENT_FIELDS) == ("t", "user", "lag", "gap", "corun")
+        assert tuple(EVENT_FIELDS) == ("t", "user", "lag", "gap", "corun",
+                                       "weight")
 
     def test_mixed_parts_preserve_order(self):
         log = PushLog()
@@ -188,7 +194,7 @@ class TestPushLog:
         log = PushLog()
         log.append(1, 2, 3, 0.5, False)
         assert log == [{"t": 1, "user": 2, "lag": 3, "gap": 0.5,
-                        "corun": False}]
+                        "corun": False, "weight": 1.0}]
         assert not (log == [])
 
 
@@ -235,7 +241,7 @@ class TestPushBufferStreaming:
         import jax
         import jax.numpy as jnp
 
-        buf = PushBuffer(jnp.zeros((4, 5)), jnp.asarray(0))
+        buf = PushBuffer(jnp.zeros((4, 6)), jnp.asarray(0))
         leaves, treedef = jax.tree.flatten(buf)
         assert len(leaves) == 2
         buf2 = jax.tree.unflatten(treedef, leaves)
