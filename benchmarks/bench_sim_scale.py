@@ -11,7 +11,11 @@ acceptance floor is 10x). Two sweeps:
 * fleet-scale sweep: the jax engine at n_users=100k, push-log collection
   ON vs OFF — the streamed fixed-width event buffer must keep fleet-scale
   logging feasible (memory stays O(jax_chunk), never O(T * n); the rows
-  record the push count so the log-on overhead is attributable).
+  record the push count so the log-on overhead is attributable);
+* device-dynamics sweep: vectorized and jax engines at n_users=400 with
+  the Markov churn layer (core/dynamics.py) on vs off — prices the
+  in-scan availability/battery/network transition (the ``dynamics``
+  column makes the overhead attributable across PRs).
 
 The loop engine is skipped at cohort sizes where it would dominate the
 suite's wall-clock; the jax engine reports compile and steady-state times
@@ -36,13 +40,13 @@ JSON_PATH = "BENCH_sim_scale.json"
 
 
 def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
-              collect_push_log: bool = False):
+              collect_push_log: bool = False, dynamics="none"):
     # push-log collection off by default so the engine comparison measures
     # engine speed, not log-building; the fleet sweep flips it on to price
     # the streamed event buffer
     cfg = SimConfig(policy=policy, n_users=n, horizon_s=horizon,
                     engine=engine, seed=seed,
-                    collect_push_log=collect_push_log)
+                    collect_push_log=collect_push_log, dynamics=dynamics)
     sim = FederatedSim(cfg)
     t0 = time.perf_counter()
     r = sim.run()
@@ -50,11 +54,11 @@ def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
 
 
 def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
-         push_log=False):
+         push_log=False, dynamics="none"):
     return {
         "bench": "sim_scale", "sweep": sweep, "policy": policy,
         "engine": engine, "n_users": n, "horizon_s": horizon,
-        "push_log": push_log,
+        "push_log": push_log, "dynamics": dynamics,
         "wall_s": round(wall, 3),
         "slots_per_s": round(horizon / wall, 1),
         "user_slots_per_s": round(n * horizon / wall, 0),
@@ -129,6 +133,25 @@ def run(fast: bool = True):
         rows.append(_row("fleet", "online", "jax", FLEET_N, fleet_horizon,
                          wall, r, round(t_first - wall, 2), None,
                          push_log=collect))
+
+    # --- device-dynamics sweep: churn layer on vs off ---------------------
+    from repro.core.dynamics import MarkovChurnDynamics
+    churn = MarkovChurnDynamics(p_off=0.01, p_on=0.05)
+    for engine in ("vectorized", "jax"):
+        for dyn, label in (("none", "none"), (churn, "markov")):
+            if engine == "jax":
+                t_first, _ = _time_run("online", engine, POLICY_SWEEP_N,
+                                       horizon, dynamics=dyn)
+                wall, r = _time_run("online", engine, POLICY_SWEEP_N,
+                                    horizon, dynamics=dyn)
+                compile_s = round(t_first - wall, 2)
+            else:
+                compile_s = ""
+                wall, r = _time_run("online", engine, POLICY_SWEEP_N,
+                                    horizon, dynamics=dyn)
+            rows.append(_row("dynamics", "online", engine, POLICY_SWEEP_N,
+                             horizon, wall, r, compile_s, None,
+                             dynamics=label))
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,

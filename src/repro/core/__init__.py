@@ -11,6 +11,9 @@ from .arrivals import (ArrivalProcess, BernoulliArrivals, DiurnalArrivals,
                        MarkovModulatedArrivals, TraceArrivals,
                        register_arrival, registered_arrivals,
                        resolve_arrival)
+from .dynamics import (DeviceDynamics, DynEffects, MarkovChurnDynamics,
+                       NoDynamics, register_dynamics, registered_dynamics,
+                       resolve_dynamics)
 from .energy import (APPS, DEVICE_NAMES, TESTBED, AppProfile, DeviceProfile,
                      DeviceTables, build_tables, catalog_tables, device_ids,
                      table2_savings)
@@ -46,6 +49,8 @@ __all__ = [
     "ArrivalProcess", "BernoulliArrivals", "DiurnalArrivals",
     "MarkovModulatedArrivals", "TraceArrivals",
     "register_arrival", "registered_arrivals", "resolve_arrival",
+    "DeviceDynamics", "DynEffects", "MarkovChurnDynamics", "NoDynamics",
+    "register_dynamics", "registered_dynamics", "resolve_dynamics",
     "CustomCatalogFleet", "Fleet", "FleetSpec", "PaperFleet",
     "SyntheticFleet", "register_fleet", "registered_fleets", "resolve_fleet",
     "BatchDecision", "OnlineScheduler", "UserSlotState",

@@ -34,7 +34,10 @@ from typing import Any, NamedTuple, Optional
 import numpy as np
 
 # Shared state encodings of all engines (re-exported by core/policies.py).
-MODE_WAIT, MODE_TRAIN, MODE_COOL = 0, 1, 2
+# MODE_OFF is the device-dynamics parking state (core/dynamics.py): a user
+# whose device churned off; it draws no power and re-enters the arrival
+# process through cooldown when it comes back up.
+MODE_WAIT, MODE_TRAIN, MODE_COOL, MODE_OFF = 0, 1, 2, 3
 PLAN_HOLD, PLAN_CORUN, PLAN_SEP = 0, 1, 2
 
 # Column order of the fixed-width push-event records (PushBuffer rows and
@@ -108,16 +111,22 @@ class EngineState:
     rng_key: Any = None
     carry: Any = None
     agg_carry: Any = None
+    dyn: Any = None
     events: Optional[PushBuffer] = None
 
     @classmethod
-    def init(cls, n: int, cfg, policy, agg=None, fleet=None) -> "EngineState":
+    def init(cls, n: int, cfg, policy, agg=None, fleet=None,
+             dynamics=None) -> "EngineState":
         """Fresh host-side (numpy) state for an ``n``-user run: everyone
         cooling with zero cooldown (first slot moves the fleet to waiting,
         like the historical engines), no apps, v0 model, empty queues.
         ``agg``/``fleet`` (the run's aggregation rule and FleetSpec)
-        initialize the rule carry; ``None`` leaves it empty."""
-        return cls(
+        initialize the rule carry; ``None`` leaves it empty. ``dynamics``
+        (a resolved DeviceDynamics, core/dynamics.py) initializes the
+        per-user churn state ``dyn``; ``None`` or an inactive dynamics
+        leaves it empty. All per-user arrays are shape-checked against
+        ``n`` (mis-shaped carries fail HERE, not deep inside the scan)."""
+        state = cls(
             mode=np.full(n, MODE_COOL, dtype=np.int8),
             cooldown=np.zeros(n, dtype=np.int64),
             app=np.full(n, -1, dtype=np.int64),
@@ -133,10 +142,64 @@ class EngineState:
             carry=policy.init_carry(n, cfg),
             agg_carry=None if agg is None
             else agg.init_carry(n, cfg, fleet),
+            dyn=None if dynamics is None or not dynamics.active
+            else dynamics.init_state(n, cfg, fleet),
         )
+        _check_shapes(state, n)
+        return state
 
     def replace(self, **kw) -> "EngineState":
-        return dataclasses.replace(self, **kw)
+        new = dataclasses.replace(self, **kw)
+        if _PER_USER_FIELDS.intersection(kw) or "dyn" in kw:
+            # n comes from the PRE-replace state: replacing mode itself
+            # with a mis-sized array must fail too
+            n = np.shape(self.mode)[0] if np.ndim(self.mode) else None
+            if n is not None:
+                _check_shapes(new, int(n), only=set(kw))
+        return new
+
+
+# Fields that must be (n,)-leading per-user arrays in every engine.
+_PER_USER_FIELDS = frozenset(
+    ("mode", "cooldown", "app", "app_rem", "train_rem", "corun",
+     "idle_gap", "pulled_at", "energy", "updates", "plan"))
+
+
+def _leaves(tree):
+    """Pytree leaves without requiring jax (dyn carries are dict/array)."""
+    if tree is None:
+        return
+    if isinstance(tree, dict):
+        for v in tree.values():
+            yield from _leaves(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _leaves(v)
+    else:
+        yield tree
+
+
+def _check_shapes(state: "EngineState", n: int, only=None) -> None:
+    """Every per-user array must be ``(n,)``-leading; every ``dyn`` leaf
+    with a leading axis must share it. Shape-only (never reads values),
+    so it is trace-safe and cheap; raises ValueError naming the offender
+    at construction instead of a reshape error deep inside the scan."""
+    for f in _PER_USER_FIELDS if only is None \
+            else _PER_USER_FIELDS.intersection(only):
+        v = getattr(state, f)
+        shape = np.shape(v)
+        if not shape or shape[0] != n:
+            raise ValueError(
+                f"EngineState.{f} must be an ({n},)-leading per-user "
+                f"array, got shape {shape}")
+    if only is None or "dyn" in only:
+        for leaf in _leaves(state.dyn):
+            shape = np.shape(leaf)
+            if len(shape) >= 1 and shape[0] != n:
+                raise ValueError(
+                    f"EngineState.dyn leaf has leading dim {shape[0]}, "
+                    f"expected the run's n_users={n} (shape {shape}); "
+                    "dynamics init_state must return (n,)-leading arrays")
 
 
 _FIELDS = tuple(f.name for f in dataclasses.fields(EngineState))

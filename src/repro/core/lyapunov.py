@@ -177,9 +177,15 @@ class OnlineScheduler:
         return BatchDecision(schedule, gaps, float(np.sum(gaps)), j)
 
     # ---------------------------------------------------------------- server
-    def update_queues(self, arrivals: int, served: int, gap_sum: float):
-        """Eqs. (15)-(16); called once per slot with that slot's totals."""
-        self.Q = max(self.Q - served, 0.0) + arrivals
+    def update_queues(self, arrivals: int, served: int, gap_sum: float,
+                      departures: int = 0):
+        """Eqs. (15)-(16); called once per slot with that slot's totals.
+        ``departures`` extends Eq. (15) for device churn
+        (core/dynamics.py): a waiting user whose device goes down leaves
+        the request queue without being served, so the backlog drains by
+        ``served + departures``. Zero (the default) is the paper's
+        always-on fleet — bit-identical to the historical update."""
+        self.Q = max(self.Q - served - departures, 0.0) + arrivals
         self.H = max(self.H + gap_sum - self.L_b, 0.0)
 
     def queue_state(self):

@@ -44,9 +44,25 @@ per-name singleton. New code should pass ``Policy`` instances (see
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Tuple, Type
 
 import numpy as np
+
+# jax's pure_callback round-trips its operands through jax.device_put onto
+# the CPU device before invoking the host function; forcing them back to
+# numpy inside the callback then waits on a device whose only execution
+# thread is parked inside the custom call waiting for the callback to
+# return. On one-core hosts that is a hard deadlock (observed on the
+# offline policy's plan_window callback from n_users~100 up). A second
+# host-platform device gives the operand transfer its own thread.
+# Best-effort: the flag only takes effect if jax has not yet created its
+# CPU client when this module is first imported.
+if os.cpu_count() == 1 and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=2"
+                               ).strip()
 
 from .energy import APPS
 from .engine_state import (MODE_COOL, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
@@ -219,9 +235,18 @@ def engine_support(policy: Policy) -> Dict[str, bool]:
 # tracers on this JAX version). Any change to the originals MUST land here
 # too — the jax-vs-loop parity suite is the tripwire.
 # ---------------------------------------------------------------------------
-def _jax_trace_v_norm(v_norm0, version, jnp):
-    """Mirror of simulator.trace_v_norm."""
-    return v_norm0 / jnp.sqrt(1.0 + 0.05 * version)
+def _jax_trace_v_norm(v_norm0, version, jnp, zero=0.0):
+    """Mirror of simulator.trace_v_norm.
+
+    ``zero`` must be a TRACED 0.0 when called inside jit: XLA's CPU
+    codegen is free to contract ``1.0 + 0.05 * version`` into a single
+    fma, which skips the product's rounding step and drifts an ulp from
+    the numpy original (optimization_barrier does not survive fusion).
+    Adding a runtime-opaque zero to the product forces the rounding:
+    even if the inner add contracts, ``fma(0.05, version, 0.0)`` IS the
+    correctly-rounded product, and the outer add has no fmul operand
+    left to contract with."""
+    return v_norm0 / jnp.sqrt(1.0 + (0.05 * version + zero))
 
 
 def _jax_gradient_gap(v_norm, lag, eta, beta):
@@ -429,10 +454,12 @@ class OnlinePolicy(Policy):
         f, i = sv.float_dtype, sv.int_dtype
         waiting, has_app = sv.waiting, sv.has_app
         H = sv.H
-        vn = _jax_trace_v_norm(sv.v_norm0, sv.version, jnp)
+        vn = _jax_trace_v_norm(sv.v_norm0, sv.version, jnp, sv.fp_zero)
         p_s = jnp.where(has_app, sv.pcor_g, sv.PT)
         p_i = jnp.where(has_app, sv.papp_g, sv.PI)
-        base = sv.V * p_s * sv.t_d - sv.Q
+        # fp_zero blocks fma contraction of the products (see
+        # _jax_trace_v_norm): the host rounds V*P*t_d before subtracting
+        base = (sv.V * p_s * sv.t_d + sv.fp_zero) - sv.Q
         rhs = sv.V * p_i * sv.t_d
         gap_idle_v = sv.idle_gap + sv.epsilon
         lag_idx = sv.in_flight + jnp.arange(sv.n + 1)
@@ -450,7 +477,8 @@ class OnlinePolicy(Policy):
             def body(c, xs_i):
                 j, gs = c
                 w_i, b_i, r_i, gi_i = xs_i
-                do = w_i & (b_i + H * gap_vec[j] <= r_i + H * gi_i)
+                do = w_i & (b_i + (H * gap_vec[j] + sv.fp_zero)
+                            <= r_i + (H * gi_i + sv.fp_zero))
                 gap_i = jnp.where(do, gap_vec[j], gi_i)
                 gs = gs + jnp.where(w_i, gap_i, 0.0)
                 return (j + do.astype(i), gs), do

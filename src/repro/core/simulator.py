@@ -40,8 +40,11 @@ import numpy as np
 from .aggregation import (AggregationRule, aggregation_support,
                           resolve_aggregation)
 from .arrivals import ArrivalProcess, resolve_arrival_or_default
+from .dynamics import (DROPOUT_RULES, DeviceDynamics, dynamics_support,
+                       resolve_dynamics)
 from .energy import APPS, DeviceProfile
-from .engine_state import EngineState, PushLog
+from .engine_state import (MODE_COOL, MODE_OFF, MODE_TRAIN, MODE_WAIT,
+                           EngineState, PushLog)
 from .fleet import Fleet, resolve_fleet
 from .lyapunov import OnlineScheduler
 from .policies import Policy, engine_support, resolve_policy
@@ -87,6 +90,11 @@ class SimConfig:
     push_log_capacity: int = 0      # initial per-chunk event buffer slots
     #                                 for the jax engine (0 = auto-sized;
     #                                 doubled + chunk retried on overflow)
+    # Device dynamics (core/dynamics.py): availability / battery / network
+    # churn as per-user state machines. Registry name or DeviceDynamics
+    # instance; "none" (the paper's always-on fleet) is bit-identical to
+    # the pre-dynamics engines.
+    dynamics: Union[str, DeviceDynamics] = "none"
 
     def __post_init__(self):
         # Fail at construction, not mid-run (a bad policy string used to
@@ -139,6 +147,27 @@ class SimConfig:
                 "implements no scan_weight hook; implement "
                 "scan_weight(carry, pv) or clear the flag to degrade to "
                 "the numpy engines")
+        # Dynamics validation, same shape: the name must resolve, an
+        # active dynamics needs the shared host transition (the loop
+        # oracle and the numpy engine both run on it), a supports_jax
+        # flag without the traced hook is a lie, and the dropout rule
+        # must be one the engines know how to apply structurally.
+        dyn = resolve_dynamics(self.dynamics)    # raises on unknowns
+        dsup = dynamics_support(dyn)
+        if not dsup["host"]:
+            raise ValueError(
+                f"dynamics {dyn.name!r} implements no host_step() path; "
+                "every active dynamics needs one (the loop oracle and "
+                "the numpy engine run on it)")
+        if dyn.active and dyn.supports_jax and not dsup["jax"]:
+            raise ValueError(
+                f"dynamics {dyn.name!r} sets supports_jax but implements "
+                "no scan_step hook; implement scan_step(dyn, dv) or "
+                "clear the flag to degrade to the numpy engines")
+        if dyn.active and dyn.dropout not in DROPOUT_RULES:
+            raise ValueError(
+                f"dynamics {dyn.name!r} has unknown dropout rule "
+                f"{dyn.dropout!r}; engines apply one of {DROPOUT_RULES}")
         if self.n_users <= 0:
             raise ValueError(f"n_users must be positive, got {self.n_users}")
         if self.t_d <= 0:
@@ -193,7 +222,7 @@ class SimConfig:
 @dataclasses.dataclass
 class UserState:
     device: DeviceProfile
-    mode: str = "cooldown"          # waiting | training | cooldown
+    mode: str = "cooldown"          # waiting | training | cooldown | off
     cooldown: int = 0
     app: Optional[str] = None
     app_remaining: float = 0.0
@@ -221,6 +250,14 @@ class SimResult:
     mean_Q: float
     mean_H: float
     corun_fraction: float
+    drops: int = 0                  # mid-training dropouts (device churn;
+    #                                 0 with dynamics="none")
+
+
+# UserState.mode string <-> shared engine code (engine_state constants);
+# the loop oracle builds the dynamics layer's mode view through this map.
+_MODE_CODE = {"waiting": MODE_WAIT, "training": MODE_TRAIN,
+              "cooldown": MODE_COOL, "off": MODE_OFF}
 
 
 def n_slots(cfg: SimConfig) -> int:
@@ -265,6 +302,7 @@ class FederatedSim:
         self.cfg = cfg
         self.policy = resolve_policy(cfg.policy)
         self.agg = resolve_aggregation(cfg.aggregation)
+        self.dynamics = resolve_dynamics(cfg.dynamics)
         self.rng = np.random.default_rng(cfg.seed)
         self.ml_backend = ml_backend
         if ml_backend is not None:
@@ -288,7 +326,8 @@ class FederatedSim:
         self.sched = OnlineScheduler(cfg.V, cfg.L_b, cfg.eta, cfg.beta,
                                      cfg.epsilon, cfg.t_d)
         self.state = EngineState.init(cfg.n_users, cfg, self.policy,
-                                      agg=self.agg, fleet=self.fleet_spec)
+                                      agg=self.agg, fleet=self.fleet_spec,
+                                      dynamics=self.dynamics)
         if ml_backend is not None:
             # fleet-conditioned aggregation (hetero_aware) needs the
             # run's FleetSpec; the backend forwards it to its server,
@@ -394,7 +433,11 @@ class FederatedSim:
         if self.ml.get("pull"):
             u._params = self.ml["pull"](u._uid)
 
-    def _finish_training(self, u: UserState, t: int, log: PushLog):
+    def _finish_training(self, u: UserState, t: int, log: PushLog,
+                         extra_delay: int = 0):
+        """``extra_delay`` is the device-dynamics network penalty (slots):
+        a finisher in the bad network state re-arrives late, so its next
+        pull is staler — the churn layer's feed into the lag model."""
         lag = self.version - u.pulled_at
         vn = self._v_norm()
         gap = gradient_gap(vn, lag, self.cfg.eta, self.cfg.beta)
@@ -410,7 +453,7 @@ class FederatedSim:
                 res = self.ml["push"](u._uid, trained)
         u.updates += 1
         u.mode = "cooldown"
-        u.cooldown = self.cfg.ready_delay
+        u.cooldown = self.cfg.ready_delay + extra_delay
         u.idle_gap = 0.0
         self.in_flight -= 1
         if self.cfg.collect_push_log:
@@ -469,8 +512,11 @@ class FederatedSim:
             # without scan_step (weight-free runs are unaffected)
             agg_jax = aggregation_support(self.agg)["jax"] or \
                 not cfg.collect_push_log
-            if pol.supports_jax and agg_jax and not self.ml and \
-                    self.ml_backend is None:
+            # an active dynamics without a traced scan_step degrades the
+            # same way (the numpy engine runs its host transition)
+            dyn_jax = dynamics_support(self.dynamics)["jax"]
+            if pol.supports_jax and agg_jax and dyn_jax and \
+                    not self.ml and self.ml_backend is None:
                 return "jax"
             # degrade in capability order: numpy SoA if the policy has the
             # hook (any policy under a v_norm callback, or any real-mode
@@ -487,7 +533,8 @@ class FederatedSim:
             # single-run by contract and are NOT reset here.
             self.state = EngineState.init(self.cfg.n_users, self.cfg,
                                           self.policy, agg=self.agg,
-                                          fleet=self.fleet_spec)
+                                          fleet=self.fleet_spec,
+                                          dynamics=self.dynamics)
             self.users = [UserState(device=d)
                           for d in self.fleet_spec.devices]
             self.sched.Q = 0.0
@@ -503,6 +550,9 @@ class FederatedSim:
         cfg = self.cfg
         policy = self.policy
         es = self.state                   # scalar/carry state container
+        dynamics = self.dynamics
+        dyn_active = dynamics.active
+        up = net_extra = None
         for i, u in enumerate(self.users):
             u._uid = i
             u._params = None
@@ -514,6 +564,44 @@ class FederatedSim:
 
         for t in range(T):
             arrivals = 0
+            departures = 0
+
+            # --- device dynamics (churn) ------------------------------------
+            # Runs FIRST in the slot on every engine: the shared host
+            # transition decides who went up/down, then the effects are
+            # applied in the loop idiom — a waiting user that churns off
+            # leaves the request queue (departure), a training user drops
+            # per the dynamics' rule ("lose": in-flight work discarded;
+            # "resume": paused, pays the penalty), a recovered user
+            # re-enters the arrival process through cooldown with the
+            # network state's extra delay.
+            if dyn_active:
+                mode_arr = np.array([_MODE_CODE[u.mode] for u in self.users],
+                                    dtype=np.int8)
+                corun_arr = np.array([u.corun for u in self.users],
+                                     dtype=bool)
+                es.dyn, es.rng_key, eff = dynamics.host_step(
+                    es.dyn, es.rng_key, mode_arr, corun_arr, cfg.t_d)
+                up = np.asarray(eff.up)
+                net_extra = np.asarray(eff.net_extra)
+                for i, u in enumerate(self.users):
+                    if eff.went_down[i]:
+                        if u.mode == "waiting":
+                            u.mode = "off"
+                            departures += 1
+                        elif u.mode == "training":
+                            if dynamics.dropout == "lose":
+                                u.mode = "off"
+                                u.train_remaining = 0.0
+                                self.in_flight -= 1
+                            else:       # resume: paused, extra seconds
+                                u.train_remaining += float(
+                                    eff.resume_penalty)
+                        elif u.mode == "cooldown":
+                            u.mode = "off"
+                    elif eff.went_up[i] and u.mode == "off":
+                        u.mode = "cooldown"
+                        u.cooldown = cfg.ready_delay + int(net_extra[i])
 
             # --- app arrivals / progression -------------------------------
             for i, u in enumerate(self.users):
@@ -539,11 +627,17 @@ class FederatedSim:
             served, gap_sum = policy.decide_loop(self, t, waiting, carry)
 
             # --- training progression ---------------------------------------
+            # Under churn a down trainer makes no progress (a "resume"
+            # dropout is paused, not working), and a finisher's cooldown
+            # carries the current network state's extra delay.
             for u in self.users:
-                if u.mode == "training":
+                if u.mode == "training" and (not dyn_active or up[u._uid]):
                     u.train_remaining -= cfg.t_d
                     if u.train_remaining <= 0:
-                        self._finish_training(u, t, push_log)
+                        self._finish_training(
+                            u, t, push_log,
+                            extra_delay=int(net_extra[u._uid])
+                            if dyn_active else 0)
                         if u.corun:
                             es.corun_updates += 1
             if policy.sync_rounds and self._round_open and \
@@ -554,15 +648,19 @@ class FederatedSim:
                     self.ml["sync_aggregate"]()
 
             # --- energy accounting (Eq. 10) ---------------------------------
+            # A down device draws nothing (off) — a paused "resume"
+            # trainer included.
             for u in self.users:
                 p = u.device.power(u.mode == "training", u.app is not None, u.app)
                 if cfg.include_scheduler_overhead and u.mode == "waiting" \
                         and policy.uses_online_queue:
                     p += u.device.p_sched - u.device.p_idle
+                if dyn_active and not up[u._uid]:
+                    p = 0.0
                 u.energy_j += p * cfg.t_d
 
             # --- queues ------------------------------------------------------
-            self.sched.update_queues(arrivals, served, gap_sum)
+            self.sched.update_queues(arrivals, served, gap_sum, departures)
             es.Q, es.H = self.sched.Q, self.sched.H
             es.sum_Q += es.Q
             es.sum_H += es.H
@@ -588,4 +686,5 @@ class FederatedSim:
             push_log=push_log, accuracy=accuracy,
             mean_Q=es.sum_Q / T if T else 0.0,
             mean_H=es.sum_H / T if T else 0.0,
-            corun_fraction=es.corun_updates / max(updates, 1))
+            corun_fraction=es.corun_updates / max(updates, 1),
+            drops=dynamics.total_drops(es.dyn))

@@ -64,8 +64,8 @@ from typing import List, Tuple
 import numpy as np
 
 from .engine_state import (EngineState, PushBuffer, PushLog, MODE_COOL,
-                           MODE_TRAIN, MODE_WAIT, PLAN_CORUN, PLAN_HOLD,
-                           PLAN_SEP)
+                           MODE_OFF, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
+                           PLAN_HOLD, PLAN_SEP)
 from .policies import _jax_gradient_gap, _jax_trace_v_norm
 from .simulator import SimResult, n_slots, trace_v_norm
 from .staleness import gradient_gap
@@ -125,6 +125,7 @@ class _NumpyEngine:
         self.sched = sim.sched             # queue update rule + decide_batch
         self.policy = sim.policy
         self.agg = sim.agg                 # aggregation rule (weight path)
+        self.dynamics = sim.dynamics       # device churn (core/dynamics.py)
         self.fleet_spec = sim.fleet_spec
         self._v_hook = sim.ml.get("v_norm")
         # batched real-ML backend (core/realml.py): pull/train/push whole
@@ -212,8 +213,43 @@ class _NumpyEngine:
         eval_every = self.backend.eval_every if self.backend is not None \
             else 0
         push_log = PushLog()      # fixed-width blocks, decoded lazily
+        dynamics = self.dynamics
+        dyn_active = dynamics.active
+        dyn_lose = dynamics.dropout == "lose"
+        up = net_extra = None
 
         for t in range(T):
+            departures = 0
+
+            # --- device dynamics (churn) -----------------------------------
+            # Same shared host transition as the loop oracle, effects
+            # applied as masked writes: waiting -> off is a queue
+            # departure, training -> off follows the dropout rule,
+            # cooling parks in off, and recovered users re-enter through
+            # cooldown with the network state's extra delay.
+            if dyn_active:
+                s.dyn, s.rng_key, eff = dynamics.host_step(
+                    s.dyn, s.rng_key, mode, s.corun, t_d)
+                up = np.asarray(eff.up)
+                net_extra = np.asarray(eff.net_extra)
+                wd = np.asarray(eff.went_down)
+                if wd.any():
+                    dwait = wd & (mode == MODE_WAIT)
+                    dtrain = wd & (mode == MODE_TRAIN)
+                    dcool = wd & (mode == MODE_COOL)
+                    departures = int(np.count_nonzero(dwait))
+                    mode[dwait | dcool] = MODE_OFF
+                    if dyn_lose:
+                        mode[dtrain] = MODE_OFF
+                        s.train_rem[dtrain] = 0.0
+                        s.in_flight -= int(np.count_nonzero(dtrain))
+                    else:       # resume: paused, pays the extra seconds
+                        s.train_rem[dtrain] += float(eff.resume_penalty)
+                ret = np.asarray(eff.went_up) & (mode == MODE_OFF)
+                if ret.any():
+                    mode[ret] = MODE_COOL
+                    s.cooldown[ret] = cfg.ready_delay + net_extra[ret]
+
             # --- app arrivals / progression -------------------------------
             srow = app_sched[t]
             has_app = app >= 0
@@ -252,7 +288,10 @@ class _NumpyEngine:
             served, gap_sum = policy.decide_vectorized(self, t, carry)
 
             # --- training progression --------------------------------------
-            training = mode == MODE_TRAIN
+            # under churn a down trainer is paused (resume rule) and
+            # makes no progress
+            training = (mode == MODE_TRAIN) & up if dyn_active \
+                else mode == MODE_TRAIN
             if training.any():
                 s.train_rem[training] -= t_d
                 fin = training & (s.train_rem <= 0.0)
@@ -286,7 +325,8 @@ class _NumpyEngine:
                         gaps, weights = self._finish_cohort(fidx, lags)
                     s.updates[fidx] += 1
                     mode[fidx] = MODE_COOL
-                    s.cooldown[fidx] = cfg.ready_delay
+                    s.cooldown[fidx] = cfg.ready_delay if not dyn_active \
+                        else cfg.ready_delay + net_extra[fidx]
                     s.idle_gap[fidx] = 0.0
                     s.in_flight -= k
                     s.corun_updates += int(np.count_nonzero(s.corun[fidx]))
@@ -305,12 +345,14 @@ class _NumpyEngine:
             p = np.where(training, self.p_if_train, self.p_if_idle)
             if cfg.include_scheduler_overhead and policy.uses_online_queue:
                 p = np.where(mode == MODE_WAIT, p + self.OVERHEAD, p)
+            if dyn_active:     # a down device draws nothing
+                p = np.where(up, p, 0.0)
             if t_d != 1.0:     # p * 1.0 == p bitwise; skip the alloc
                 p *= t_d
             s.energy += p
 
             # --- queues -----------------------------------------------------
-            sched.update_queues(arrivals, served, gap_sum)
+            sched.update_queues(arrivals, served, gap_sum, departures)
             s.Q, s.H = sched.Q, sched.H
             s.sum_Q += s.Q
             s.sum_H += s.H
@@ -333,7 +375,8 @@ class _NumpyEngine:
             push_log=push_log, accuracy=accuracy,
             mean_Q=s.sum_Q / T if T else 0.0,
             mean_H=s.sum_H / T if T else 0.0,
-            corun_fraction=s.corun_updates / max(updates_total, 1))
+            corun_fraction=s.corun_updates / max(updates_total, 1),
+            drops=self.dynamics.total_drops(s.dyn))
 
 
 # ======================================================================
@@ -346,7 +389,7 @@ _JAX_FN_CACHE_MAX = 32
 
 def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                   collect: bool, capacity: int, statics: tuple = (),
-                  agg=None):
+                  agg=None, dynamics=None):
     """Build + jit one scan chunk, memoized on (shapes,
     ``policy.jax_cache_key()``, overhead/collect flags, event-buffer
     capacity, the policy's ``scan_statics``, and — when the push log is
@@ -363,12 +406,16 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
     if agg is None:
         from .aggregation import resolve_aggregation
         agg = resolve_aggregation("replace")
+    if dynamics is None:
+        from .dynamics import resolve_dynamics
+        dynamics = resolve_dynamics("none")
     key = (n, chunk, T, policy.jax_cache_key(), overhead, collect, capacity,
-           statics, agg.jax_cache_key() if collect else None)
+           statics, agg.jax_cache_key() if collect else None,
+           dynamics.jax_cache_key() if dynamics.active else None)
     fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
     if fn is None:
         fn = _build_jax_chunk_fn(n, chunk, T, policy, overhead, collect,
-                                 capacity, statics, agg)
+                                 capacity, statics, agg, dynamics)
         if len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
             _JAX_FN_CACHE.pop(next(iter(_JAX_FN_CACHE)))  # evict LRU
     _JAX_FN_CACHE[key] = fn
@@ -377,16 +424,23 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
 
 def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                         collect: bool, capacity: int, statics: tuple = (),
-                        agg=None):
+                        agg=None, dynamics=None):
     import jax
     import jax.numpy as jnp
     from jax import lax
 
+    # device churn (core/dynamics.py): the phase is compiled in only for
+    # active dynamics — inactive runs trace the exact historical step —
+    # and the dropout rule is a static structural branch (both are part
+    # of the _jax_chunk_fn cache key)
+    dyn_active = dynamics is not None and dynamics.active
+    dyn_lose = dyn_active and dynamics.dropout == "lose"
+
     def simulate(tables, app_sched, app_choice, scalars, pol_ops, agg_ops,
-                 t0, state):
+                 dyn_ops, t0, state):
         PT, TT, PI, PS, P_APP, P_COR, T_COR, SRATE = tables
         (V, L_b, epsilon, eta, beta, v_norm0, t_d, ready_delay,
-         offline_window, offline_resolution) = scalars
+         offline_window, offline_resolution, fp_zero) = scalars
         f = PT.dtype
         i = jnp.asarray(0).dtype     # default int dtype (honors x64)
         ar = jnp.arange(n)
@@ -402,6 +456,42 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             pulled_at, energy, updates = s.pulled_at, s.energy, s.updates
             version, in_flight = s.version, s.in_flight
             Q, H = s.Q, s.H
+            rng_key = s.rng_key
+            dyn = s.dyn
+
+            # device dynamics (churn): the traced twin of the host
+            # transition, FIRST in the slot like the other engines; the
+            # dynamics rng draw precedes the policy's so the key chain
+            # matches the host engines bit for bit
+            if dyn_active:
+                dv = SimpleNamespace(jnp=jnp, jax=jax, lax=lax, n=n,
+                                     float_dtype=f, int_dtype=i,
+                                     rng_key=rng_key, mode=mode,
+                                     corun=corun, t_d=t_d, fp_zero=fp_zero,
+                                     consts=dyn_ops)
+                dyn, eff = dynamics.scan_step(dyn, dv)
+                rng_key = dv.rng_key
+                up = eff.up
+                wd, wu = eff.went_down, eff.went_up
+                net_extra = eff.net_extra
+                dwait = wd & (mode == MODE_WAIT)
+                dtrain = wd & (mode == MODE_TRAIN)
+                dcool = wd & (mode == MODE_COOL)
+                departures = jnp.sum(dwait)
+                if dyn_lose:
+                    mode = jnp.where(dwait | dtrain | dcool, MODE_OFF,
+                                     mode)
+                    train_rem = jnp.where(dtrain, 0.0, train_rem)
+                    in_flight = in_flight - jnp.sum(dtrain)
+                else:       # resume: paused, pays the extra seconds
+                    mode = jnp.where(dwait | dcool, MODE_OFF, mode)
+                    train_rem = jnp.where(dtrain,
+                                          train_rem + eff.resume_penalty,
+                                          train_rem)
+                ret = wu & (mode == MODE_OFF)
+                mode = jnp.where(ret, MODE_COOL, mode)
+                cooldown = jnp.where(ret, ready_delay + net_extra,
+                                     cooldown)
 
             # apps
             has_app0 = app >= 0
@@ -437,9 +527,9 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 app_sched=app_sched, app_choice=app_choice,
                 plan=plan, idle_gap=idle_gap, in_flight=in_flight,
                 version=version, round_open=s.round_open, Q=Q, H=H,
-                rng_key=s.rng_key,
+                rng_key=rng_key,
                 V=V, L_b=L_b, epsilon=epsilon, eta=eta, beta=beta,
-                v_norm0=v_norm0, t_d=t_d,
+                v_norm0=v_norm0, t_d=t_d, fp_zero=fp_zero,
                 offline_window=offline_window,
                 offline_resolution=offline_resolution,
                 consts=pol_ops, statics=statics)
@@ -458,14 +548,16 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             pulled_at = jnp.where(start, version, pulled_at)
             in_flight = in_flight + served
 
-            # training progression
-            training = mode == MODE_TRAIN
+            # training progression (a down "resume" trainer is paused)
+            training = (mode == MODE_TRAIN) & up if dyn_active \
+                else mode == MODE_TRAIN
             train_rem = jnp.where(training, train_rem - t_d, train_rem)
             fin = training & (train_rem <= 0.0)
             kfin = jnp.sum(fin)
             updates = updates + fin
             mode = jnp.where(fin, MODE_COOL, mode)
-            cooldown = jnp.where(fin, ready_delay, cooldown)
+            cooldown = jnp.where(fin, ready_delay + net_extra if dyn_active
+                                 else ready_delay, cooldown)
             idle_gap = jnp.where(fin, 0.0, idle_gap)
             in_flight = in_flight - kfin
             corun_updates = s.corun_updates + jnp.sum(fin & corun)
@@ -480,11 +572,11 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 rank = jnp.cumsum(fin) - fin
                 if policy.sync_rounds:
                     lag = version - pulled_at
-                    vn = _jax_trace_v_norm(v_norm0, version, jnp)
+                    vn = _jax_trace_v_norm(v_norm0, version, jnp, fp_zero)
                 else:
                     vers = version + rank
                     lag = vers - pulled_at
-                    vn = _jax_trace_v_norm(v_norm0, vers, jnp)
+                    vn = _jax_trace_v_norm(v_norm0, vers, jnp, fp_zero)
                 gap = _jax_gradient_gap(vn, lag, eta, beta)
                 if policy.sync_rounds:
                     # FedAvg rounds average; no per-push weight
@@ -520,10 +612,17 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                           jnp.where(has_app, papp_g, PI))
             if overhead and policy.uses_online_queue:
                 p = jnp.where(mode == MODE_WAIT, p + (PS - PI), p)
-            energy = energy + p * t_d
+            if dyn_active:     # a down device draws nothing
+                p = jnp.where(up, p, 0.0)
+            # + fp_zero: round p*t_d before accumulating, as the host does
+            # (fma contraction would skip it — see _jax_trace_v_norm)
+            energy = energy + (p * t_d + fp_zero)
 
-            # queues (Eqs. 15-16)
-            Q = jnp.maximum(Q - served, 0.0) + arrivals
+            # queues (Eqs. 15-16; departures extend Eq. 15 under churn)
+            if dyn_active:
+                Q = jnp.maximum(Q - served - departures, 0.0) + arrivals
+            else:
+                Q = jnp.maximum(Q - served, 0.0) + arrivals
             H = jnp.maximum(H + gap_sum - L_b, 0.0)
             s2 = EngineState(
                 mode=mode, cooldown=cooldown, app=app, app_rem=app_rem,
@@ -533,7 +632,7 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 round_open=round_open, Q=Q, H=H,
                 sum_Q=s.sum_Q + Q, sum_H=s.sum_H + H,
                 corun_updates=corun_updates, rng_key=rng_key,
-                carry=carry, agg_carry=agg_carry, events=events)
+                carry=carry, agg_carry=agg_carry, dyn=dyn, events=events)
             return s2, (Q, H, jnp.sum(energy))
 
         return lax.scan(step, state, (sched_c, choice_c, ts))
@@ -564,7 +663,8 @@ def _state_to_jax(es: EngineState, jax, jnp, f, i) -> EngineState:
         sum_Q=cast(es.sum_Q), sum_H=cast(es.sum_H),
         corun_updates=cast(es.corun_updates), rng_key=cast(es.rng_key),
         carry=jax.tree.map(cast, es.carry),
-        agg_carry=jax.tree.map(cast, es.agg_carry), events=None)
+        agg_carry=jax.tree.map(cast, es.agg_carry),
+        dyn=jax.tree.map(cast, es.dyn), events=None)
 
 
 def _state_to_host(state: EngineState, jax) -> EngineState:
@@ -586,7 +686,8 @@ def _state_to_host(state: EngineState, jax) -> EngineState:
         corun_updates=int(state.corun_updates),
         rng_key=np.asarray(state.rng_key),
         carry=jax.tree.map(np.asarray, state.carry),
-        agg_carry=jax.tree.map(np.asarray, state.agg_carry), events=None)
+        agg_carry=jax.tree.map(np.asarray, state.agg_carry),
+        dyn=jax.tree.map(np.asarray, state.dyn), events=None)
 
 
 def _next_pow2(k: int) -> int:
@@ -603,8 +704,11 @@ def _run_jax(sim) -> SimResult:
     cfg = sim.cfg
     policy = sim.policy
     agg = sim.agg
+    dynamics = sim.dynamics
     from .aggregation import aggregation_support
+    from .dynamics import dynamics_support
     if not policy.supports_jax or \
+            not dynamics_support(dynamics)["jax"] or \
             (cfg.collect_push_log and not aggregation_support(agg)["jax"]):
         return _NumpyEngine(sim).run()  # resolve_engine reroutes; be safe
     n = cfg.n_users
@@ -615,13 +719,22 @@ def _run_jax(sim) -> SimResult:
     tables = tuple(jnp.asarray(a, f) for a in _user_tables(sim))
     app_sched = jnp.asarray(sim.app_sched[:T])
     app_choice = jnp.asarray(sim.app_choice[:T], jnp.int32)
+    # fp_zero: a runtime-opaque 0.0 the scan adds to products that the
+    # host engines round before accumulating — defeats XLA's fma
+    # contraction, which would skip that rounding (see _jax_trace_v_norm)
     scalars = tuple(jnp.asarray(s, f) for s in (
         cfg.V, cfg.L_b, cfg.epsilon, cfg.eta, cfg.beta, cfg.v_norm0,
         cfg.t_d)) + (jnp.asarray(cfg.ready_delay),) + tuple(
         jnp.asarray(s, f) for s in (cfg.offline_window,
-                                    cfg.offline_resolution))
+                                    cfg.offline_resolution)) + (
+        jnp.asarray(0.0, f),)
     pol_ops = tuple(jnp.asarray(v) for v in policy.scan_operands(cfg))
     agg_ops = tuple(jnp.asarray(v) for v in agg.scan_operands(cfg))
+    # dynamics knobs: floats in the run's float dtype (f64 parity with
+    # the host transition under x64), ints in the default int dtype
+    dyn_ops = tuple(
+        jnp.asarray(v, f) if isinstance(v, float) else jnp.asarray(v)
+        for v in dynamics.scan_operands(cfg)) if dynamics.active else ()
     statics = tuple(policy.scan_statics(cfg))
     overhead = cfg.include_scheduler_overhead
     state = _state_to_jax(sim.state, jax, jnp, f, i)
@@ -641,11 +754,11 @@ def _run_jax(sim) -> SimResult:
     while t0 < T:
         clen = min(chunk, T - t0)
         fn = _jax_chunk_fn(n, clen, T, policy, overhead, collect, cap,
-                           statics, agg)
+                           statics, agg, dynamics)
         prev = state
         state, (qs, hs, esum) = fn(tables, app_sched, app_choice, scalars,
-                                   pol_ops, agg_ops, jnp.asarray(t0, i),
-                                   state)
+                                   pol_ops, agg_ops, dyn_ops,
+                                   jnp.asarray(t0, i), state)
         if collect:
             cnt = int(state.events.count)
             if cnt > cap:
@@ -685,4 +798,5 @@ def _run_jax(sim) -> SimResult:
         push_log=log, accuracy=[],
         mean_Q=sum_Q / T if T else 0.0,
         mean_H=sum_H / T if T else 0.0,
-        corun_fraction=corun_updates / max(updates_total, 1))
+        corun_fraction=corun_updates / max(updates_total, 1),
+        drops=dynamics.total_drops(sim.state.dyn))

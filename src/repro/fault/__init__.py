@@ -1,3 +1,5 @@
-from .monitor import HeartbeatMonitor, StragglerDetector, ElasticCohort
+from .monitor import (ElasticCohort, FleetMonitor, HeartbeatMonitor,
+                      SlotClock, StragglerDetector)
 
-__all__ = ["HeartbeatMonitor", "StragglerDetector", "ElasticCohort"]
+__all__ = ["ElasticCohort", "FleetMonitor", "HeartbeatMonitor",
+           "SlotClock", "StragglerDetector"]

@@ -1,0 +1,162 @@
+"""Property-based tests for the device-dynamics layer (core/dynamics.py).
+
+Whatever the knobs, the ``MarkovChurnDynamics`` transition must uphold
+its state-machine contracts: battery trajectories stay inside
+``[0, capacity]`` slot by slot, the availability chain's long-run on
+fraction matches the two-state Markov stationary distribution
+``p_on / (p_on + p_off)``, and mid-training dropout under either rule
+never drives the engine invariants negative (``in_flight`` equals the
+training population, queues stay non-negative).
+
+Uses the real ``hypothesis`` when installed; otherwise conftest.py
+installs the deterministic stub so these still collect and run
+boundary + sampled cases.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import MarkovChurnDynamics, Scenario
+from repro.core.engine_state import MODE_TRAIN, MODE_WAIT
+from repro.core.policies import ImmediatePolicy
+from repro.core.simulator import SimConfig
+
+COMMON = dict(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+
+
+def _fresh_key(seed):
+    import jax
+    return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+def _step_chain(dyn_obj, n, T, seed, mode=None, corun=None, t_d=1.0,
+                each_slot=None):
+    """Drive host_step for T slots outside any engine; returns final dyn."""
+    cfg = SimConfig()
+    state = dyn_obj.init_state(n, cfg)
+    key = _fresh_key(seed)
+    mode = np.full(n, MODE_WAIT) if mode is None else mode
+    corun = np.zeros(n, bool) if corun is None else corun
+    for _ in range(T):
+        state, key, eff = dyn_obj.host_step(state, key, mode, corun, t_d)
+        if each_slot is not None:
+            each_slot(state, eff)
+    return state
+
+
+class TestBatteryBounds:
+    @settings(max_examples=12, **COMMON)
+    @given(capacity=st.floats(0.2, 3.0), init_frac=st.floats(0.0, 1.0),
+           drain=st.floats(0.0, 0.5), charge=st.floats(0.0, 0.5),
+           t_d=st.floats(0.5, 4.0), seed=st.integers(0, 2 ** 16))
+    def test_battery_stays_in_range_every_slot(self, capacity, init_frac,
+                                               drain, charge, t_d, seed):
+        """clip() must hold the trajectory in [0, capacity] under any
+        drain/charge rates, including overshooting ones, for training
+        and idle users alike."""
+        n = 8
+        dyn = MarkovChurnDynamics(
+            p_off=0.1, p_on=0.3, battery_capacity=capacity,
+            battery_init=init_frac, drain_train=drain,
+            drain_corun=min(drain * 1.5, 0.5), charge_rate=charge,
+            battery_min=0.0)
+        mode = np.where(np.arange(n) % 2 == 0, MODE_TRAIN, MODE_WAIT)
+        corun = np.arange(n) % 4 == 0
+
+        def check(state, eff):
+            b = state["battery"]
+            assert np.all(b >= 0.0)
+            assert np.all(b <= capacity)
+
+        _step_chain(dyn, n, 150, seed, mode=mode, corun=corun, t_d=t_d,
+                    each_slot=check)
+
+    def test_battery_collapse_gates_participation(self):
+        """Draining past battery_min turns the user down even while the
+        availability chain stays on (p_off=0)."""
+        dyn = MarkovChurnDynamics(
+            p_off=0.0, p_on=1.0, battery_init=0.3, drain_train=0.05,
+            charge_rate=0.0, battery_min=0.1)
+        n = 4
+        mode = np.full(n, MODE_TRAIN)
+        downs = []
+        _step_chain(dyn, n, 20, seed=0, mode=mode,
+                    each_slot=lambda s, e: downs.append(~e.up))
+        assert np.all(downs[-1])      # everyone below threshold => down
+        assert not np.any(downs[0])   # but not on slot one
+
+
+class TestMarkovStationary:
+    @settings(max_examples=10, **COMMON)
+    @given(p_off=st.floats(0.05, 0.5), p_on=st.floats(0.05, 0.5),
+           seed=st.integers(0, 2 ** 16))
+    def test_on_fraction_matches_stationary_distribution(self, p_off, p_on,
+                                                         seed):
+        """Long-run fraction of available slots ~ p_on / (p_on + p_off).
+        Battery is configured inert (no drain, min 0) so availability is
+        the chain alone; 200 burn-in slots wash out the all-on start."""
+        n, T, burn = 64, 600, 200
+        dyn = MarkovChurnDynamics(
+            p_off=p_off, p_on=p_on, drain_train=0.0, drain_corun=0.0,
+            charge_rate=0.0, battery_min=0.0)
+        on_frac = []
+
+        def tally(state, eff):
+            on_frac.append(float(np.mean(state["on"])))
+
+        _step_chain(dyn, n, T, seed, each_slot=tally)
+        measured = float(np.mean(on_frac[burn:]))
+        expected = p_on / (p_on + p_off)
+        assert measured == pytest.approx(expected, abs=0.12)
+
+
+class _AuditPolicy(ImmediatePolicy):
+    """Immediate policy that audits engine invariants before every
+    decision: in_flight tracks the training population exactly and never
+    goes negative, queues stay non-negative — under churn included."""
+
+    name = "props-audit"
+
+    def __init__(self):
+        self.violations = []
+
+    def _audit(self, n_training, in_flight, Q, H):
+        if in_flight != n_training:
+            self.violations.append(
+                f"in_flight {in_flight} != training {n_training}")
+        if in_flight < 0:
+            self.violations.append(f"in_flight {in_flight} < 0")
+        if Q < 0 or H < 0:
+            self.violations.append(f"negative queue Q={Q} H={H}")
+
+    def decide_loop(self, sim, t, waiting, carry):
+        n_tr = sum(u.mode == "training" for u in sim.users)
+        self._audit(n_tr, sim.in_flight, sim.sched.Q, sim.sched.H)
+        return super().decide_loop(sim, t, waiting, carry)
+
+    def decide_vectorized(self, eng, t, carry):
+        s = eng.s
+        n_tr = int(np.count_nonzero(s.mode == MODE_TRAIN))
+        self._audit(n_tr, int(s.in_flight), float(eng.sched.Q),
+                    float(eng.sched.H))
+        return super().decide_vectorized(eng, t, carry)
+
+
+class TestDropoutInvariants:
+    @settings(max_examples=10, **COMMON)
+    @given(p_off=st.floats(0.02, 0.4), p_on=st.floats(0.05, 0.6),
+           dropout=st.sampled_from(["lose", "resume"]),
+           engine=st.sampled_from(["loop", "vectorized"]),
+           seed=st.integers(0, 2 ** 16))
+    def test_churn_never_corrupts_queues_or_in_flight(self, p_off, p_on,
+                                                      dropout, engine,
+                                                      seed):
+        pol = _AuditPolicy()
+        dyn = MarkovChurnDynamics(p_off=p_off, p_on=p_on, dropout=dropout,
+                                  resume_penalty_s=10.0)
+        r = Scenario(engine=engine, policy=pol, dynamics=dyn, n_users=8,
+                     horizon_s=300, seed=seed, app_arrival_p=0.02).run()
+        assert pol.violations == []
+        assert r.drops >= 0

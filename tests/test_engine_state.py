@@ -132,6 +132,66 @@ class TestEngineState:
         assert sim.state.round_open is True
 
 
+class TestShapeValidation:
+    """EngineState.init/replace validate per-user array shapes against n
+    — a mis-shaped write fails loudly at the write, not slots later as a
+    broadcast error (or worse, silently)."""
+
+    def _state(self, n=4):
+        cfg = SimConfig(policy="online", n_users=n)
+        return EngineState.init(n, cfg, resolve_policy("online"))
+
+    def test_replace_rejects_wrong_length_per_user_array(self):
+        es = self._state(4)
+        with pytest.raises(ValueError, match="mode"):
+            es.replace(mode=np.zeros(3, dtype=es.mode.dtype))
+        with pytest.raises(ValueError, match="energy"):
+            es.replace(energy=np.zeros(5))
+
+    def test_replace_rejects_scalar_for_per_user_field(self):
+        es = self._state(4)
+        with pytest.raises(ValueError, match="train_rem"):
+            es.replace(train_rem=np.float64(0.0))
+
+    def test_replace_accepts_correct_shapes(self):
+        es = self._state(4)
+        es2 = es.replace(energy=np.ones(4), version=3)
+        assert es2.version == 3
+        np.testing.assert_array_equal(es2.energy, np.ones(4))
+
+    def test_replace_validates_dyn_tree_leaves(self):
+        es = self._state(4)
+        dyn = {"battery": np.ones(4), "up": np.ones(4, bool)}
+        es2 = es.replace(dyn=dyn)
+        assert es2.dyn is dyn
+        with pytest.raises(ValueError, match="dyn"):
+            es.replace(dyn={"battery": np.ones(3)})
+
+    def test_dyn_scalar_leaves_are_allowed(self):
+        """Run-constant scalars inside the dynamics pytree (0-d leaves)
+        are not per-user arrays and must pass."""
+        es = self._state(4)
+        es2 = es.replace(dyn={"battery": np.ones(4),
+                              "threshold": np.float64(0.2)})
+        assert es2.dyn["threshold"] == 0.2
+
+    def test_init_validates_dynamics_state(self):
+        from repro.core.dynamics import MarkovChurnDynamics
+
+        class _Broken(MarkovChurnDynamics):
+            name = "broken-shape-test"
+
+            def init_state(self, n, cfg, fleet=None):
+                state = super().init_state(n, cfg, fleet)
+                state["battery"] = state["battery"][:-1]
+                return state
+
+        cfg = SimConfig(policy="online", n_users=4)
+        with pytest.raises(ValueError, match="dyn"):
+            EngineState.init(4, cfg, resolve_policy("online"),
+                             dynamics=_Broken())
+
+
 class TestPushLog:
     def test_empty_equals_empty_list(self):
         log = PushLog()

@@ -1,7 +1,9 @@
-"""Fault tolerance: heartbeats, straggler detection, elastic membership."""
+"""Fault tolerance: heartbeats, straggler detection, elastic membership,
+and the slot-clock wiring that runs them on the simulator's timeline."""
 import pytest
 
-from repro.fault.monitor import (ElasticCohort, HeartbeatMonitor,
+from repro.fault.monitor import (ElasticCohort, FleetMonitor,
+                                 HeartbeatMonitor, SlotClock,
                                  StragglerDetector)
 
 
@@ -76,3 +78,82 @@ class TestElasticCohort:
         c.join("a")
         with pytest.raises(RuntimeError):
             c.join("b")
+
+
+class TestSlotClock:
+    def test_reads_slot_times_t_d(self):
+        clk = SlotClock(t_d=1.6)
+        assert clk() == 0.0
+        clk.advance(3)
+        assert clk() == pytest.approx(3 * 1.6)
+        clk.advance()
+        assert clk.slot == 4
+
+    def test_seek_is_forward_only(self):
+        clk = SlotClock()
+        clk.seek(10)
+        clk.seek(10)            # same slot is fine (in-slot events)
+        with pytest.raises(ValueError, match="rewind"):
+            clk.seek(9)
+
+    def test_rejects_nonpositive_t_d(self):
+        with pytest.raises(ValueError, match="t_d"):
+            SlotClock(t_d=0.0)
+
+    def test_drives_heartbeat_timeout_in_slots(self):
+        """A HeartbeatMonitor on a SlotClock times out after
+        timeout / t_d slots of silence — slot arithmetic, no wall time."""
+        clk = SlotClock(t_d=2.0)
+        hb = HeartbeatMonitor(timeout=10.0, clock=clk)   # 5 slots
+        hb.beat("u")
+        clk.seek(5)
+        assert hb.dead() == set()   # exactly at timeout: not yet dead
+        clk.seek(6)
+        assert hb.dead() == {"u"}
+
+
+class TestFleetMonitor:
+    def test_sweep_evicts_silent_user_from_both_monitors(self):
+        mon = FleetMonitor(timeout_slots=5)
+        for slot in range(4):
+            mon.observe_push(slot, 1)
+            mon.observe_push(slot, 2)
+        mon.observe_push(4, 1)      # user 2 falls silent after slot 3
+        for slot in range(5, 10):
+            mon.observe_push(slot, 1)
+            dead = mon.sweep(slot)
+        assert (9, 2) in mon.evictions
+        assert 2 not in mon.heartbeat.workers
+        assert 2 not in mon.straggler.workers
+        assert mon.active == {1}
+
+    def test_eviction_is_not_final(self):
+        """An evicted user's next push re-registers it — the server-side
+        mirror of a churned device re-entering the arrival process."""
+        mon = FleetMonitor(timeout_slots=3)
+        mon.observe_push(0, 7)
+        mon.sweep(10)
+        assert mon.active == set()
+        mon.observe_push(10, 7)
+        assert mon.active == {7}
+        assert mon.sweep(11) == set()
+
+    def test_rejects_nonpositive_timeout(self):
+        with pytest.raises(ValueError, match="timeout_slots"):
+            FleetMonitor(timeout_slots=0)
+
+    def test_replay_matches_live_observation(self):
+        """replay() over a push-log list equals the same events fed
+        live through observe_push/sweep."""
+        events = [(0, 1), (0, 2), (3, 1), (7, 1), (12, 1)]
+        log = [{"t": t, "user": u} for t, u in events]
+        replayed = FleetMonitor(timeout_slots=4).replay(log, 15)
+        live = FleetMonitor(timeout_slots=4)
+        k = 0
+        for slot in range(15):
+            while k < len(events) and events[k][0] == slot:
+                live.observe_push(slot, events[k][1])
+                k += 1
+            live.sweep(slot)
+        assert replayed == live.evictions
+        assert [u for _, u in replayed].count(2) == 1

@@ -181,6 +181,35 @@ class TestJaxBackend:
         assert a.updates > 0
         assert_equivalent(a, b)
 
+    def test_single_core_hosts_get_second_callback_device(self):
+        """On one-core hosts jax's pure_callback deadlocks: its operand
+        device_put waits on the CPU device whose only thread is parked in
+        the custom call waiting for the callback (hangs the offline
+        policy's plan_window callback from n_users~100 up). policies.py
+        must pre-set --xla_force_host_platform_device_count=2 there, and
+        must leave XLA_FLAGS alone on multi-core hosts."""
+        import os
+        import subprocess
+        import sys
+
+        import repro.core.policies as pol
+        src = os.path.dirname(os.path.dirname(os.path.dirname(pol.__file__)))
+        code = ("import os; os.cpu_count = lambda: {n}; "
+                "os.environ.pop('XLA_FLAGS', None); "
+                "import repro.core.policies; "
+                "print(os.environ.get('XLA_FLAGS', ''))")
+
+        def probe(n):
+            out = subprocess.run(
+                [sys.executable, "-c", code.format(n=n)],
+                env={**os.environ, "PYTHONPATH": src},
+                capture_output=True, text=True, timeout=120)
+            assert out.returncode == 0, out.stderr
+            return out.stdout
+
+        assert "xla_force_host_platform_device_count=2" in probe(1)
+        assert "xla_force_host_platform_device_count" not in probe(4)
+
     def test_v_norm_hook_falls_back_to_numpy(self):
         """A Python v_norm callback can't run inside lax.scan; jax must
         degrade to the numpy engine (which honors it), not silently
