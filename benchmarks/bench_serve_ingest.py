@@ -1,0 +1,152 @@
+"""Serving-tier ingestion: sustained pushes/sec and apply latency.
+
+Drives the sharded async parameter server through the full ingestion
+pipeline (bounded queue -> per-shard decode -> staged atomic commit)
+with a cohort of synthetic clients pushing continuously, and measures
+
+* sustained **pushes/sec** (committed pushes over the timed window),
+* **p50/p99 apply latency** (first shard packet enqueued -> atomic
+  commit, from the pipeline's per-push latency log),
+* the **wire size** per push under the configured codec,
+
+over the matrix shard count x model size x compression codec. The
+monitor rides along (every packet heartbeats, every commit is a cadence
+sample, a periodic sweep runs) so the measured path is the production
+one, fault machinery included.
+
+Fast mode (CI) runs the small model; ``--full`` adds the ~1M-param model
+and a deeper shard sweep. Every run persists ``BENCH_serve_ingest.json``
+(see ``common.write_json``) so the ingest-throughput trajectory is
+machine-readable across PRs.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_ingest --fast
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+JSON_PATH = "BENCH_serve_ingest.json"
+
+SIZES_FAST = (65_536,)
+SIZES_FULL = (65_536, 1_048_576)
+SHARDS_FAST = (1, 4)
+SHARDS_FULL = (1, 4, 8)
+CODECS = ("none", "int8", "topk")
+N_CLIENTS = 8
+SWEEP_EVERY = 16
+
+
+def _params(n_params: int):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    d = 64
+    rows = n_params // d
+    return {"embed": jnp.asarray(rng.normal(0, 0.1, (rows, d))
+                                 .astype(np.float32)),
+            "head": jnp.asarray(rng.normal(0, 0.1, n_params - rows * d)
+                                .astype(np.float32))}
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
+               warmup: int):
+    from repro.fault.monitor import FleetMonitor
+    from repro.serve import (IngestPipeline, ServeClient,
+                             ShardedAsyncParameterServer)
+
+    server = ShardedAsyncParameterServer(_params(n_params), eta=0.05,
+                                         beta=0.9, n_shards=n_shards,
+                                         history_depth=4 * N_CLIENTS)
+    pipe = IngestPipeline(server, capacity=8 * n_shards * N_CLIENTS,
+                          codec=codec,
+                          monitor=FleetMonitor(timeout_slots=10 ** 6))
+    clients = [ServeClient(i, pipe) for i in range(N_CLIENTS)]
+    rng = np.random.default_rng(1)
+    delta = rng.normal(0, 0.01, server.spec.total).astype(np.float32)
+
+    def one_push(t):
+        c = clients[t % N_CLIENTS]
+        base, _ = c.pull()
+        sign = 1.0 if t % 2 == 0 else -1.0
+        _, accepted = c.push(np.asarray(base) + sign * delta, slot=t)
+        assert accepted == n_shards, "bench must not shed its own load"
+        pipe.drain()
+        if t % SWEEP_EVERY == 0:
+            pipe.sweep(t)
+
+    for t in range(warmup):
+        one_push(t)
+    pipe.latencies.clear()
+    applied0 = pipe.stats.applied
+
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + n_pushes):
+        one_push(t)
+    wall = time.perf_counter() - t0
+
+    # wire size of one representative push (encode only, off the clock)
+    import jax.numpy as jnp
+    c = clients[0]
+    flat_base, _ = c.pull()
+    flat = np.asarray(flat_base) + delta
+    wire_bytes = sum(
+        pipe.codec.wire_bytes(pipe.codec.encode(
+            (c.client_id, i), jnp.asarray(flat[server.spec.shard_slice(i)]),
+            c.base[i]))
+        for i in range(n_shards))
+
+    committed = pipe.stats.applied - applied0
+    lat_ms = [1e3 * l for l in pipe.latencies]
+    return {
+        "bench": "serve_ingest",
+        "model_params": n_params,
+        "n_shards": n_shards,
+        "codec": codec,
+        "n_pushes": committed,
+        "pushes_per_sec": round(committed / wall, 2),
+        "apply_p50_ms": round(_percentile(lat_ms, 50), 3),
+        "apply_p99_ms": round(_percentile(lat_ms, 99), 3),
+        "wire_kb_per_push": round(wire_bytes / 1024.0, 1),
+        "raw_kb_per_push": round(4.0 * n_params / 1024.0, 1),
+        "rejected": pipe.stats.rejected,
+        "evicted": pipe.stats.evicted,
+    }
+
+
+def run(fast: bool = True):
+    sizes = SIZES_FAST if fast else SIZES_FULL
+    shard_counts = SHARDS_FAST if fast else SHARDS_FULL
+    n_pushes = 60 if fast else 300
+    warmup = 8
+    rows = []
+    for n_params in sizes:
+        for n_shards in shard_counts:
+            for codec in CODECS:
+                rows.append(_bench_one(n_params, n_shards, codec,
+                                       n_pushes, warmup))
+
+    from benchmarks.common import write_json
+    write_json(rows, JSON_PATH,
+               meta={"bench": "serve_ingest", "fast": fast,
+                     "n_clients": N_CLIENTS})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    emit(run(fast=args.fast))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ import time
 
 from benchmarks import (bench_fig4_tradeoff, bench_fig5_convergence,
                         bench_fig6_arrival, bench_kernels,
-                        bench_real_scale, bench_roofline, bench_sim_scale,
+                        bench_real_scale, bench_roofline,
+                        bench_serve_ingest, bench_sim_scale,
                         bench_table2_energy, bench_table3_overhead)
 from benchmarks.common import emit
 
@@ -26,6 +27,7 @@ BENCHES = [
     ("real_scale", bench_real_scale),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
+    ("serve_ingest", bench_serve_ingest),
 ]
 
 

@@ -63,7 +63,7 @@ import numpy as np
 __all__ = ["AggregationRule", "ReplaceRule", "FedAsyncPolyRule",
            "GapAwareRule", "HeteroAwareRule", "register_aggregation",
            "registered_aggregations", "resolve_aggregation",
-           "aggregation_support", "hetero_scales"]
+           "configure_aggregation", "aggregation_support", "hetero_scales"]
 
 
 class AggregationRule:
@@ -167,6 +167,23 @@ def resolve_aggregation(rule) -> AggregationRule:
         return _INSTANCES[rule]
     raise ValueError(f"aggregation must be a name or AggregationRule "
                      f"instance, got {type(rule).__name__}")
+
+
+def configure_aggregation(rule, *, fedasync_alpha: float = 0.6,
+                          fedasync_a: float = 0.5,
+                          gap_ref: float = 1.0) -> AggregationRule:
+    """``resolve_aggregation`` plus the legacy knob kwargs both servers
+    accept: a registry NAME given with non-default knob values constructs
+    the matching configured rule instead of the shared singleton. Rule
+    instances pass through untouched (their own knobs win). One home for
+    the ladder so ``AsyncParameterServer`` and the sharded serving tier
+    cannot drift."""
+    if isinstance(rule, str) and rule == "fedasync_poly" \
+            and (fedasync_alpha != 0.6 or fedasync_a != 0.5):
+        return FedAsyncPolyRule(fedasync_alpha, fedasync_a)
+    if isinstance(rule, str) and rule == "gap_aware" and gap_ref != 1.0:
+        return GapAwareRule(gap_ref)
+    return resolve_aggregation(rule)
 
 
 def aggregation_support(rule: AggregationRule) -> Dict[str, bool]:

@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aggregation import (AggregationRule, FedAsyncPolyRule, GapAwareRule,
-                          resolve_aggregation)
+from .aggregation import AggregationRule, configure_aggregation
 from .staleness import LagTracker, gradient_gap, tree_l2_norm
 
 
@@ -65,15 +64,9 @@ class AsyncParameterServer:
         self.params = params
         self.eta = eta
         self.beta = beta
-        if isinstance(aggregation, str) and aggregation == "fedasync_poly" \
-                and (fedasync_alpha != 0.6 or fedasync_a != 0.5):
-            self.rule: AggregationRule = FedAsyncPolyRule(fedasync_alpha,
-                                                          fedasync_a)
-        elif isinstance(aggregation, str) and aggregation == "gap_aware" \
-                and gap_ref != 1.0:
-            self.rule = GapAwareRule(gap_ref)
-        else:
-            self.rule = resolve_aggregation(aggregation)
+        self.rule: AggregationRule = configure_aggregation(
+            aggregation, fedasync_alpha=fedasync_alpha,
+            fedasync_a=fedasync_a, gap_ref=gap_ref)
         self.aggregation = self.rule.name
         self.fleet_spec = fleet
         self.lag_tracker = LagTracker()

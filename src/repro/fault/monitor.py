@@ -156,6 +156,15 @@ class FleetMonitor:
         self.heartbeat.beat(int(user))
         self.straggler.on_update(int(user))
 
+    def observe_heartbeat(self, slot: int, user: int) -> None:
+        """Liveness-only beat (no cadence sample): the serving tier calls
+        this per shard PACKET, so a multi-shard push keeps its island
+        alive while in flight without the burst of same-slot deliveries
+        collapsing the straggler EWMA to zero intervals. Only completed
+        pushes (``observe_push``) are cadence samples."""
+        self.clock.seek(int(slot))
+        self.heartbeat.beat(int(user))
+
     def sweep(self, slot: int) -> Set[int]:
         """Advance to ``slot`` and evict every user whose last push aged
         past the timeout. Eviction removes the user from BOTH monitors —

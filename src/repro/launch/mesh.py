@@ -123,3 +123,29 @@ def make_host_mesh(model: int = 1):
     """Whatever this host offers (CPU tests: 1 device -> (1,1) mesh)."""
     n = len(jax.devices())
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(n_shards: int):
+    """1-D ``("shard",)`` mesh for the serving tier's parameter
+    partition: sized to ``min(n_shards, n_devices)`` so a host with fewer
+    devices than shards still gets a valid mesh (shards wrap around it —
+    see ``shard_placement``). A 256-chip pod serves 256 true shards; the
+    CPU test host serves them all from one device."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n = len(jax.devices())
+    return make_mesh((min(int(n_shards), n),), ("shard",))
+
+
+def shard_placement(n_shards: int, mesh=None) -> list:
+    """Device owning each of ``n_shards`` logical shards: round-robin
+    over the mesh's ``shard`` axis (or all host devices when ``mesh`` is
+    None). More shards than devices is fine — a device then owns several
+    shards, the degenerate single-host case being all of them."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if mesh is not None:
+        devs = list(mesh.devices.reshape(-1))
+    else:
+        devs = list(jax.devices())
+    return [devs[i % len(devs)] for i in range(int(n_shards))]

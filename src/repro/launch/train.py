@@ -62,6 +62,7 @@ class IslandConfig:
     train_slots: int = 8             # slots one local epoch occupies
     compress_ratio: float = 0.0      # 0 = off; else top-k ratio w/ EF
     aggregation: str = "replace"
+    n_shards: int = 0                # >0: sharded serving-tier server
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50             # slots
     eval_every: int = 50
@@ -108,8 +109,16 @@ def run(cfg_model, icfg: IslandConfig, *, log=print):
     mesh = make_host_mesh()
     model = build_model(cfg_model)
     params = model.init(jax.random.PRNGKey(icfg.seed))
-    server = AsyncParameterServer(params, eta=icfg.eta, beta=icfg.beta,
-                                  aggregation=icfg.aggregation)
+    if icfg.n_shards > 0:
+        # serving-tier store: params partitioned over the shard mesh,
+        # pushes applied shard-local (same pull/push protocol)
+        from repro.serve import ShardedAsyncParameterServer
+        server = ShardedAsyncParameterServer(
+            params, eta=icfg.eta, beta=icfg.beta,
+            aggregation=icfg.aggregation, n_shards=icfg.n_shards)
+    else:
+        server = AsyncParameterServer(params, eta=icfg.eta, beta=icfg.beta,
+                                      aggregation=icfg.aggregation)
     sched = OnlineScheduler(icfg.V, icfg.L_b, icfg.eta, icfg.beta,
                             icfg.epsilon, icfg.slot_seconds)
     islands = [Island(i, cfg_model, icfg, mesh)
@@ -274,6 +283,8 @@ def main():
     ap.add_argument("--compress", type=float, default=0.0)
     ap.add_argument("--aggregation", default="replace",
                     choices=["replace", "fedasync_poly", "gap_aware"])
+    ap.add_argument("--shards", type=int, default=0,
+                    help=">0: serve from the sharded parameter store")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -282,6 +293,7 @@ def main():
                         local_steps=args.steps_per_epoch,
                         compress_ratio=args.compress,
                         aggregation=args.aggregation,
+                        n_shards=args.shards,
                         ckpt_dir=args.ckpt_dir)
     t0 = time.time()
     out = run(cfg, icfg)

@@ -6,6 +6,8 @@ traffic — the analogue of the paper's 2.5 MB LeNet model push over 4G.
 """
 from __future__ import annotations
 
+import math
+from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -18,25 +20,58 @@ class TopK(NamedTuple):
     shape: tuple
 
 
-def topk_compress(x: jnp.ndarray, k: int) -> TopK:
-    flat = x.reshape(-1).astype(jnp.float32)
+@partial(jax.jit, static_argnums=(1,))
+def _topk_select(flat: jnp.ndarray, k: int):
     _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    return TopK(flat[idx], idx.astype(jnp.int32), x.shape)
+    idx = idx.astype(jnp.int32)
+    return flat[idx], idx
+
+
+@jax.jit
+def _identity_select(flat: jnp.ndarray):
+    return flat, jnp.arange(flat.shape[0], dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _scatter(values: jnp.ndarray, indices: jnp.ndarray, size: int):
+    return jnp.zeros(size, jnp.float32).at[indices].set(values)
+
+
+def topk_compress(x: jnp.ndarray, k: int) -> TopK:
+    # host-side flat size (math.prod, never jnp): the selection cores are
+    # jitted per (shape, k) and the wrapper must not touch device values
+    size = math.prod(x.shape) if x.shape else 1
+    flat = x.reshape(-1).astype(jnp.float32)
+    if size == 0:       # empty tensor (e.g. a zero-size shard slice)
+        return TopK(flat, jnp.zeros(0, jnp.int32), x.shape)
+    k = max(1, min(int(k), size))
+    if k == size:       # dense: every entry survives, skip the top_k sort
+        values, idx = _identity_select(flat)
+    else:
+        values, idx = _topk_select(flat, k)
+    return TopK(values, idx, x.shape)
 
 
 def topk_decompress(t: TopK) -> jnp.ndarray:
-    flat = jnp.zeros(int(jnp.prod(jnp.array(t.shape))), jnp.float32)
-    flat = flat.at[t.indices].set(t.values)
-    return flat.reshape(t.shape)
+    # math.prod on the host: jnp.prod here forced a device sync (and a
+    # tiny compile) per decompress
+    size = math.prod(t.shape) if t.shape else 1
+    return _scatter(t.values, t.indices, size).reshape(t.shape)
 
 
-def int8_quantize(x: jnp.ndarray):
+@jax.jit
+def _int8_quantize(x: jnp.ndarray):
     scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
+def int8_quantize(x: jnp.ndarray):
+    return _int8_quantize(x)
+
+
+@jax.jit
 def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 

@@ -1,0 +1,121 @@
+"""Parameter partitioning for the serving tier.
+
+The sharded server stores the global model as ONE flat f32 vector split
+into ``n_shards`` contiguous, near-equal slices — the classic parameter-
+server layout (each shard worker owns a key range). ``ShardSpec`` is the
+bijection between that layout and the model's pytree: it remembers the
+treedef, per-leaf shapes/dtypes, and the shard boundaries, so
+``flatten``/``unflatten`` round-trip exactly and ``split``/``join`` move
+between the flat vector and the per-shard slices.
+
+Placement comes from ``launch/mesh.py``: ``shard_placement`` maps each
+logical shard onto a device of a 1-D ``("shard",)`` mesh (round-robin
+when there are more shards than devices), so shard-local applies run on
+the owning device. On the CPU test host that is one device owning every
+shard; on a pod it is the real partition.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_serving_mesh, shard_placement
+
+__all__ = ["ShardSpec"]
+
+
+class ShardSpec:
+    """Static description of one model's shard partition.
+
+    ``boundaries[i] : boundaries[i+1]`` is shard ``i``'s slice of the
+    flat vector; the last shard absorbs the remainder, and shards may be
+    empty when ``n_shards`` exceeds the parameter count (valid, applied
+    as zero-size ops).
+    """
+
+    def __init__(self, params: Any, n_shards: int, *, mesh=None,
+                 place: bool = True):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        leaves, self.treedef = jax.tree.flatten(params)
+        if not leaves:
+            raise ValueError("cannot shard an empty parameter pytree")
+        self.shapes = [tuple(l.shape) for l in leaves]
+        self.dtypes = [jnp.asarray(l).dtype for l in leaves]
+        self.sizes = [math.prod(s) if s else 1 for s in self.shapes]
+        self.total = sum(self.sizes)
+        self.n_shards = int(n_shards)
+        # near-equal contiguous split (np.array_split semantics)
+        base, extra = divmod(self.total, self.n_shards)
+        bounds = [0]
+        for i in range(self.n_shards):
+            bounds.append(bounds[-1] + base + (1 if i < extra else 0))
+        self.boundaries = tuple(bounds)
+        self.mesh = mesh if mesh is not None else (
+            make_serving_mesh(self.n_shards) if place else None)
+        self.devices: Optional[list] = (
+            shard_placement(self.n_shards, self.mesh) if place else None)
+
+    # ------------------------------------------------------------ pytree <-> flat
+    def flatten(self, params: Any) -> jnp.ndarray:
+        """Pytree -> one flat f32 vector (serving-tier wire layout)."""
+        leaves = jax.tree.leaves(params)
+        if len(leaves) != len(self.shapes):
+            raise ValueError(
+                f"pytree has {len(leaves)} leaves, spec built for "
+                f"{len(self.shapes)}")
+        return jnp.concatenate(
+            [jnp.asarray(l).reshape(-1).astype(jnp.float32)
+             for l in leaves])
+
+    def unflatten(self, flat: jnp.ndarray) -> Any:
+        """Flat f32 vector -> pytree with the original shapes/dtypes."""
+        if flat.shape != (self.total,):
+            raise ValueError(
+                f"flat vector has shape {flat.shape}, expected "
+                f"({self.total},)")
+        leaves, off = [], 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # ------------------------------------------------------------ flat <-> shards
+    def shard_slice(self, i: int) -> slice:
+        return slice(self.boundaries[i], self.boundaries[i + 1])
+
+    def shard_size(self, i: int) -> int:
+        return self.boundaries[i + 1] - self.boundaries[i]
+
+    def split(self, flat: jnp.ndarray) -> List[jnp.ndarray]:
+        """Flat vector -> per-shard slices, device_put to each shard's
+        owning device when placement is enabled."""
+        out = []
+        for i in range(self.n_shards):
+            piece = flat[self.shard_slice(i)]
+            if self.devices is not None:
+                piece = jax.device_put(piece, self.devices[i])
+            out.append(piece)
+        return out
+
+    def join(self, slices: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """Per-shard slices -> flat vector. Slices live on their owning
+        devices, so this is a gather: device_get to the host, then one
+        concatenate (the reader-side reassembly cost)."""
+        if len(slices) != self.n_shards:
+            raise ValueError(
+                f"got {len(slices)} slices for {self.n_shards} shards")
+        return jnp.asarray(np.concatenate(
+            [np.asarray(jax.device_get(s)) for s in slices]))
+
+    # ------------------------------------------------------------ convenience
+    def zeros_shards(self) -> List[jnp.ndarray]:
+        return self.split(jnp.zeros(self.total, jnp.float32))
+
+    def __repr__(self):
+        return (f"ShardSpec(total={self.total}, n_shards={self.n_shards}, "
+                f"boundaries={self.boundaries})")

@@ -142,6 +142,61 @@ class TestFleetMonitor:
         with pytest.raises(ValueError, match="timeout_slots"):
             FleetMonitor(timeout_slots=0)
 
+    def test_eviction_reregistration_against_live_server_stream(self):
+        """The monitor watching a LIVE ``AsyncParameterServer`` push
+        stream (not a replayed log): three clients push at their own
+        cadences, one goes dark mid-run and is evicted, then its next
+        real push re-registers it. The uneven cadences drive the
+        SlotClock seek path — slots jump forward, never one at a time."""
+        import jax.numpy as jnp
+
+        from repro.core.server import AsyncParameterServer
+
+        server = AsyncParameterServer({"w": jnp.zeros(8)}, eta=0.05,
+                                      beta=0.9)
+        mon = FleetMonitor(timeout_slots=6)
+        pulled = {}
+
+        def train_push(uid, slot):
+            params, _ = server.pull(uid)
+            r = server.push(uid, {"w": params["w"] + 0.1})
+            mon.observe_push(slot, uid)
+            return r
+
+        # cadences: u0 every 2 slots, u1 every 3, u2 pushes twice then dies
+        for slot in range(0, 30, 1):
+            if slot % 2 == 0:
+                train_push(0, slot)
+            if slot % 3 == 0:
+                train_push(1, slot)
+            if slot in (0, 3):
+                train_push(2, slot)
+            mon.sweep(slot)
+        # u2's last push was slot 3; timeout 6 -> evicted at slot 10
+        assert (10, 2) in mon.evictions
+        assert mon.active == {0, 1}
+        # recovery: u2 pushes again through the SAME live server; the
+        # seek jumps the clock from 29 to 35 in one step
+        train_push(2, 35)
+        assert 2 in mon.active
+        # the jump also aged out u0/u1 (quiet since slots 28/27): the
+        # sweep at the new clock position evicts exactly them
+        assert mon.sweep(35) == {0, 1}
+        assert mon.active == {2}
+        # lag bookkeeping survived the eviction: u2's pull/push round
+        # trips still produce sane lags on the live server
+        params, v = server.pull(2)
+        r = server.push(2, {"w": params["w"] + 0.1})
+        assert r.lag == 0 and r.version == server.lag_tracker.version
+
+    def test_seek_rejects_out_of_order_live_stream(self):
+        """Live observation is forward-only: a push reported for an
+        older slot than the clock has reached is a caller bug."""
+        mon = FleetMonitor(timeout_slots=4)
+        mon.observe_push(9, 1)
+        with pytest.raises(ValueError, match="rewind"):
+            mon.observe_push(3, 1)
+
     def test_replay_matches_live_observation(self):
         """replay() over a push-log list equals the same events fed
         live through observe_push/sweep."""

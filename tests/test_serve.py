@@ -1,0 +1,437 @@
+"""Serving tier: sharded async parameter server + push ingestion.
+
+Pins the subsystem's consistency contract:
+
+- the sharded server is a semantic twin of ``core/server.
+  AsyncParameterServer`` (same lags, weights, params, gap bookkeeping);
+- a push commits atomically — no reader ever observes a partially
+  applied push, single-threaded or under a concurrent reader;
+- island death mid-push loses nothing: the in-flight shards are parked
+  at eviction, re-queued at re-registration, and the push is applied
+  exactly once;
+- compressed pushes round-trip within codec tolerance, and the top-k
+  delta stream converges to the uncompressed fixed point.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.server import AsyncParameterServer
+from repro.fault.monitor import FleetMonitor
+from repro.serve import (IngestPipeline, PushQueue, ServeClient, ShardPacket,
+                         ShardSpec, ShardedAsyncParameterServer,
+                         resolve_codec)
+
+
+def tiny_params(n=13, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(0, 1, (2, 5)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(0, 1, n - 10).astype(np.float32))}
+
+
+def flat_of(server):
+    shards, version = server.snapshot_flat()
+    return np.asarray(server.spec.join(shards)), version
+
+
+# ---------------------------------------------------------------------------
+# ShardSpec
+# ---------------------------------------------------------------------------
+class TestShardSpec:
+    def test_flatten_unflatten_roundtrip_mixed_dtypes(self):
+        params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                  "b": jnp.asarray([1, 2, 3], jnp.int32),
+                  "c": jnp.float32(7.0)}
+        spec = ShardSpec(params, 3)
+        out = spec.unflatten(spec.flatten(params))
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(params[k]))
+            assert out[k].dtype == params[k].dtype
+
+    def test_boundaries_cover_total_near_equal(self):
+        spec = ShardSpec({"w": jnp.zeros(10)}, 3)
+        assert spec.boundaries == (0, 4, 7, 10)
+        assert sum(spec.shard_size(i) for i in range(3)) == spec.total
+
+    def test_split_join_roundtrip(self):
+        spec = ShardSpec({"w": jnp.zeros(11)}, 4)
+        flat = jnp.arange(11, dtype=jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(spec.join(spec.split(flat))), np.asarray(flat))
+
+    def test_more_shards_than_params_gives_empty_shards(self):
+        spec = ShardSpec({"w": jnp.zeros(2)}, 5)
+        sizes = [spec.shard_size(i) for i in range(5)]
+        assert sum(sizes) == 2 and 0 in sizes
+        flat = jnp.asarray([3.0, 4.0])
+        np.testing.assert_array_equal(
+            np.asarray(spec.join(spec.split(flat))), [3.0, 4.0])
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError, match="n_shards"):
+            ShardSpec({"w": jnp.zeros(4)}, 0)
+        spec = ShardSpec({"w": jnp.zeros(4)}, 2)
+        with pytest.raises(ValueError, match="shape"):
+            spec.unflatten(jnp.zeros(3))
+        with pytest.raises(ValueError, match="slices"):
+            spec.join([jnp.zeros(4)])
+
+
+# ---------------------------------------------------------------------------
+# ShardedAsyncParameterServer vs the core server
+# ---------------------------------------------------------------------------
+class TestShardedServerParity:
+    @pytest.mark.parametrize("aggregation",
+                             ["replace", "fedasync_poly", "gap_aware"])
+    @pytest.mark.parametrize("n_shards", [1, 4])
+    def test_matches_core_server_stream(self, aggregation, n_shards):
+        """Same interleaved pull/push stream -> same lags, same weights,
+        same params, same momentum-norm bookkeeping (up to the float
+        reduction-order difference of the sharded norm)."""
+        params = tiny_params()
+        core = AsyncParameterServer(params, eta=0.05, beta=0.9,
+                                    aggregation=aggregation)
+        shd = ShardedAsyncParameterServer(params, eta=0.05, beta=0.9,
+                                          aggregation=aggregation,
+                                          n_shards=n_shards)
+        rng = np.random.default_rng(1)
+        pulled = {}
+        for step in range(12):
+            cid = step % 3
+            if cid not in pulled:
+                p_c, vc = core.pull(cid)
+                p_s, vs = shd.pull(cid)
+                assert vc == vs
+                pulled[cid] = jax.tree.map(
+                    lambda x: x + jnp.asarray(
+                        rng.normal(0, 0.1, x.shape).astype(np.float32)),
+                    p_c)
+            if step % 2 == 1:       # stale pushes: half the pulls linger
+                new = pulled.pop(cid)
+                rc = core.push(cid, new)
+                rs = shd.push(cid, new)
+                assert rc.lag == rs.lag
+                assert rc.version == rs.version
+                assert rc.applied_weight == pytest.approx(
+                    rs.applied_weight, rel=1e-5, abs=1e-7)
+        shd.assert_consistent()
+        for a, b in zip(jax.tree.leaves(core.params),
+                        jax.tree.leaves(shd.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        assert shd.v_norm == pytest.approx(core.v_norm, rel=1e-4, abs=1e-7)
+
+    def test_lag_estimate_counts_concurrent_tasks(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=2)
+        shd.pull(0)
+        shd.pull(1)
+        assert shd.lag_estimate(0) == 1      # the other in-flight task
+        assert shd.lag_estimate(9) == 2
+
+    def test_params_setter_resplits_and_republishes(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=3)
+        new = jax.tree.map(lambda x: x * 0 + 5.0, shd.params)
+        shd.params = new
+        flat, version = flat_of(shd)
+        assert version == 0                  # restore does not bump
+        np.testing.assert_array_equal(flat, 5.0)
+        shd.assert_consistent()
+
+    def test_history_ring_serves_old_bases_then_ages_out(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=2, history_depth=3)
+        snaps = {0: flat_of(shd)[0]}
+        for k in range(5):
+            p, _ = shd.pull(0)
+            shd.push(0, jax.tree.map(lambda x: x + 1.0, p))
+            snaps[k + 1] = flat_of(shd)[0]
+        # ring keeps the last 3 versions
+        for v in (3, 4, 5):
+            got = np.concatenate([
+                np.asarray(shd.base_shard(v, i)) for i in range(2)])
+            np.testing.assert_array_equal(got, snaps[v])
+        assert shd.base_shard(0, 0) is None
+        assert shd.ring_misses == 1
+
+    def test_rejects_wrong_slice_count_and_bad_history_depth(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=2)
+        with pytest.raises(ValueError, match="slices"):
+            shd.push_flat(0, [jnp.zeros(13)])
+        with pytest.raises(ValueError, match="history_depth"):
+            ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                        history_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Atomic publish: partial application is never observable
+# ---------------------------------------------------------------------------
+class TestAtomicPublish:
+    def test_reader_never_sees_partial_push_concurrently(self):
+        """A reader thread hammering snapshots while uniform-constant
+        pushes stream in must only ever see uniform vectors whose value
+        equals the paired version — a torn (partially applied) push
+        would surface as a mixed vector or a version/value mismatch."""
+        params = {"w": jnp.zeros(64, jnp.float32)}
+        shd = ShardedAsyncParameterServer(params, eta=0.05, beta=0.9,
+                                          n_shards=4)
+        errors = []
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                flat, version = flat_of(shd)
+                if not np.all(flat == flat[0]):
+                    errors.append(("torn", flat.copy(), version))
+                    return
+                if flat[0] != float(version):
+                    errors.append(("mismatch", float(flat[0]), version))
+                    return
+
+        t = threading.Thread(target=reader)
+        t.start()
+        try:
+            for k in range(50):
+                shd.pull(0)
+                shd.push(0, {"w": jnp.full(64, float(k + 1), jnp.float32)})
+        finally:
+            stop.set()
+            t.join()
+        assert errors == []
+        shd.assert_consistent()
+
+    def test_staged_partial_push_is_invisible(self):
+        """Single-threaded twin: with only 2 of 3 shard packets staged,
+        readers still see the pre-push snapshot and version."""
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=3)
+        pipe = IngestPipeline(shd)
+        client = ServeClient(0, pipe)
+        before, v0 = flat_of(shd)
+        client.pull()
+        client.push(jnp.asarray(before) + 1.0, slot=0, shards=[0, 1])
+        pipe.drain()
+        assert pipe.pending_pushes == 1
+        after, v1 = flat_of(shd)
+        assert v1 == v0
+        np.testing.assert_array_equal(after, before)
+
+
+# ---------------------------------------------------------------------------
+# Ingestion pipeline
+# ---------------------------------------------------------------------------
+class TestIngestPipeline:
+    def test_happy_path_commits_and_records_latency(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=3)
+        pipe = IngestPipeline(shd)
+        clients = [ServeClient(i, pipe) for i in range(4)]
+        for t in range(3):
+            for c in clients:
+                base, _ = c.pull()
+                c.push(base + 0.5, slot=t)
+            pipe.drain()
+        assert pipe.stats.applied == 12
+        assert shd.version == 12
+        assert len(pipe.latencies) == 12
+        assert all(l >= 0 for l in pipe.latencies)
+        shd.assert_consistent()
+
+    def test_backpressure_rejects_when_full(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=4)
+        pipe = IngestPipeline(shd, capacity=6)     # room for 1.5 pushes
+        c0, c1 = ServeClient(0, pipe), ServeClient(1, pipe)
+        base0, _ = c0.pull()
+        base1, _ = c1.pull()
+        _, acc0 = c0.push(base0 + 1, slot=0)
+        _, acc1 = c1.push(base1 + 1, slot=0)
+        assert acc0 == 4 and acc1 == 2             # queue filled mid-push
+        assert pipe.stats.rejected == 2
+        pipe.drain()
+        assert pipe.stats.applied == 1             # only the complete push
+        assert pipe.pending_pushes == 1            # partial stays staged
+        # retry of the rejected shards completes the second push
+        c1.resume_push(0, base1 + 1, slot=1)
+        pipe.drain()
+        assert pipe.stats.applied == 2
+        assert pipe.pending_pushes == 0
+
+    def test_rejects_bad_capacity(self):
+        with pytest.raises(ValueError, match="capacity"):
+            PushQueue(0)
+
+    def test_unknown_codec_rejected(self):
+        with pytest.raises(ValueError, match="codec"):
+            resolve_codec("gzip")
+
+    def test_int8_push_roundtrip_fidelity(self):
+        """int8 wire quantization: per-shard error bounded by half the
+        shard's quantization scale."""
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=3)
+        pipe = IngestPipeline(shd, codec="int8")
+        c = ServeClient(0, pipe)
+        base, _ = c.pull()
+        target = np.asarray(base) + np.linspace(-2, 2, 13, dtype=np.float32)
+        c.push(jnp.asarray(target), slot=0)
+        pipe.drain()
+        got, version = flat_of(shd)
+        assert version == 1
+        for i in range(3):
+            sl = shd.spec.shard_slice(i)
+            scale = max(np.abs(target[sl]).max() / 127.0, 1e-12)
+            assert np.abs(got[sl] - target[sl]).max() <= scale * 0.5 + 1e-6
+
+    def test_topk_delta_stream_converges_to_uncompressed_fixed_point(self):
+        """The acceptance property at the pipeline level: a contraction
+        push stream through the top-k delta codec lands on the same
+        fixed point as the uncompressed stream."""
+        params = {"w": jnp.zeros(48, jnp.float32)}
+        target = jnp.asarray(np.random.default_rng(3).normal(0, 1, 48)
+                             .astype(np.float32))
+
+        def run(codec, steps=300):
+            shd = ShardedAsyncParameterServer(params, eta=0.05, beta=0.9,
+                                              n_shards=4)
+            pipe = IngestPipeline(shd, codec=codec)
+            c = ServeClient(0, pipe)
+            for t in range(steps):
+                base, _ = c.pull()
+                c.push(base + 0.05 * (target - base), slot=t)
+                pipe.drain()
+            return flat_of(shd)[0]
+
+        ref = run(None)
+        np.testing.assert_allclose(ref, np.asarray(target), atol=1e-3)
+        compressed = run(resolve_codec("topk"))
+        np.testing.assert_allclose(compressed, np.asarray(target), atol=1e-2)
+
+    def test_topk_ring_miss_falls_back_and_counts(self):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=2, history_depth=1)
+        pipe = IngestPipeline(shd, codec="topk")
+        stale, fresh = ServeClient(0, pipe), ServeClient(1, pipe)
+        stale.pull()                     # base = version 0
+        for t in range(3):               # ring depth 1: version 0 ages out
+            base, _ = fresh.pull()
+            fresh.push(base + 0.1, slot=t)
+            pipe.drain()
+        stale.push(jnp.asarray(flat_of(shd)[0]) + 0.1, slot=3)
+        pipe.drain()
+        assert pipe.stats.ring_misses == 2      # one per shard packet
+        assert pipe.stats.applied == 4
+
+
+class TestIslandDeathMidPush:
+    def make(self, timeout=3, n_shards=3):
+        shd = ShardedAsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                          n_shards=n_shards)
+        pipe = IngestPipeline(shd, monitor=FleetMonitor(timeout_slots=timeout))
+        return shd, pipe
+
+    def test_push_survives_death_applied_exactly_once(self):
+        """The acceptance scenario: island dies after 2 of 3 shards,
+        gets evicted, recovers, re-sends the missing shard — the push
+        commits exactly once and the final params are exact."""
+        shd, pipe = self.make()
+        c = ServeClient(7, pipe)
+        base, _ = c.pull()
+        target = jnp.asarray(base) + 1.0
+        pid, _ = c.push(target, slot=0, shards=[0, 1])     # dies here
+        pipe.drain()
+        dead = pipe.sweep(10)
+        assert dead == {7}
+        assert pipe.stats.evicted == 1
+        assert pipe.parked_clients == {7}
+        assert 7 not in pipe.monitor.active
+        before, v = flat_of(shd)
+        assert v == 0                                       # nothing applied
+        c.resume_push(pid, target, slot=11)                 # recovery
+        pipe.drain()
+        assert pipe.stats.reregistered == 1
+        assert 7 in pipe.monitor.active                     # re-registered
+        got, v = flat_of(shd)
+        assert v == 1                                       # exactly once
+        assert pipe.stats.applied == 1
+        np.testing.assert_allclose(got, np.asarray(target), rtol=1e-6)
+        assert pipe.parked_clients == set()
+        shd.assert_consistent()
+
+    def test_queued_inflight_shards_are_requeued_not_lost(self):
+        """Death with packets still IN THE QUEUE: eviction parks them,
+        re-registration re-queues them, and they count toward the same
+        single apply."""
+        shd, pipe = self.make()
+        c = ServeClient(3, pipe)
+        base, _ = c.pull()
+        target = jnp.asarray(base) + 2.0
+        pid, acc = c.push(target, slot=0)       # all 3 packets queued
+        assert acc == 3
+        pipe.step(1)                            # only shard 0 processed
+        dead = pipe.sweep(8)                    # dies with 2 queued
+        assert dead == {3}
+        assert pipe.stats.parked_packets == 2
+        assert len(pipe.queue) == 0
+        assert flat_of(shd)[1] == 0
+        # recovery: one fresh heartbeat packet re-queues the parked ones
+        c.resume_push(pid, target, slot=9)      # nothing missing -> no-op
+        assert pipe.parked_clients == {3}       # still parked (no packet)
+        base2, _ = c.pull()
+        pid2, _ = c.push(jnp.asarray(target) + 1.0, slot=9)
+        pipe.drain()
+        assert pipe.stats.requeued_packets == 2
+        assert pipe.stats.applied == 2          # both pushes landed
+        assert flat_of(shd)[1] == 2
+        shd.assert_consistent()
+
+    def test_full_resend_after_commit_is_deduped(self):
+        """A client that re-sends a whole already-committed push (it
+        never saw the ack) is dropped as duplicates — applied once."""
+        shd, pipe = self.make()
+        c = ServeClient(5, pipe)
+        base, _ = c.pull()
+        target = jnp.asarray(base) + 1.0
+        pid, _ = c.push(target, slot=0)
+        pipe.drain()
+        assert pipe.stats.applied == 1
+        # paranoid client re-sends the same push_id wholesale
+        c._sent[pid].clear()
+        c.resume_push(pid, target, slot=1)
+        pipe.drain()
+        assert pipe.stats.applied == 1
+        assert pipe.stats.duplicates == 3       # one per shard packet
+        assert flat_of(shd)[1] == 1
+
+    def test_monitor_cadence_counts_pushes_not_packets(self):
+        """Shard packets are liveness-only beats; only committed pushes
+        feed the straggler EWMA — a 4-shard push is ONE cadence sample."""
+        shd, pipe = self.make(n_shards=3)
+        c = ServeClient(1, pipe)
+        for t in range(3):
+            base, _ = c.pull()
+            c.push(jnp.asarray(base) + 0.1, slot=t)
+            pipe.drain()
+        assert pipe.monitor.straggler.workers[1].updates == 3
+
+
+# ---------------------------------------------------------------------------
+# launch/train.py integration: the island driver on the sharded store
+# ---------------------------------------------------------------------------
+class TestTrainDriverSharded:
+    def test_island_driver_runs_on_sharded_server(self):
+        from repro.configs import get_smoke_config
+        from repro.launch.train import IslandConfig, run
+
+        icfg = IslandConfig(n_islands=2, slots=100, local_steps=1, batch=4,
+                            seq=32, eval_every=100, app_arrival_p=0.05,
+                            n_shards=2, seed=5)
+        out = run(get_smoke_config("qwen3-0.6b"), icfg, log=lambda *a: None)
+        assert np.isfinite(out["final_loss"])
+        assert out["updates"] >= 0
