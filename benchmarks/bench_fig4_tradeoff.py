@@ -1,52 +1,62 @@
 """Fig. 4: V sweep of energy / Q / H plus the L_b energy-staleness
-trade-off, against the immediate / offline / sync baselines (Scenario API)."""
+trade-off, against the immediate / offline / sync baselines.
+
+Built on the batched sweep path (``core.scenario.run_sweep``): the
+online V-grid and L_b-grid share static shapes, so BOTH run under one
+vmapped jitted program — a sweep point costs a stacked row, not a
+compile. The baselines bucket separately and fall back per point
+(offline's host knapsack planning is vmap-ineligible). Absent knobs are
+``None`` (not ``""``) so every column stays singly-typed for JSON/CSV
+consumers; rows also persist to ``BENCH_fig4_tradeoff.json``."""
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional
 
-from repro.core import Scenario, run_experiment
+from repro.core import Scenario, run_sweep
+
+JSON_PATH = "BENCH_fig4_tradeoff.json"
+
+BASELINES = ("immediate", "offline", "sync")
 
 
-def run(fast: bool = True):
+def _row(policy, V, L_b, r):
+    return {"bench": "fig4_tradeoff", "policy": policy, "V": V,
+            "L_b": L_b, "energy_kj": round(r.energy_j / 1e3, 2),
+            "mean_Q": round(r.mean_Q, 2), "mean_H": round(r.mean_H, 2),
+            "updates": r.updates, "corun_frac": round(r.corun_fraction, 3)}
+
+
+def run(fast: bool = True, json_path: Optional[str] = JSON_PATH):
     horizon = 3600 if fast else 10800
-    n_users = 25
-    rows = []
-
-    # trace mode -> the vectorized SoA engine replays the loop engine
-    # exactly (tests/test_sim_engines.py) at a fraction of the wall-clock
-    base = dict(horizon_s=horizon, n_users=n_users, seed=0,
-                engine="vectorized")
-    for pol in ("immediate", "offline", "sync"):
-        r = run_experiment(Scenario(policy=pol, **base))
-        rows.append({"bench": "fig4_tradeoff", "policy": pol, "V": "",
-                     "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
-                     "mean_Q": round(r.mean_Q, 2),
-                     "mean_H": round(r.mean_H, 2),
-                     "updates": r.updates,
-                     "corun_frac": round(r.corun_fraction, 3)})
+    base = dict(horizon_s=horizon, n_users=25, seed=0)
 
     vs = [1e2, 1e3, 4e3, 1e4, 1e5] if fast else \
         [1e2, 3e2, 1e3, 4e3, 1e4, 3e4, 1e5, 1e6]
-    for V in vs:
-        r = run_experiment(Scenario(policy="online", V=V, **base))
-        rows.append({"bench": "fig4_tradeoff", "policy": "online", "V": V,
-                     "L_b": 1000.0, "energy_kj": round(r.energy_j / 1e3, 2),
-                     "mean_Q": round(r.mean_Q, 2),
-                     "mean_H": round(r.mean_H, 2),
-                     "updates": r.updates,
-                     "corun_frac": round(r.corun_fraction, 3)})
-
     # Fig. 4d: staleness bound sweep
-    for L_b in ([100.0, 1000.0] if fast else [50.0, 100.0, 500.0, 1000.0]):
-        r = run_experiment(Scenario(policy="online", V=4000.0, L_b=L_b,
-                                    **base))
-        rows.append({"bench": "fig4_tradeoff", "policy": "online_Lb",
-                     "V": 4000.0, "L_b": L_b,
-                     "energy_kj": round(r.energy_j / 1e3, 2),
-                     "mean_Q": round(r.mean_Q, 2),
-                     "mean_H": round(r.mean_H, 2),
-                     "updates": r.updates,
-                     "corun_frac": round(r.corun_fraction, 3)})
+    lbs = [100.0, 1000.0] if fast else [50.0, 100.0, 500.0, 1000.0]
+
+    # ONE run_sweep call for the whole figure: the online V- and
+    # L_b-grids batch into a single compiled program, the baselines run
+    # per point on whatever engine resolves for them
+    scenarios = (
+        [Scenario(policy=pol, **base) for pol in BASELINES]
+        + Scenario(policy="online", **base).grid(V=vs)
+        + Scenario(policy="online", V=4000.0, **base).grid(L_b=lbs))
+    results = run_sweep(scenarios)
+
+    rows = []
+    for pol, r in zip(BASELINES, results[: len(BASELINES)]):
+        rows.append(_row(pol, None, 1000.0, r))
+    off = len(BASELINES)
+    for V, r in zip(vs, results[off: off + len(vs)]):
+        rows.append(_row("online", V, 1000.0, r))
+    for L_b, r in zip(lbs, results[off + len(vs):]):
+        rows.append(_row("online_Lb", 4000.0, L_b, r))
+
+    if json_path:
+        from benchmarks.common import write_json
+        write_json(rows, json_path,
+                   meta={"bench": "fig4_tradeoff", "fast": fast})
     return rows
 
 

@@ -15,7 +15,15 @@ acceptance floor is 10x). Two sweeps:
 * device-dynamics sweep: vectorized and jax engines at n_users=400 with
   the Markov churn layer (core/dynamics.py) on vs off — prices the
   in-scan availability/battery/network transition (the ``dynamics``
-  column makes the overhead attributable across PRs).
+  column makes the overhead attributable across PRs);
+* sweep-throughput: a SWEEP_POINTS-point V-grid at n_users=25 run three
+  ways — the batched path (``core.scenario.run_sweep``: all points
+  vmapped under ONE compiled program), the per-point loop a sweep ran as
+  before run_sweep existed (``engine="auto"`` resolves to vectorized),
+  and a warmed per-point jax loop. ``sweep_speedup`` on the batched row
+  is scenarios/sec vs the per-point loop (the status quo); the
+  per-point-jax row's own ``scenarios_per_s`` prices the
+  warm-jax-vs-warm-jax ratio (compile measured separately, as usual).
 
 The loop engine is skipped at cohort sizes where it would dominate the
 suite's wall-clock; the jax engine reports compile and steady-state times
@@ -36,6 +44,7 @@ from repro.core.simulator import FederatedSim, SimConfig
 SIZES = (25, 400, 2500, 10000)
 POLICY_SWEEP_N = 400
 FLEET_N = 100_000
+SWEEP_POINTS = 16
 JSON_PATH = "BENCH_sim_scale.json"
 
 
@@ -54,7 +63,10 @@ def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
 
 
 def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
-         push_log=False, dynamics="none"):
+         push_log=False, dynamics="none", scenarios=None,
+         scenarios_per_s=None, sweep_speedup=None):
+    # absent knobs are None, never "" — every column stays singly-typed
+    # for JSON/CSV consumers
     return {
         "bench": "sim_scale", "sweep": sweep, "policy": policy,
         "engine": engine, "n_users": n, "horizon_s": horizon,
@@ -63,7 +75,10 @@ def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
         "slots_per_s": round(horizon / wall, 1),
         "user_slots_per_s": round(n * horizon / wall, 0),
         "compile_s": compile_s,
-        "speedup_vs_loop": round(loop_wall / wall, 1) if loop_wall else "",
+        "speedup_vs_loop": round(loop_wall / wall, 1) if loop_wall else None,
+        "scenarios": scenarios,
+        "scenarios_per_s": scenarios_per_s,
+        "sweep_speedup": sweep_speedup,
         "updates": r.updates,
         "n_push": len(r.push_log),
         "energy_kj": round(r.energy_j / 1e3, 2),
@@ -86,7 +101,7 @@ def run(fast: bool = True):
     rows = []
 
     def bench(sweep, policy, engine, n, loop_wall):
-        compile_s = ""
+        compile_s = None
         if engine == "jax":
             t_first, _ = _time_run(policy, engine, n, horizon)
             wall, r = _time_run(policy, engine, n, horizon)
@@ -146,12 +161,57 @@ def run(fast: bool = True):
                                     horizon, dynamics=dyn)
                 compile_s = round(t_first - wall, 2)
             else:
-                compile_s = ""
+                compile_s = None
                 wall, r = _time_run("online", engine, POLICY_SWEEP_N,
                                     horizon, dynamics=dyn)
             rows.append(_row("dynamics", "online", engine, POLICY_SWEEP_N,
                              horizon, wall, r, compile_s, None,
                              dynamics=label))
+
+    # --- sweep throughput: a V-grid batched under ONE program vs the
+    # --- per-point loop a sweep used to be (engine auto -> vectorized),
+    # --- plus a warmed per-point jax loop for attribution ----------------
+    from repro.core import Scenario, run_sweep
+    vgrid = [float(10 ** (2 + 4 * k / (SWEEP_POINTS - 1)))
+             for k in range(SWEEP_POINTS)]
+    grid = Scenario(policy="online", n_users=25, horizon_s=horizon,
+                    seed=0).grid(V=vgrid)
+    t0 = time.perf_counter()
+    run_sweep(grid)                      # cold: one compile for the grid
+    cold_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_b = run_sweep(grid)
+    wall_b = time.perf_counter() - t0
+
+    loop = Scenario(policy="online", n_users=25, horizon_s=horizon,
+                    seed=0).grid(V=vgrid)   # engine auto -> vectorized
+    t0 = time.perf_counter()
+    for sc in loop:
+        r_loop = sc.run()
+    wall_l = time.perf_counter() - t0
+
+    pp = Scenario(policy="online", n_users=25, horizon_s=horizon,
+                  seed=0, engine="jax").grid(V=vgrid)
+    t0 = time.perf_counter()
+    for sc in pp:                        # cold: V is traced — one compile
+        sc.run()
+    cold_p = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for sc in pp:
+        r_pp = sc.run()
+    wall_p = time.perf_counter() - t0
+
+    B = len(vgrid)
+    rows.append(_row("sweep", "online", "jax(batched)", 25, horizon,
+                     wall_b, res_b[0], round(cold_b - wall_b, 2), None,
+                     scenarios=B, scenarios_per_s=round(B / wall_b, 1),
+                     sweep_speedup=round(wall_l / wall_b, 1)))
+    rows.append(_row("sweep", "online", "vectorized(per-point)", 25,
+                     horizon, wall_l, r_loop, None, None,
+                     scenarios=B, scenarios_per_s=round(B / wall_l, 1)))
+    rows.append(_row("sweep", "online", "jax(per-point)", 25, horizon,
+                     wall_p, r_pp, round(cold_p - wall_p, 2), None,
+                     scenarios=B, scenarios_per_s=round(B / wall_p, 1)))
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,

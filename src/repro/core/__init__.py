@@ -32,7 +32,7 @@ from .policies import (EpsGreedyPolicy, GreedyThresholdPolicy,
 from .realml import (BatchedMLBackend, LeNetBackend, make_backend,
                      make_ml_hooks, register_ml_backend,
                      registered_ml_backends)
-from .scenario import Scenario, run_experiment
+from .scenario import Scenario, run_experiment, run_sweep
 from .server import AsyncParameterServer, SyncServer
 from .simulator import ENGINES, POLICIES, FederatedSim, SimConfig, SimResult
 from .staleness import (LagTracker, gradient_gap, momentum_scale,
@@ -62,7 +62,7 @@ __all__ = [
     "register_policy", "registered_policies", "resolve_policy",
     "BatchedMLBackend", "LeNetBackend", "make_backend", "make_ml_hooks",
     "register_ml_backend", "registered_ml_backends",
-    "Scenario", "run_experiment",
+    "Scenario", "run_experiment", "run_sweep",
     "AsyncParameterServer", "SyncServer",
     "ENGINES", "POLICIES", "FederatedSim", "SimConfig", "SimResult",
     "LagTracker", "gradient_gap", "momentum_scale", "predict_weights",

@@ -94,6 +94,12 @@ class Policy:
       ``SimConfig`` validates the flags against the actual hook methods at
       construction, so a mismatch fails fast with a clear message instead
       of erroring mid-run.
+    - ``supports_vmap``: whether ``scan_step`` may run under ``jax.vmap``
+      over a leading config axis (the batched sweep path,
+      ``core.scenario.run_sweep``). True for pure traced hooks; set False
+      for hooks with host side effects — under vmap ``lax.cond`` evaluates
+      both branches per config, so e.g. a ``pure_callback`` guarded by a
+      plan-slot cond would fire for every config at every slot.
     """
 
     name: str = ""
@@ -101,6 +107,7 @@ class Policy:
     uses_online_queue: bool = False
     supports_vectorized: bool = False
     supports_jax: bool = False
+    supports_vmap: bool = True
 
     # ------------------------------------------------------------ carry
     def init_carry(self, n: int, cfg):
@@ -509,6 +516,10 @@ class OfflinePolicy(Policy):
     name = "offline"
     supports_vectorized = True
     supports_jax = True
+    # host knapsack via pure_callback: under vmap the plan-slot cond
+    # runs both branches per config, consulting the host every slot for
+    # every config — keep this policy on the per-point scan path
+    supports_vmap = False
 
     def init_carry(self, n, cfg):
         return {"next_plan": 0.0}

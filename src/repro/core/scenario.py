@@ -94,6 +94,10 @@ class Scenario:
                              "pass ml='lenet' (or a backend instance)")
         self.ml = ml
         self.ml_kwargs = dict(ml_kwargs or {})
+        # raw arrivals argument, kept so grid() re-resolves it against
+        # each point's config (a swept app_arrival_p rebinds the default
+        # Bernoulli process; an explicit instance keeps its own rates)
+        self._arrivals_arg = arrivals
         self.policy = resolve_policy(self.config.policy)
         # one resolution rule shared with FederatedSim: None/"bernoulli"
         # mean the paper process at the configured app_arrival_p
@@ -134,6 +138,33 @@ class Scenario:
             ml_backend: Optional[BatchedMLBackend] = None) -> SimResult:
         return self.build(ml_hooks=ml_hooks, ml_backend=ml_backend).run()
 
+    def grid(self, **axes) -> "list[Scenario]":
+        """Cartesian product of ``SimConfig`` overrides as a scenario
+        list, e.g. ``base.grid(V=[1e2, 1e3, 1e4], L_b=[5.0, 10.0])`` —
+        six scenarios, the last-named axis varying fastest. Each point
+        keeps this scenario's arrivals/fleet/ml composition; a swept
+        ``app_arrival_p`` rebinds the default Bernoulli process per
+        point (an explicit arrivals instance keeps its own rates). Feed
+        the list to :func:`run_sweep` — points sharing static shapes run
+        batched under one compiled program."""
+        import itertools
+        names = list(axes)
+        vals = [list(axes[k]) for k in names]
+        out = []
+        for combo in itertools.product(*vals):
+            cfg = dataclasses.replace(self.config, **dict(zip(names, combo)))
+            out.append(Scenario(config=cfg, arrivals=self._arrivals_arg,
+                                fleet=self.fleet, name=self.name,
+                                ml=self.ml,
+                                ml_kwargs=self.ml_kwargs or None))
+        return out
+
+    def sweep(self, **axes) -> "list[SimResult]":
+        """``run_sweep(self.grid(**axes))`` — run the knob grid, batched
+        wherever points share one executable. Results align with
+        ``grid(**axes)`` order."""
+        return run_sweep(self.grid(**axes))
+
     def __repr__(self):
         arr = self.arrivals.name
         flt = self.fleet.name if self.fleet is not None else "paper"
@@ -144,6 +175,54 @@ class Scenario:
                 f"n_users={self.config.n_users}, "
                 f"horizon_s={self.config.horizon_s}, "
                 f"engine={self.config.engine!r}{ml})")
+
+
+def run_sweep(scenarios) -> "list[SimResult]":
+    """Run many ``Scenario``s, batching compatible ones under ONE
+    compiled program (the jax engine's vmapped sweep path).
+
+    Scenarios are bucketed by static shape — ``(n_users, horizon,
+    jax_chunk, policy/aggregation/dynamics cache keys, scan_statics,
+    push-log capacity)`` — so mixed grids work: each bucket of two or
+    more compatible points runs as one ``jax.vmap``-ped chunked scan
+    over stacked configs; singletons and jax/vmap-ineligible scenarios
+    (real-ML runs, the offline policy's host-callback planning, explicit
+    ``engine="loop"`` requests, custom components without jax support)
+    fall back to their own ``Scenario.run()``. Results come back in
+    input order, each identical to its per-point run (bit-for-bit on
+    discrete outputs; energies to float-sum reordering).
+
+    Everything per-config — V, L_b, policy ``scan_operands``, arrival
+    draws, seeds — is traced, so a 100-point V-grid compiles once and a
+    repeat sweep compiles nothing."""
+    from .vector_engine import (reserve_jax_cache_capacity, run_jax_sweep,
+                                sweep_bucket_key)
+    scenarios = list(scenarios)
+    sims = []
+    for sc in scenarios:
+        if not isinstance(sc, Scenario):
+            raise TypeError(
+                f"run_sweep takes Scenarios, got {type(sc).__name__}; "
+                "build one with Scenario(...) or Scenario.grid(...)")
+        sims.append(sc.build())
+    buckets: dict = {}
+    for idx, sim in enumerate(sims):
+        buckets.setdefault(sweep_bucket_key(sim), []).append(idx)
+    batched = [idxs for key, idxs in buckets.items()
+               if key is not None and len(idxs) >= 2]
+    if batched:
+        # keep every bucket resident for the sweep's lifetime (2 entries
+        # per bucket covers one push-buffer doubling retry)
+        reserve_jax_cache_capacity(2 * len(batched) + 8)
+    results: "list[Optional[SimResult]]" = [None] * len(sims)
+    for key, idxs in buckets.items():
+        if key is not None and len(idxs) >= 2:
+            for i, res in zip(idxs, run_jax_sweep([sims[i] for i in idxs])):
+                results[i] = res
+        else:
+            for i in idxs:
+                results[i] = sims[i].run()
+    return results
 
 
 def run_experiment(scenario: Optional[Scenario] = None, *,

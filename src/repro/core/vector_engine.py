@@ -58,6 +58,7 @@ engines; in f32, user ids stay exact up to 2**24.
 """
 from __future__ import annotations
 
+import logging
 from types import SimpleNamespace
 from typing import List, Tuple
 
@@ -70,8 +71,12 @@ from .policies import _jax_gradient_gap, _jax_trace_v_norm
 from .simulator import SimResult, n_slots, trace_v_norm
 from .staleness import gradient_gap
 
-__all__ = ["run_vectorized", "MODE_WAIT", "MODE_TRAIN", "MODE_COOL",
+__all__ = ["run_vectorized", "run_jax_sweep", "sweep_bucket_key",
+           "jax_cache_stats", "reserve_jax_cache_capacity",
+           "MODE_WAIT", "MODE_TRAIN", "MODE_COOL",
            "PLAN_HOLD", "PLAN_CORUN", "PLAN_SEP"]
+
+_LOG = logging.getLogger(__name__)
 
 
 def run_vectorized(sim, backend: str = "vectorized") -> SimResult:
@@ -385,11 +390,29 @@ class _NumpyEngine:
 # ======================================================================
 _JAX_FN_CACHE: dict = {}
 _JAX_FN_CACHE_MAX = 32
+_JAX_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def jax_cache_stats() -> dict:
+    """Counters for the jitted-chunk cache: ``hits`` (executable reused),
+    ``misses`` (a trace + compile happened), ``evictions`` (an LRU entry
+    was dropped to make room — if these climb during a sweep the cap is
+    too small; see :func:`reserve_jax_cache_capacity`)."""
+    return dict(_JAX_CACHE_STATS)
+
+
+def reserve_jax_cache_capacity(k: int) -> None:
+    """Raise (never lower) the jitted-chunk cache cap so every bucket of
+    a shape-bucketed sweep stays resident for the sweep's whole lifetime.
+    ``run_sweep`` calls this before running its buckets; evicting a hot
+    bucket mid-sweep would silently recompile it on the next chunk."""
+    global _JAX_FN_CACHE_MAX
+    _JAX_FN_CACHE_MAX = max(_JAX_FN_CACHE_MAX, int(k))
 
 
 def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                   collect: bool, capacity: int, statics: tuple = (),
-                  agg=None, dynamics=None):
+                  agg=None, dynamics=None, batch: int = 0):
     """Build + jit one scan chunk, memoized on (shapes,
     ``policy.jax_cache_key()``, overhead/collect flags, event-buffer
     capacity, the policy's ``scan_statics``, and — when the push log is
@@ -398,7 +421,10 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
     ``SimConfig(policy="online")`` and a fresh ``OnlinePolicy()`` per
     run share one executable; scalar knobs (V, L_b, ...,
     ``scan_operands``) are traced operands, so e.g. a V-sweep compiles
-    once. The policy's ``scan_step`` hook supplies the decision block
+    once. With ``batch`` > 0 the chunk is ``jax.vmap``-ped over a
+    leading config axis on every operand except ``t0`` — one program
+    advances ``batch`` stacked scenarios a chunk at a time (the sweep
+    path). The policy's ``scan_step`` hook supplies the decision block
     and the rule's ``scan_weight`` the push-log weight column;
     everything else — arrivals, cooldowns, training progression, Eq. 10
     energy, Eq. 15/16 queues, the push-event scatter — is engine code
@@ -411,20 +437,27 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
         dynamics = resolve_dynamics("none")
     key = (n, chunk, T, policy.jax_cache_key(), overhead, collect, capacity,
            statics, agg.jax_cache_key() if collect else None,
-           dynamics.jax_cache_key() if dynamics.active else None)
+           dynamics.jax_cache_key() if dynamics.active else None, batch)
     fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
     if fn is None:
+        _JAX_CACHE_STATS["misses"] += 1
         fn = _build_jax_chunk_fn(n, chunk, T, policy, overhead, collect,
-                                 capacity, statics, agg, dynamics)
-        if len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
-            _JAX_FN_CACHE.pop(next(iter(_JAX_FN_CACHE)))  # evict LRU
+                                 capacity, statics, agg, dynamics, batch)
+        while _JAX_FN_CACHE and len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
+            old = next(iter(_JAX_FN_CACHE))
+            _JAX_FN_CACHE.pop(old)      # evict LRU
+            _JAX_CACHE_STATS["evictions"] += 1
+            _LOG.info("jax chunk cache full (max=%d): evicted %r",
+                      _JAX_FN_CACHE_MAX, old[:4])
+    else:
+        _JAX_CACHE_STATS["hits"] += 1
     _JAX_FN_CACHE[key] = fn
     return fn
 
 
 def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                         collect: bool, capacity: int, statics: tuple = (),
-                        agg=None, dynamics=None):
+                        agg=None, dynamics=None, batch: int = 0):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -435,6 +468,10 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
     # of the _jax_chunk_fn cache key)
     dyn_active = dynamics is not None and dynamics.active
     dyn_lose = dyn_active and dynamics.dropout == "lose"
+    # uneven horizon: the driver pads arrivals to a whole number of
+    # chunks and the scan skips slots past T, so the tail chunk reuses
+    # THIS executable instead of compiling a second one per horizon
+    pad = chunk > 0 and (T % chunk) != 0
 
     def simulate(tables, app_sched, app_choice, scalars, pol_ops, agg_ops,
                  dyn_ops, t0, state):
@@ -450,6 +487,17 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
 
         def step(s, xs):
             srow, crow, t = xs
+            if pad:
+                # padded tail slots skip the WHOLE step — state, rng
+                # chains and queues stay exactly where slot T-1 left
+                # them, matching the host engines' T-slot histories
+                return lax.cond(
+                    t < T, _live_step,
+                    lambda s, *_: (s, (s.Q, s.H, jnp.sum(s.energy))),
+                    s, srow, crow, t)
+            return _live_step(s, srow, crow, t)
+
+        def _live_step(s, srow, crow, t):
             mode, cooldown, app, app_rem = s.mode, s.cooldown, s.app, \
                 s.app_rem
             train_rem, corun, idle_gap = s.train_rem, s.corun, s.idle_gap
@@ -637,20 +685,29 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
 
         return lax.scan(step, state, (sched_c, choice_c, ts))
 
+    if batch:
+        # the sweep path: one program advances `batch` stacked configs —
+        # every operand carries a leading config axis except t0 (the
+        # chunk cursor, shared by the whole batch)
+        return jax.jit(jax.vmap(simulate,
+                                in_axes=(0, 0, 0, 0, 0, 0, 0, None, 0)))
     return jax.jit(simulate)
 
 
-def _state_to_jax(es: EngineState, jax, jnp, f, i) -> EngineState:
-    """Device-array twin of a host EngineState: floats to the run's float
-    dtype (honors x64), ints to the default int dtype, bools and the
-    uint32 rng key as-is; the policy carry pytree converts leaf-wise."""
+def _state_to_np(es: EngineState, jax, f, i) -> EngineState:
+    """Engine-dtype twin of a host EngineState with NUMPY leaves: floats
+    to the run's float dtype (honors x64), ints to the default int
+    dtype, bools and the uint32 rng key as-is; the policy carry pytree
+    converts leaf-wise. The driver device-puts the whole pytree in one
+    ``tree.map`` — the sweep path stacks B of these host-side first, so
+    a 100-config batch costs one transfer per leaf, not 100."""
     def cast(x):
         a = np.asarray(x)
         if a.dtype == np.bool_ or a.dtype == np.uint32:
-            return jnp.asarray(a)
+            return a
         if np.issubdtype(a.dtype, np.floating):
-            return jnp.asarray(a, f)
-        return jnp.asarray(a, i)
+            return np.asarray(a, f)
+        return np.asarray(a, i)
 
     return EngineState(
         mode=cast(es.mode), cooldown=cast(es.cooldown), app=cast(es.app),
@@ -697,6 +754,84 @@ def _next_pow2(k: int) -> int:
     return c
 
 
+def _jax_run_setup(sim, jax, jnp):
+    """HOST (numpy) operands + engine-dtype state for one sim, shared by
+    the per-point path (`_run_jax`) and the batched sweep path
+    (`run_jax_sweep`). Everything stays numpy here on purpose: the
+    per-point path device-puts each leaf once via `_ops_to_device`,
+    while the sweep path first np.stacks B of these along a config axis
+    and THEN converts — so a B-config sweep pays one transfer per leaf,
+    not B (host->device dispatch, not the vmapped scan, dominated sweep
+    wall-clock before this). Arrivals are padded host-side to a whole
+    number of ``jax_chunk`` chunks so an uneven horizon reuses the
+    full-chunk executable — the scan skips padded slots (t >= T)."""
+    cfg = sim.cfg
+    n = cfg.n_users
+    T = n_slots(cfg)
+    collect = cfg.collect_push_log
+    f = jnp.zeros(0).dtype          # honors jax_enable_x64
+    i = jnp.asarray(0).dtype        # (jax dtypes ARE numpy dtypes)
+    tables = tuple(np.asarray(a, f) for a in _user_tables(sim))
+    chunk = min(cfg.jax_chunk, T) if T else 0
+    n_chunks = -(-T // chunk) if T else 0
+    sched = np.asarray(sim.app_sched[:T])
+    choice = np.asarray(sim.app_choice[:T], np.int32)
+    T_pad = n_chunks * chunk
+    if T_pad > T:
+        sched = np.concatenate(
+            [sched, np.zeros((T_pad - T, n), sched.dtype)])
+        choice = np.concatenate(
+            [choice, np.zeros((T_pad - T, n), choice.dtype)])
+    # fp_zero: a runtime-opaque 0.0 the scan adds to products that the
+    # host engines round before accumulating — defeats XLA's fma
+    # contraction, which would skip that rounding (see _jax_trace_v_norm)
+    scalars = tuple(np.asarray(s, f) for s in (
+        cfg.V, cfg.L_b, cfg.epsilon, cfg.eta, cfg.beta, cfg.v_norm0,
+        cfg.t_d)) + (np.asarray(cfg.ready_delay, i),) + tuple(
+        np.asarray(s, f) for s in (cfg.offline_window,
+                                   cfg.offline_resolution)) + (
+        np.asarray(0.0, f),)
+    pol_ops = tuple(np.asarray(v) for v in sim.policy.scan_operands(cfg))
+    agg_ops = tuple(np.asarray(v) for v in sim.agg.scan_operands(cfg))
+    # dynamics knobs: floats in the run's float dtype (f64 parity with
+    # the host transition under x64), ints in the default int dtype
+    dyn_ops = tuple(
+        np.asarray(v, f) if isinstance(v, float) else np.asarray(v)
+        for v in sim.dynamics.scan_operands(cfg)) \
+        if sim.dynamics.active else ()
+    # initial per-chunk event capacity; an overflowing chunk is re-run
+    # from its saved entry state with a doubled buffer, so the guess
+    # only costs (rare) recompiles, never correctness
+    cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n)) \
+        if collect else 0
+    return SimpleNamespace(
+        n=n, T=T, chunk=chunk, n_chunks=n_chunks, collect=collect,
+        f=f, i=i, tables=tables, app_sched=sched,
+        app_choice=choice, scalars=scalars, pol_ops=pol_ops,
+        agg_ops=agg_ops, dyn_ops=dyn_ops,
+        statics=tuple(sim.policy.scan_statics(cfg)),
+        overhead=cfg.include_scheduler_overhead, cap=cap,
+        state=_state_to_np(sim.state, jax, f, i))
+
+
+def _ops_to_device(rs, jax, jnp):
+    """Device-put a `_jax_run_setup` namespace in place: exactly one
+    transfer per operand leaf, whether the leaves are unbatched or
+    already np.stacked along a config axis. jax canonicalizes dtypes on
+    the way in (f64 -> f32 when x64 is off), matching what tracing the
+    host values directly used to produce."""
+    dev = lambda tree: jax.tree.map(jnp.asarray, tree)
+    rs.tables = dev(rs.tables)
+    rs.app_sched = jnp.asarray(rs.app_sched)
+    rs.app_choice = jnp.asarray(rs.app_choice)
+    rs.scalars = dev(rs.scalars)
+    rs.pol_ops = dev(rs.pol_ops)
+    rs.agg_ops = dev(rs.agg_ops)
+    rs.dyn_ops = dev(rs.dyn_ops)
+    rs.state = dev(rs.state)
+    return rs
+
+
 def _run_jax(sim) -> SimResult:
     import jax
     import jax.numpy as jnp
@@ -711,54 +846,25 @@ def _run_jax(sim) -> SimResult:
             not dynamics_support(dynamics)["jax"] or \
             (cfg.collect_push_log and not aggregation_support(agg)["jax"]):
         return _NumpyEngine(sim).run()  # resolve_engine reroutes; be safe
-    n = cfg.n_users
-    T = n_slots(cfg)
-    collect = cfg.collect_push_log
-    f = jnp.zeros(0).dtype          # honors jax_enable_x64
-    i = jnp.asarray(0).dtype
-    tables = tuple(jnp.asarray(a, f) for a in _user_tables(sim))
-    app_sched = jnp.asarray(sim.app_sched[:T])
-    app_choice = jnp.asarray(sim.app_choice[:T], jnp.int32)
-    # fp_zero: a runtime-opaque 0.0 the scan adds to products that the
-    # host engines round before accumulating — defeats XLA's fma
-    # contraction, which would skip that rounding (see _jax_trace_v_norm)
-    scalars = tuple(jnp.asarray(s, f) for s in (
-        cfg.V, cfg.L_b, cfg.epsilon, cfg.eta, cfg.beta, cfg.v_norm0,
-        cfg.t_d)) + (jnp.asarray(cfg.ready_delay),) + tuple(
-        jnp.asarray(s, f) for s in (cfg.offline_window,
-                                    cfg.offline_resolution)) + (
-        jnp.asarray(0.0, f),)
-    pol_ops = tuple(jnp.asarray(v) for v in policy.scan_operands(cfg))
-    agg_ops = tuple(jnp.asarray(v) for v in agg.scan_operands(cfg))
-    # dynamics knobs: floats in the run's float dtype (f64 parity with
-    # the host transition under x64), ints in the default int dtype
-    dyn_ops = tuple(
-        jnp.asarray(v, f) if isinstance(v, float) else jnp.asarray(v)
-        for v in dynamics.scan_operands(cfg)) if dynamics.active else ()
-    statics = tuple(policy.scan_statics(cfg))
-    overhead = cfg.include_scheduler_overhead
-    state = _state_to_jax(sim.state, jax, jnp, f, i)
-    cap = 0
+    rs = _ops_to_device(_jax_run_setup(sim, jax, jnp), jax, jnp)
+    n, T, chunk, collect, f, i = rs.n, rs.T, rs.chunk, rs.collect, rs.f, rs.i
+    cap = rs.cap
+    state = rs.state
     if collect:
-        # initial per-chunk event capacity; an overflowing chunk is
-        # re-run from its saved entry state with a doubled buffer, so the
-        # guess only costs (rare) recompiles, never correctness
-        cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n))
         state = state.replace(events=PushBuffer(
             jnp.zeros((cap, 6), f), jnp.asarray(0, i)))
 
     log = PushLog()
     qs_parts, hs_parts, e_parts = [], [], []
-    chunk = min(cfg.jax_chunk, T) if T else 0
-    t0 = 0
-    while t0 < T:
-        clen = min(chunk, T - t0)
-        fn = _jax_chunk_fn(n, clen, T, policy, overhead, collect, cap,
-                           statics, agg, dynamics)
+    ci = 0
+    while ci < rs.n_chunks:
+        t0 = ci * chunk
+        fn = _jax_chunk_fn(n, chunk, T, policy, rs.overhead, collect, cap,
+                           rs.statics, agg, dynamics)
         prev = state
-        state, (qs, hs, esum) = fn(tables, app_sched, app_choice, scalars,
-                                   pol_ops, agg_ops, dyn_ops,
-                                   jnp.asarray(t0, i), state)
+        state, (qs, hs, esum) = fn(rs.tables, rs.app_sched, rs.app_choice,
+                                   rs.scalars, rs.pol_ops, rs.agg_ops,
+                                   rs.dyn_ops, jnp.asarray(t0, i), state)
         if collect:
             cnt = int(state.events.count)
             if cnt > cap:
@@ -772,10 +878,11 @@ def _run_jax(sim) -> SimResult:
                 log.extend_rows(np.asarray(state.events.rows[:cnt]))
             state = state.replace(events=PushBuffer(
                 state.events.rows, jnp.asarray(0, i)))
-        qs_parts.append(np.asarray(qs, dtype=float))
-        hs_parts.append(np.asarray(hs, dtype=float))
-        e_parts.append(np.asarray(esum, dtype=float))
-        t0 += clen
+        m = min(chunk, T - t0)          # live slots (tail chunk is padded)
+        qs_parts.append(np.asarray(qs, dtype=float)[:m])
+        hs_parts.append(np.asarray(hs, dtype=float)[:m])
+        e_parts.append(np.asarray(esum, dtype=float)[:m])
+        ci += 1
 
     # the run's final state, readable on the host like the other engines'
     sim.state = _state_to_host(state, jax)
@@ -800,3 +907,161 @@ def _run_jax(sim) -> SimResult:
         mean_H=sum_H / T if T else 0.0,
         corun_fraction=corun_updates / max(updates_total, 1),
         drops=dynamics.total_drops(sim.state.dyn))
+
+
+# ======================================================================
+# Batched sweeps: one vmapped program advances B stacked scenarios
+# ======================================================================
+def sweep_bucket_key(sim):
+    """Shared-executable bucket key for the batched sweep path, or None
+    when this sim can't join a vmapped batch: real-ML hooks/backends, an
+    explicit ``engine="loop"`` request, a policy or dynamics without jax
+    + vmap support (the offline policy's host knapsack ``pure_callback``
+    would fire for every config at every slot under vmapped ``cond``),
+    or a push log wanted without a jax-capable aggregation rule. Sims
+    with equal keys share ONE jitted program — the key mirrors
+    ``_jax_chunk_fn``'s memo key, so everything per-config (V, L_b,
+    ``scan_operands``, arrival draws, seeds) stays traced and batched."""
+    from .aggregation import aggregation_support
+    from .dynamics import dynamics_support
+    cfg = sim.cfg
+    policy, agg, dynamics = sim.policy, sim.agg, sim.dynamics
+    if sim.ml or sim.ml_backend is not None or cfg.engine == "loop":
+        return None
+    if not (policy.supports_jax and getattr(policy, "supports_vmap", True)):
+        return None
+    if not (dynamics_support(dynamics)["jax"]
+            and getattr(dynamics, "supports_vmap", True)):
+        return None
+    collect = cfg.collect_push_log
+    if collect and not (aggregation_support(agg)["jax"]
+                        and getattr(agg, "supports_vmap", True)):
+        return None
+    n = cfg.n_users
+    T = n_slots(cfg)
+    if not T:
+        return None
+    cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n)) \
+        if collect else 0
+    return (n, min(cfg.jax_chunk, T), T, policy.jax_cache_key(),
+            cfg.include_scheduler_overhead, collect, cap,
+            tuple(policy.scan_statics(cfg)),
+            agg.jax_cache_key() if collect else None,
+            dynamics.jax_cache_key() if dynamics.active else None)
+
+
+def run_jax_sweep(sims) -> List[SimResult]:
+    """Run constructed FederatedSims that share a ``sweep_bucket_key``
+    as ONE vmapped jitted program: per-config operands and EngineStates
+    stack along a leading config axis, the chunked scan advances all of
+    them together, and each row decodes back to an unbatched
+    ``SimResult`` (traces, push log, final host state) identical — bit
+    for bit on discrete outputs, to float-sum reordering on energies —
+    to its per-point ``_run_jax`` run. Push buffers are batched
+    ``(B, cap, 6)``; if ANY config overflows a chunk, the chunk re-runs
+    from its saved entry state with the buffer doubled for every row
+    (per-config counts stay exact)."""
+    import jax
+    import jax.numpy as jnp
+
+    sims = list(sims)
+    if not sims:
+        return []
+    keys = {sweep_bucket_key(s) for s in sims}
+    if None in keys or len(keys) != 1:
+        raise ValueError(
+            "run_jax_sweep needs sims sharing one sweep_bucket_key; got "
+            f"{len(keys)} distinct keys (None = jax/vmap-ineligible). "
+            "Use core.scenario.run_sweep for bucketing + fallback.")
+    if len(sims) == 1:
+        return [_run_jax(sims[0])]
+    B = len(sims)
+    policy, agg = sims[0].policy, sims[0].agg
+    dynamics = sims[0].dynamics
+    preps = [_jax_run_setup(s, jax, jnp) for s in sims]
+    p0 = preps[0]
+    n, T, chunk, collect, f, i = p0.n, p0.T, p0.chunk, p0.collect, \
+        p0.f, p0.i
+
+    # stack HOST-side (the setups are numpy), then device-put the whole
+    # batch in one pass — one transfer per leaf, independent of B
+    def stack(parts):
+        return jax.tree.map(lambda *xs: np.stack(xs), *parts)
+
+    rs = SimpleNamespace(
+        tables=stack([p.tables for p in preps]),
+        app_sched=np.stack([p.app_sched for p in preps]),
+        app_choice=np.stack([p.app_choice for p in preps]),
+        scalars=stack([p.scalars for p in preps]),
+        pol_ops=stack([p.pol_ops for p in preps]),
+        agg_ops=stack([p.agg_ops for p in preps]),
+        dyn_ops=stack([p.dyn_ops for p in preps]),
+        state=stack([p.state for p in preps]))
+    rs = _ops_to_device(rs, jax, jnp)
+    tables, app_sched, app_choice = rs.tables, rs.app_sched, rs.app_choice
+    scalars, pol_ops, agg_ops, dyn_ops = \
+        rs.scalars, rs.pol_ops, rs.agg_ops, rs.dyn_ops
+    state = rs.state
+    cap = p0.cap
+    if collect:
+        state = state.replace(events=PushBuffer(
+            jnp.zeros((B, cap, 6), f), jnp.zeros((B,), i)))
+
+    logs = [PushLog() for _ in range(B)]
+    qs_parts, hs_parts, e_parts = [], [], []
+    ci = 0
+    while ci < p0.n_chunks:
+        t0 = ci * chunk
+        fn = _jax_chunk_fn(n, chunk, T, policy, p0.overhead, collect, cap,
+                           p0.statics, agg, dynamics, batch=B)
+        prev = state
+        state, (qs, hs, esum) = fn(tables, app_sched, app_choice, scalars,
+                                   pol_ops, agg_ops, dyn_ops,
+                                   jnp.asarray(t0, i), state)
+        if collect:
+            counts = np.asarray(state.events.count)
+            if int(counts.max()) > cap:
+                # any config overflowing re-runs the whole chunk with
+                # the buffer doubled for every row (counts stay exact)
+                cap = _next_pow2(int(counts.max()))
+                state = prev.replace(events=PushBuffer(
+                    jnp.zeros((B, cap, 6), f), jnp.zeros((B,), i)))
+                continue
+            rows = np.asarray(state.events.rows)
+            for b in range(B):
+                if counts[b]:
+                    logs[b].extend_rows(rows[b, :counts[b]])
+            state = state.replace(events=PushBuffer(
+                state.events.rows, jnp.zeros((B,), i)))
+        m = min(chunk, T - t0)          # live slots (tail chunk is padded)
+        qs_parts.append(np.asarray(qs, dtype=float)[:, :m])
+        hs_parts.append(np.asarray(hs, dtype=float)[:, :m])
+        e_parts.append(np.asarray(esum, dtype=float)[:, :m])
+        ci += 1
+
+    qs = np.concatenate(qs_parts, axis=1)
+    hs = np.concatenate(hs_parts, axis=1)
+    es = np.concatenate(e_parts, axis=1)
+    # per-config energy reduced on device along the user axis, like the
+    # per-point path's jnp.sum over (n,)
+    energy_rows = np.asarray(jnp.sum(state.energy, axis=1), dtype=float)
+    # one bulk device->host transfer for the whole batch, then numpy
+    # slicing per row — per-row device slicing cost ~50x more here
+    host_all = jax.tree.map(np.asarray, state.replace(events=None))
+    results = []
+    for b, sim in enumerate(sims):
+        host = _state_to_host(jax.tree.map(lambda x: x[b], host_all), jax)
+        sim.state = host
+        sim._ran = True                 # Scenario.run() re-entrancy flag
+        updates_total = int(host.updates.sum())
+        idx = np.arange(0, T, sim.cfg.trace_every)
+        results.append(SimResult(
+            energy_j=float(energy_rows[b]),
+            updates=updates_total,
+            trace_t=idx.copy(), trace_energy=es[b, idx],
+            trace_Q=qs[b, idx], trace_H=hs[b, idx],
+            push_log=logs[b], accuracy=[],
+            mean_Q=host.sum_Q / T, mean_H=host.sum_H / T,
+            corun_fraction=host.corun_updates / max(updates_total, 1),
+            drops=sim.dynamics.total_drops(host.dyn)))
+    return results

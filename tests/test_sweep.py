@@ -1,0 +1,220 @@
+"""Batched scenario sweeps (core.scenario.run_sweep / Scenario.sweep):
+parity against the per-point jax scan (the oracle the per-point engines
+already pin to the loop engine), single-compile guarantees for uneven
+horizons and V-grids, cache eviction accounting, per-config overflow
+retry, and the bench modules' singly-typed knob columns."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# the bench modules live in a namespace package at the repo root
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import Scenario, run_experiment, run_sweep
+from repro.core import vector_engine as ve
+from repro.core.engine_state import EVENT_FIELDS
+from repro.core.policies import resolve_policy
+from repro.core.simulator import SimConfig, n_slots
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """f64 matches the host engines' float semantics; f32 is a
+    documented approximation."""
+    import jax
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
+
+def _per_point(sc: Scenario):
+    """The per-point jax oracle for a sweep scenario."""
+    return Scenario(config=dataclasses.replace(sc.config, engine="jax"),
+                    arrivals=sc.arrivals).run()
+
+
+def assert_sweep_parity(grid, results, energy_rtol=1e-9):
+    """Each sweep row must match its per-point run: bit-identical
+    discrete outputs and queue traces, energies/gaps/weights to
+    ``energy_rtol`` (fma armor keeps the scan's float products rounded
+    like the host's, but batched reductions may still reassociate)."""
+    assert len(grid) == len(results)
+    for sc, r in zip(grid, results):
+        pp = _per_point(sc)
+        assert r.updates == pp.updates
+        assert np.array_equal(r.trace_t, pp.trace_t)
+        assert np.array_equal(r.trace_Q, pp.trace_Q)
+        assert np.array_equal(r.trace_H, pp.trace_H)
+        np.testing.assert_allclose(r.energy_j, pp.energy_j,
+                                   rtol=energy_rtol)
+        np.testing.assert_allclose(r.trace_energy, pp.trace_energy,
+                                   rtol=energy_rtol)
+        assert r.mean_Q == pp.mean_Q
+        np.testing.assert_allclose(r.mean_H, pp.mean_H, rtol=energy_rtol)
+        assert r.corun_fraction == pp.corun_fraction
+        assert r.drops == pp.drops
+        # push-log digest: discrete columns exact, float columns tight
+        a, b = r.push_log.arrays(), pp.push_log.arrays()
+        assert len(r.push_log) == len(pp.push_log)
+        for j, name in enumerate(EVENT_FIELDS):
+            if name in ("t", "user", "lag", "corun"):
+                assert np.array_equal(a[j], b[j]), name
+            else:
+                np.testing.assert_allclose(a[j], b[j], rtol=energy_rtol,
+                                           err_msg=name)
+
+
+class TestSweepParity:
+    @pytest.mark.parametrize("policy", ("online", "eps_greedy"))
+    @pytest.mark.parametrize("aggregation", ("replace", "fedasync_poly"))
+    @pytest.mark.parametrize("dynamics", ("none", "markov"))
+    def test_matrix_vs_per_point(self, policy, aggregation, dynamics):
+        kw = dict(policy=policy, n_users=10, horizon_s=900, seed=5,
+                  app_arrival_p=0.02, collect_push_log=True,
+                  aggregation=aggregation, V=60.0, jax_chunk=256)
+        if dynamics != "none":
+            kw["dynamics"] = dynamics
+        grid = Scenario(**kw).grid(V=[20.0, 60.0, 200.0])
+        assert_sweep_parity(grid, run_sweep(grid))
+
+    def test_per_config_overflow_retry(self):
+        # capacity 2 forces the batched push buffer to overflow and the
+        # chunk to re-run doubled — per-config counts must stay exact
+        grid = Scenario(policy="immediate", n_users=8, horizon_s=1200,
+                        seed=1, app_arrival_p=0.02, collect_push_log=True,
+                        push_log_capacity=2).grid(seed=[1, 2, 3])
+        results = run_sweep(grid)
+        assert_sweep_parity(grid, results)
+        assert all(len(r.push_log) > 2 for r in results)
+
+    def test_mixed_shapes_bucket_and_fallback(self):
+        # two shape buckets + a vmap-ineligible offline scenario: results
+        # must come back in input order, each matching its own oracle
+        scs = (Scenario(policy="online", n_users=10, horizon_s=900,
+                        seed=2).grid(V=[20.0, 50.0])
+               + Scenario(policy="online", n_users=14, horizon_s=900,
+                          seed=2).grid(V=[20.0, 50.0])
+               + [Scenario(policy="offline", n_users=10, horizon_s=900,
+                           seed=2)])
+        results = run_sweep(scs)
+        for sc, r in zip(scs, results):
+            pp = Scenario(config=sc.config, arrivals=sc.arrivals).run()
+            assert r.updates == pp.updates
+            np.testing.assert_allclose(r.energy_j, pp.energy_j, rtol=1e-9)
+
+    def test_sweep_rejects_non_scenarios(self):
+        with pytest.raises(TypeError, match="Scenario"):
+            run_sweep([SimConfig(policy="online")])
+
+    def test_grid_order_and_arrival_rebinding(self):
+        base = Scenario(policy="online", n_users=8, horizon_s=600, seed=0,
+                        app_arrival_p=0.001)
+        grid = base.grid(V=[1.0, 2.0], L_b=[10.0, 20.0])
+        assert [(s.config.V, s.config.L_b) for s in grid] == \
+            [(1.0, 10.0), (1.0, 20.0), (2.0, 10.0), (2.0, 20.0)]
+        # a swept app_arrival_p must rebind the default Bernoulli
+        # process, not keep the base scenario's bound rate
+        lo, hi = base.grid(app_arrival_p=[0.0, 0.5])
+        a = lo.build()
+        b = hi.build()
+        assert not a.app_sched.any()
+        assert b.app_sched.mean() > 0.25
+
+
+class TestSweepCompileCost:
+    def test_uneven_horizon_single_compile(self):
+        # T=2000, chunk=512 -> a partial tail chunk; the padded scan
+        # must reuse ONE executable per (shape, policy), not compile a
+        # second tail program
+        kw = dict(policy="online", n_users=9, horizon_s=2000, seed=4,
+                  engine="jax", jax_chunk=512, collect_push_log=True)
+        before = set(ve._JAX_FN_CACHE)
+        r = run_experiment(Scenario(**kw))
+        assert len(set(ve._JAX_FN_CACHE) - before) == 1
+        # and a repeat run compiles nothing
+        before = set(ve._JAX_FN_CACHE)
+        run_experiment(Scenario(**kw))
+        assert set(ve._JAX_FN_CACHE) == before
+        # the padded tail is a no-op: parity with the vectorized oracle
+        pp = run_experiment(Scenario(**{**kw, "engine": "vectorized"}))
+        assert r.updates == pp.updates
+        assert np.array_equal(r.trace_Q, pp.trace_Q)
+        np.testing.assert_allclose(r.energy_j, pp.energy_j, rtol=1e-9)
+
+    def test_vgrid_compiles_at_most_two_programs(self):
+        # acceptance criterion: a >=16-point V-sweep with shared static
+        # shapes runs under ONE compiled program (plus at most one
+        # tail-chunk/overflow-retry program)
+        grid = Scenario(policy="online", n_users=25, horizon_s=600,
+                        seed=0).grid(
+            V=[float(10 ** (2 + 4 * k / 15)) for k in range(16)])
+        before = set(ve._JAX_FN_CACHE)
+        results = run_sweep(grid)
+        assert len(results) == 16
+        assert len(set(ve._JAX_FN_CACHE) - before) <= 2
+        # distinct V must actually produce distinct schedules
+        assert len({r.updates for r in results}) > 1
+
+    def test_bucketed_sweep_never_recompiles(self, monkeypatch):
+        # regression: with a too-small LRU cap a 3-bucket sweep would
+        # thrash — run_sweep must reserve capacity so every bucket stays
+        # resident, and a repeat sweep must be all cache hits
+        monkeypatch.setattr(ve, "_JAX_FN_CACHE_MAX", 1)
+        scs = []
+        for pol in ("online", "immediate", "greedy"):
+            scs += Scenario(policy=pol, n_users=8, horizon_s=600,
+                            seed=3).grid(V=[10.0, 40.0])
+        run_sweep(scs)
+        assert ve._JAX_FN_CACHE_MAX >= 3    # reserved for the buckets
+        stats = ve.jax_cache_stats()
+        run_sweep(scs)
+        stats2 = ve.jax_cache_stats()
+        assert stats2["misses"] == stats["misses"]      # no recompiles
+        assert stats2["evictions"] == stats["evictions"]
+
+    def test_eviction_counter(self, monkeypatch):
+        # force the cache over its cap and check the eviction is counted
+        run_experiment(Scenario(policy="online", n_users=7, horizon_s=400,
+                                seed=0, engine="jax"))
+        assert ve._JAX_FN_CACHE
+        monkeypatch.setattr(ve, "_JAX_FN_CACHE_MAX", 1)
+        ev0 = ve.jax_cache_stats()["evictions"]
+        run_experiment(Scenario(policy="greedy", n_users=7, horizon_s=400,
+                                seed=0, engine="jax"))
+        assert ve.jax_cache_stats()["evictions"] > ev0
+
+    def test_offline_policy_not_vmapped(self):
+        assert resolve_policy("offline").supports_vmap is False
+        sim = Scenario(policy="offline", n_users=8, horizon_s=600,
+                       seed=0).build()
+        assert ve.sweep_bucket_key(sim) is None
+
+    def test_run_jax_sweep_rejects_mixed_keys(self):
+        sims = [Scenario(policy="online", n_users=n, horizon_s=600,
+                         seed=0).build() for n in (8, 12)]
+        with pytest.raises(ValueError, match="sweep_bucket_key"):
+            ve.run_jax_sweep(sims)
+
+
+class TestBenchColumns:
+    def test_fig4_fig6_knob_columns_singly_typed(self, tmp_path):
+        from benchmarks import bench_fig4_tradeoff, bench_fig6_arrival
+        rows4 = bench_fig4_tradeoff.run(
+            fast=True, json_path=str(tmp_path / "fig4.json"))
+        assert all(r["V"] is None or isinstance(r["V"], float)
+                   for r in rows4)
+        assert all(isinstance(r["L_b"], float) for r in rows4)
+        assert any(r["V"] is None for r in rows4)       # baselines
+        rows6 = bench_fig6_arrival.run(
+            fast=True, json_path=str(tmp_path / "fig6.json"))
+        assert all(r["arrival_p"] is None
+                   or isinstance(r["arrival_p"], float) for r in rows6)
+        assert any(r["arrival_p"] is None for r in rows6)   # bursty
+        assert (tmp_path / "fig4.json").exists()
+        assert (tmp_path / "fig6.json").exists()
