@@ -1,59 +1,186 @@
-"""Kernel micro-bench: wall time of the XLA oracle paths on host (the
-Pallas kernels themselves target TPU; interpret mode is not a timing
-proxy) + the analytic HBM-traffic ratios the kernels buy.
+"""Kernel micro-bench: fused-vs-naive wall time for both hot-path
+contracts (CLIENT update and SERVER apply) at both entry granularities
+(flat f32 vector and realml-style pytree), sizes 64k and 1M params.
 
-fused_update: 7 passes naive / 5 fused = 1.4x traffic cut.
-flash_attention: removes the (Sq x Sk) f32 score tensor round-trips.
+Per (entry, form, n) row:
+
+* ``naive_ms``  — the multi-traversal jnp path the fused kernels replace
+  (separate momentum, parameter, and norm passes over HBM),
+* ``fused_ms``  — the single-jit XLA oracle (``optim/gap.py``),
+* ``pallas_ms`` — the Pallas entry itself. Only a hardware timing on
+  TPU; off-TPU it runs interpret mode (``pallas_mode`` column says
+  which), recorded for trend tracking, not as a speedup claim.
+
+Traffic model: update reads theta/v/g and writes theta'/v' + a scalar
+(5 fused passes vs 7 naive); apply reads cur/v/new and writes
+mixed/v' + a scalar (5 vs 8 — the naive path re-reads mixed for the
+server step and v' for the norm).
+
+Every run persists ``BENCH_kernels.json`` (see ``common.write_json``)
+so the kernel trajectory is machine-readable across PRs.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --fast
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.optim.gap import fused_momentum_gap_update
+from repro.kernels.fused_update import (fused_apply_flat,
+                                        fused_momentum_gap_update_pallas,
+                                        fused_update_flat,
+                                        fused_weighted_apply_pallas,
+                                        kernel_interpret)
+from repro.optim.gap import fused_momentum_gap_update, fused_weighted_apply
+
+JSON_PATH = "BENCH_kernels.json"
+SIZES = (65_536, 1_048_576)
+ETA, BETA, W = 0.05, 0.9, 0.6
 
 
-def _time(fn, *args, n=5):
-    fn(*args)  # compile
+def _time(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))  # compile
     t0 = time.perf_counter()
-    for _ in range(n):
+    for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n
+    return 1e3 * (time.perf_counter() - t0) / reps
 
 
-def run(fast: bool = True):
-    n = 1 << 20 if fast else 1 << 24
+def _tree(n: int):
+    """A realml-shaped pytree (mixed leaf sizes) totalling n params."""
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    p = {"w": jax.random.normal(ks[0], (n,))}
-    v = {"w": jax.random.normal(ks[1], (n,))}
-    g = {"w": jax.random.normal(ks[2], (n,))}
+    d = 64
+    rows = (n - d * d - d) // d
+    return {"embed": jax.random.normal(ks[0], (rows, d)),
+            "head": {"w": jax.random.normal(ks[1], (d, d)),
+                     "b": jax.random.normal(ks[2], (n - rows * d - d * d,))}}
 
-    fused = jax.jit(lambda p_, v_, g_: fused_momentum_gap_update(
-        p_, v_, g_, eta=0.01, beta=0.9, lag=jnp.int32(3)))
+
+def _flat(n: int, seed: int):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+def _variants(n: int):
+    """(entry, form) -> (naive_fn, fused_fn, pallas_fn, args)."""
+    interp = kernel_interpret()
+    inv_eta = 1.0 / ETA
 
     @jax.jit
-    def three_pass(p_, v_, g_):
-        v2 = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, v_, g_)
-        p2 = jax.tree.map(lambda a, b: a - 0.01 * b, p_, v2)
+    def update_naive_flat(th, v, g):
+        v2 = BETA * v + (1 - BETA) * g
+        th2 = th - ETA * v2
+        return th2, v2, jnp.sqrt(jnp.sum(jnp.square(v2)))
+
+    @jax.jit
+    def update_fused_flat(th, v, g):
+        v2 = BETA * v + (1 - BETA) * g
+        return th - ETA * v2, v2, jnp.sqrt(jnp.sum(v2 * v2))
+
+    @jax.jit
+    def apply_naive_flat(cur, v, new):
+        mixed = W * new + (1 - W) * cur
+        s = (cur - mixed) * inv_eta
+        v2 = BETA * v + (1 - BETA) * s
+        return mixed, v2, jnp.sqrt(jnp.sum(jnp.square(v2)))
+
+    @jax.jit
+    def apply_fused_flat(cur, v, new):
+        mixed = W * new + (1 - W) * cur
+        v2 = BETA * v + (1 - BETA) * ((cur - mixed) * inv_eta)
+        return mixed, v2, jnp.sqrt(jnp.sum(v2 * v2))
+
+    @jax.jit
+    def update_naive_tree(p, v, g):
+        v2 = jax.tree.map(lambda a, b: BETA * a + (1 - BETA) * b, v, g)
+        p2 = jax.tree.map(lambda a, b: a - ETA * b, p, v2)
         sq = sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(v2))
         return p2, v2, jnp.sqrt(sq)
 
-    t_fused = _time(fused, p, v, g)
-    t_three = _time(three_pass, p, v, g)
-    return [{
-        "bench": "kernels", "kernel": "fused_update",
-        "n_params": n,
-        "fused_ms": round(1e3 * t_fused, 3),
-        "unfused_ms": round(1e3 * t_three, 3),
-        "speedup_host": round(t_three / t_fused, 3),
-        "traffic_ratio_model": round(7 / 5, 3),
-    }]
+    @jax.jit
+    def apply_naive_tree(cur, v, new):
+        mixed = jax.tree.map(lambda a, b: W * b + (1 - W) * a, cur, new)
+        s = jax.tree.map(lambda a, b: (a - b) * inv_eta, cur, mixed)
+        v2 = jax.tree.map(lambda a, b: BETA * a + (1 - BETA) * b, v, s)
+        sq = sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(v2))
+        return mixed, v2, jnp.sqrt(sq)
+
+    update_fused_tree = jax.jit(
+        lambda p, v, g: fused_momentum_gap_update(
+            p, v, g, eta=ETA, beta=BETA, lag=jnp.int32(3)))
+    apply_fused_tree = jax.jit(
+        lambda c, v, nw: fused_weighted_apply(c, v, nw, w=W, eta=ETA,
+                                              beta=BETA))
+
+    flat = tuple(_flat(n, s) for s in range(3))
+    tree = (_tree(n),
+            jax.tree.map(lambda a: 0.1 * a, _tree(n)),
+            jax.tree.map(lambda a: -a, _tree(n)))
+    return {
+        ("update", "flat"): (
+            update_naive_flat, update_fused_flat,
+            lambda th, v, g: fused_update_flat(th, v, g, ETA, BETA,
+                                               interpret=interp), flat),
+        ("apply", "flat"): (
+            apply_naive_flat, apply_fused_flat,
+            lambda c, v, nw: fused_apply_flat(c, v, nw, W, inv_eta, BETA,
+                                              interpret=interp), flat),
+        ("update", "pytree"): (
+            update_naive_tree, update_fused_tree,
+            lambda p, v, g: fused_momentum_gap_update_pallas(
+                p, v, g, eta=ETA, beta=BETA, lag=jnp.int32(3),
+                interpret=interp), tree),
+        ("apply", "pytree"): (
+            apply_naive_tree, apply_fused_tree,
+            lambda c, v, nw: fused_weighted_apply_pallas(
+                c, v, nw, w=W, eta=ETA, beta=BETA, interpret=interp),
+            tree),
+    }
+
+
+TRAFFIC = {"update": 7 / 5, "apply": 8 / 5}
+
+
+def run(fast: bool = True):
+    reps = 3 if fast else 10
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for n in SIZES:
+        for (entry, form), (naive, fused, pallas, args) in \
+                _variants(n).items():
+            t_naive = _time(naive, *args, reps=reps)
+            t_fused = _time(fused, *args, reps=reps)
+            t_pallas = _time(pallas, *args, reps=reps)
+            rows.append({
+                "bench": "kernels", "entry": entry, "form": form,
+                "n_params": n,
+                "naive_ms": round(t_naive, 3),
+                "fused_ms": round(t_fused, 3),
+                "pallas_ms": round(t_pallas, 3),
+                "pallas_mode": "tpu" if on_tpu else "interpret",
+                "speedup_host": round(t_naive / t_fused, 3),
+                "traffic_ratio_model": round(TRAFFIC[entry], 3),
+            })
+
+    from benchmarks.common import write_json
+    write_json(rows, JSON_PATH,
+               meta={"bench": "kernels", "fast": fast,
+                     "backend": jax.default_backend()})
+    return rows
+
+
+def main():
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    emit(run(fast=args.fast))
 
 
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run())
+    main()

@@ -32,6 +32,13 @@ scan costs over the paper's replace rule (the rule's ``scan_weight``
 runs INSIDE the fused train+push program, so the expected answer is
 ~1.0x).
 
+A kernel on/off pair (vectorized engine at n=64) rides along too: the
+same workload with ``kernel="reference"`` (jnp traversals) vs
+``kernel="pallas"`` (the fused_update apply kernel in the push scan),
+with ``slowdown_vs_reference`` as the tracked column. Off-TPU the Pallas
+path runs in interpret mode, so on CI hosts this pins
+overhead-neutrality rather than claiming a hardware speedup.
+
 Besides the CSV stream every run persists ``BENCH_real_scale.json`` (see
 ``common.write_json``) so the real-mode scaling trajectory is
 machine-readable across PRs.
@@ -56,18 +63,18 @@ JSON_PATH = "BENCH_real_scale.json"
 
 
 def _run(engine: str, n: int, horizon: int, fast: bool, seed: int = 0,
-         aggregation: str = "replace"):
+         aggregation: str = "replace", kernel: str = "reference"):
     if fast:
         backend = LeNetBackend(n, sync=False, n_train=n, n_test=256,
                                seed=seed, eval_every=1200, batch_size=1,
                                partition="uniform", cohort_pad=64,
-                               aggregation=aggregation)
+                               aggregation=aggregation, kernel=kernel)
         fleet = CustomCatalogFleet([TESTBED["Pixel2"]])
         arrival_p = 0.0
     else:
         backend = LeNetBackend(n, sync=False, n_train=400 * n, n_test=1000,
                                seed=seed, eval_every=1200, batch_size=20,
-                               aggregation=aggregation)
+                               aggregation=aggregation, kernel=kernel)
         fleet = None                     # Table II round-robin
         arrival_p = 0.004
     cfg = SimConfig(policy="immediate", n_users=n, horizon_s=horizon,
@@ -91,7 +98,7 @@ def run(fast: bool = True):
             wall, r = _run(engine, n, horizon, fast)
             rows.append({
                 "bench": "real_scale", "engine": engine, "n_users": n,
-                "aggregation": "replace",
+                "aggregation": "replace", "kernel": "reference",
                 "horizon_s": horizon, "fast": fast,
                 "wall_s": round(wall, 3),
                 "warmup_s": round(warmup_s, 3),
@@ -103,6 +110,7 @@ def run(fast: bool = True):
                 "speedup_vs_loop":
                     round(loop_wall / wall, 2) if loop_wall else "",
                 "slowdown_vs_replace": "",
+                "slowdown_vs_reference": "",
             })
             if engine == "loop":
                 loop_wall = wall
@@ -117,7 +125,7 @@ def run(fast: bool = True):
         wall, r = _run("vectorized", AGG_N, horizon, fast, aggregation=agg)
         rows.append({
             "bench": "real_scale", "engine": "vectorized",
-            "n_users": AGG_N, "aggregation": agg,
+            "n_users": AGG_N, "aggregation": agg, "kernel": "reference",
             "horizon_s": horizon, "fast": fast,
             "wall_s": round(wall, 3),
             "warmup_s": round(warmup_s, 3),
@@ -129,14 +137,45 @@ def run(fast: bool = True):
             "speedup_vs_loop": "",
             "slowdown_vs_replace":
                 round(wall / replace_wall, 2) if replace_wall else "",
+            "slowdown_vs_reference": "",
         })
         if agg == "replace":
             replace_wall = wall
 
+    # kernel on/off pair: the fused-apply push scan vs the reference
+    # traversals on the same workload. Off-TPU the Pallas path runs
+    # interpret mode, so the column tracks overhead-neutrality there,
+    # not a hardware speedup.
+    ref_wall = None
+    for kernel in ("reference", "pallas"):
+        warmup_s, _ = _run("vectorized", AGG_N, warmup_horizon, fast,
+                           kernel=kernel)
+        wall, r = _run("vectorized", AGG_N, horizon, fast, kernel=kernel)
+        rows.append({
+            "bench": "real_scale", "engine": "vectorized",
+            "n_users": AGG_N, "aggregation": "replace", "kernel": kernel,
+            "horizon_s": horizon, "fast": fast,
+            "wall_s": round(wall, 3),
+            "warmup_s": round(warmup_s, 3),
+            "updates": r.updates,
+            "updates_per_s": round(r.updates / wall, 1),
+            "final_acc": round(r.accuracy[-1][1], 4) if r.accuracy
+            else "",
+            "energy_kj": round(r.energy_j / 1e3, 2),
+            "speedup_vs_loop": "",
+            "slowdown_vs_replace": "",
+            "slowdown_vs_reference":
+                round(wall / ref_wall, 2) if ref_wall else "",
+        })
+        if kernel == "reference":
+            ref_wall = wall
+
     from benchmarks.common import write_json
+    import jax
     write_json(rows, JSON_PATH,
                meta={"bench": "real_scale", "fast": fast,
-                     "policy": "immediate", "ml": "lenet"})
+                     "policy": "immediate", "ml": "lenet",
+                     "backend": jax.default_backend()})
     return rows
 
 

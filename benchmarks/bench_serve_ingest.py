@@ -9,7 +9,10 @@ with a cohort of synthetic clients pushing continuously, and measures
   commit, from the pipeline's per-push latency log),
 * the **wire size** per push under the configured codec,
 
-over the matrix shard count x model size x compression codec. The
+over the matrix shard count x model size x compression codec, with a
+``--kernel`` flag selecting the per-shard apply path (reference jnp vs
+the fused Pallas entry; a single on/off pair row for the other mode
+rides along so the JSON always carries both columns). The
 monitor rides along (every packet heartbeats, every commit is a cadence
 sample, a periodic sweep runs) so the measured path is the production
 one, fault machinery included.
@@ -55,14 +58,15 @@ def _percentile(xs, q):
 
 
 def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
-               warmup: int):
+               warmup: int, kernel: str = "reference"):
     from repro.fault.monitor import FleetMonitor
     from repro.serve import (IngestPipeline, ServeClient,
                              ShardedAsyncParameterServer)
 
     server = ShardedAsyncParameterServer(_params(n_params), eta=0.05,
                                          beta=0.9, n_shards=n_shards,
-                                         history_depth=4 * N_CLIENTS)
+                                         history_depth=4 * N_CLIENTS,
+                                         kernel=kernel)
     pipe = IngestPipeline(server, capacity=8 * n_shards * N_CLIENTS,
                           codec=codec,
                           monitor=FleetMonitor(timeout_slots=10 ** 6))
@@ -108,6 +112,7 @@ def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
         "model_params": n_params,
         "n_shards": n_shards,
         "codec": codec,
+        "kernel": kernel,
         "n_pushes": committed,
         "pushes_per_sec": round(committed / wall, 2),
         "apply_p50_ms": round(_percentile(lat_ms, 50), 3),
@@ -119,7 +124,7 @@ def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
     }
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, kernel: str = "reference"):
     sizes = SIZES_FAST if fast else SIZES_FULL
     shard_counts = SHARDS_FAST if fast else SHARDS_FULL
     n_pushes = 60 if fast else 300
@@ -129,12 +134,19 @@ def run(fast: bool = True):
         for n_shards in shard_counts:
             for codec in CODECS:
                 rows.append(_bench_one(n_params, n_shards, codec,
-                                       n_pushes, warmup))
+                                       n_pushes, warmup, kernel=kernel))
+    # kernel on/off pair at the uncompressed corner: the per-shard
+    # fused-apply kernel vs the jitted jnp apply. Off-TPU the Pallas
+    # entry runs interpret mode — the pair pins overhead there, not a
+    # hardware speedup.
+    other = "pallas" if kernel == "reference" else "reference"
+    rows.append(_bench_one(sizes[0], shard_counts[-1], "none", n_pushes,
+                           warmup, kernel=other))
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,
                meta={"bench": "serve_ingest", "fast": fast,
-                     "n_clients": N_CLIENTS})
+                     "n_clients": N_CLIENTS, "kernel": kernel})
     return rows
 
 
@@ -144,8 +156,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", default=True)
     ap.add_argument("--full", dest="fast", action="store_false")
+    ap.add_argument("--kernel", default="reference",
+                    choices=("auto", "pallas", "reference"),
+                    help="apply-kernel mode for the matrix rows; the "
+                         "on/off pair row always runs the other mode")
     args = ap.parse_args()
-    emit(run(fast=args.fast))
+    emit(run(fast=args.fast, kernel=args.kernel))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-"""Real-ML coupling for the simulator (Fig. 5): LeNet-5 on cifarlike data,
-momentum SGD (Eq. 1), async parameter server vs FedAvg.
+"""Real-ML coupling for the simulator (Fig. 5): real models on cifarlike
+data, momentum SGD (Eq. 1), async parameter server vs FedAvg.
 
 Two ways to couple a schedule to actual JAX training:
 
@@ -17,6 +17,19 @@ Two ways to couple a schedule to actual JAX training:
   engine, now a thin adapter over ``LeNetBackend.hooks()``. Same
   construction order, same rng stream, same jitted per-client epoch, so
   pre-existing seeded loop runs reproduce bit-for-bit.
+
+The batched protocol is model-agnostic: ``ImageClassifierBackend`` holds
+all the cohort batching / fused-scan machinery parameterized by three
+module-level model functions (init / loss / logits), and ``LeNetBackend``
+(the paper's workload) and ``MLPBackend`` (models/mlp.py) are thin
+subclasses — the jitted cohort programs key on the loss function as a
+static argument, so each model compiles its own executables while sharing
+every line of driver code. The push-apply side is kernel-switchable
+(``kernel="pallas"|"reference"|"auto"``): under ``"pallas"`` the fused
+finish scan flattens the model once and applies every push with the
+single-HBM-pass ``fused_apply_2d`` Pallas kernel — the per-push momentum
+norm chains through the scan carry as a scalar instead of re-traversing
+the pytree.
 
 Equivalence contract (pinned by tests/test_real_mode.py): under the
 paper's queue regime (L_b large enough that H stays 0, where the online
@@ -42,7 +55,11 @@ from repro.core.policies import _jax_gradient_gap
 from repro.core.server import AsyncParameterServer, SyncServer
 from repro.core.staleness import gradient_gap
 from repro.data.synthetic import cifarlike_dataset, dirichlet_partition
+from repro.kernels.fused_update import kernel_interpret, resolve_kernel_mode
+from repro.kernels.fused_update.kernel import LANES, fused_apply_2d
+from repro.kernels.fused_update.ops import clamp_block_rows
 from repro.models.lenet import init_lenet, lenet_logits, lenet_loss
+from repro.models.mlp import init_mlp, mlp_logits, mlp_loss
 
 
 class BatchedMLBackend:
@@ -178,10 +195,11 @@ def make_backend(ml: Union[str, BatchedMLBackend], n_users: int, *,
 # Jitted cohort programs (module-level so every backend instance with the
 # same data shapes and hyperparameters shares one compiled executable).
 # ---------------------------------------------------------------------------
-def _masked_epoch(params, idx, mask, flat_x, flat_y, eta, beta):
+def _masked_epoch(params, idx, mask, flat_x, flat_y, eta, beta, loss_fn):
     """One local momentum-SGD epoch (Eq. 1, the Client._epoch step rule)
     over minibatches ``flat_x[idx]``; masked steps are no-ops (ragged
-    shards / padding lanes)."""
+    shards / padding lanes). ``loss_fn`` is the backend's model loss
+    (a module-level function — the jit static-arg key)."""
     bx = flat_x[idx]                       # (S, B, H, W, C)
     by = flat_y[idx]                       # (S, B)
     v0 = jax.tree.map(jnp.zeros_like, params)
@@ -190,7 +208,7 @@ def _masked_epoch(params, idx, mask, flat_x, flat_y, eta, beta):
         p, v = carry
         x, y, m = xs
         grads, _ = jax.grad(
-            lambda q: lenet_loss(q, {"images": x, "labels": y}),
+            lambda q: loss_fn(q, {"images": x, "labels": y}),
             has_aux=True)(p)
         v2 = jax.tree.map(lambda vv, g: beta * vv + (1 - beta) * g,
                           v, grads)
@@ -240,11 +258,14 @@ def _perm_bank(key, n_epochs, n_i):
     return key, perms
 
 
-@functools.partial(jax.jit, static_argnames=("eta", "beta", "shared"))
-def _train_chunk(params, idx, mask, flat_x, flat_y, eta, beta, shared):
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "beta", "shared", "loss_fn"))
+def _train_chunk(params, idx, mask, flat_x, flat_y, eta, beta, shared,
+                 loss_fn):
     """vmap'd masked epoch over one cohort chunk."""
     return jax.vmap(
-        lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta, beta)
+        lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta, beta,
+                                      loss_fn)
     )(_lanes(params, idx, shared), idx, mask)
 
 
@@ -252,24 +273,29 @@ _FINISH_FN_CACHE: dict = {}
 _FINISH_FN_CACHE_MAX = 16
 
 
-def _finish_chunk_fn(rule, eta, beta, shared, need_gaps):
-    """The fused-finish executable for one (rule, hyperparams, layout)
-    combination, memoized on ``rule.jax_cache_key()`` — the same keying
-    the trace engine's scan cache uses, so fresh knob-configured
-    instances of operand-driven rules (knobs ride the traced ``agg_ops``)
-    share ONE compiled program instead of retracing the most expensive
-    jit in the repo per instance."""
-    key = (rule.jax_cache_key(), eta, beta, shared, need_gaps)
+def _finish_chunk_fn(rule, eta, beta, shared, need_gaps, loss_fn, kernel):
+    """The fused-finish executable for one (rule, hyperparams, layout,
+    model, kernel) combination, memoized on ``rule.jax_cache_key()`` — the
+    same keying the trace engine's scan cache uses, so fresh
+    knob-configured instances of operand-driven rules (knobs ride the
+    traced ``agg_ops``) share ONE compiled program instead of retracing
+    the most expensive jit in the repo per instance. ``loss_fn`` (the
+    model, a module-level function) and ``kernel`` (a resolved
+    "pallas"/"reference") key alongside."""
+    key = (rule.jax_cache_key(), eta, beta, shared, need_gaps, loss_fn,
+           kernel)
     fn = _FINISH_FN_CACHE.pop(key, None)    # pop+reinsert = LRU order
     if fn is None:
-        fn = _build_finish_chunk(rule, eta, beta, shared, need_gaps)
+        fn = _build_finish_chunk(rule, eta, beta, shared, need_gaps,
+                                 loss_fn, kernel)
         if len(_FINISH_FN_CACHE) >= _FINISH_FN_CACHE_MAX:
             _FINISH_FN_CACHE.pop(next(iter(_FINISH_FN_CACHE)))
     _FINISH_FN_CACHE[key] = fn
     return fn
 
 
-def _build_finish_chunk(rule, eta, beta, shared, need_gaps):
+def _build_finish_chunk(rule, eta, beta, shared, need_gaps, loss_fn,
+                        kernel):
     """Fused async finish: train the whole chunk (vmap) then apply the
     pushes sequentially in lane order (lax.scan) with the aggregation
     rule's mixing weight (core/aggregation.py — the rule's traced
@@ -289,6 +315,14 @@ def _build_finish_chunk(rule, eta, beta, shared, need_gaps):
     Eq. (4) gap is evaluated against in the loop oracle (the norm left
     by the previous finisher). Invalid (padding) lanes leave the carry
     untouched.
+
+    ``kernel="pallas"`` swaps the per-push pytree traversals for the
+    single-HBM-pass ``fused_apply_2d`` kernel: the global params/momentum
+    ride the scan carry as one padded (rows, 128) f32 matrix (flattened
+    ONCE per chunk, not per push), each push is one kernel dispatch
+    (mix + momentum + Sum(v'^2)), and the pre-push Eq. (4) norm is
+    ``sqrt`` of the carried sum-of-squares scalar — no
+    ``_tree_l2_norm_traced`` traversals anywhere in the scan.
     """
     replace = isinstance(rule, ReplaceRule)
     # per-step pre-push norms feed the push-log gaps AND gap-reading
@@ -296,13 +330,17 @@ def _build_finish_chunk(rule, eta, beta, shared, need_gaps):
     # reductions per push)
     need_norms = need_gaps or rule.needs_gap
     eta_s = max(eta, 1e-12)
+    if kernel == "pallas":
+        return _build_finish_chunk_pallas(rule, eta, beta, shared,
+                                          need_norms, loss_fn, replace,
+                                          eta_s)
 
     @jax.jit
     def finish(params, idx, mask, valid, lags, uids, agg_carry, agg_ops,
                server_params, server_v, flat_x, flat_y):
         trained = jax.vmap(
             lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta,
-                                          beta)
+                                          beta, loss_fn)
         )(_lanes(params, idx, shared), idx, mask)
 
         def push_step(carry, xs):
@@ -340,9 +378,103 @@ def _build_finish_chunk(rule, eta, beta, shared, need_gaps):
     return finish
 
 
-@register_ml_backend
-class LeNetBackend(BatchedMLBackend):
-    """The paper's workload: LeNet-5 on cifarlike shards, batched.
+def _build_finish_chunk_pallas(rule, eta, beta, shared, need_norms,
+                               loss_fn, replace, eta_s):
+    """The Pallas twin of ``_build_finish_chunk``'s push scan (same
+    signature, same outputs to rtol): train the chunk, flatten the global
+    (params, momentum) to one padded (rows, 128) f32 carry, then apply
+    each push as ONE ``fused_apply_2d`` dispatch. The post-push
+    sum-of-squares chains through the carry, so each push's pre-norm
+    (Eq. 4) is a scalar ``sqrt`` and the final ``||v||`` costs nothing —
+    the reference path's 10-leaf tree reductions per push disappear.
+    Replace degenerates to w=1 through the same kernel (mixed == t_j)."""
+    interpret = kernel_interpret()
+
+    @jax.jit
+    def finish(params, idx, mask, valid, lags, uids, agg_carry, agg_ops,
+               server_params, server_v, flat_x, flat_y):
+        trained = jax.vmap(
+            lambda p, i, m: _masked_epoch(p, i, m, flat_x, flat_y, eta,
+                                          beta, loss_fn)
+        )(_lanes(params, idx, shared), idx, mask)
+
+        # ---- flatten ONCE per chunk to the kernel's (rows, 128) layout
+        leaves = jax.tree.leaves(server_params)
+        treedef = jax.tree.structure(server_params)
+        shapes = [l.shape for l in leaves]
+        sizes = [l.size for l in leaves]
+        n_tot = sum(sizes)
+        block_rows = clamp_block_rows(n_tot)
+        per_block = block_rows * LANES
+        padded = -(-n_tot // per_block) * per_block
+        rows = padded // LANES
+
+        def flat2d(tree):
+            f = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                 for l in jax.tree.leaves(tree)])
+            return jnp.pad(f, (0, padded - n_tot)).reshape(rows, LANES)
+
+        p2 = flat2d(server_params)
+        v2 = flat2d(server_v)
+        # trained lanes: (C, rows, 128), padded along the flat axis —
+        # padding lanes mix 0 with 0 and add 0 to the norm
+        t2 = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32)
+             for l in jax.tree.leaves(trained)], axis=1)
+        t2 = jnp.pad(t2, ((0, 0), (0, padded - n_tot)))
+        t2 = t2.reshape(t2.shape[0], rows, LANES)
+        # entry sum-of-squares: one reduction per CHUNK; every in-scan
+        # pre-norm after this is carried forward by the kernel
+        sumsq0 = jnp.sum(v2 * v2)
+        inv_eta = 1.0 / eta_s
+
+        def push_step(carry, xs):
+            p, v, sq = carry
+            t_j, ok, lag_j, uid_j = xs
+            vnorm_pre = jnp.sqrt(sq) if need_norms \
+                else jnp.asarray(0.0, jnp.float32)
+            if replace:
+                w = jnp.asarray(1.0, jnp.float32)
+            else:
+                gap_j = _jax_gradient_gap(vnorm_pre, lag_j, eta, beta)
+                pv = SimpleNamespace(jnp=jnp, lag=lag_j, gap=gap_j,
+                                     v_norm=vnorm_pre, users=uid_j,
+                                     consts=agg_ops,
+                                     float_dtype=vnorm_pre.dtype)
+                _, w = rule.scan_weight(agg_carry, pv)
+            mixed, v_new, sq_new = fused_apply_2d(
+                p, v, t_j, w, inv_eta, beta, block_rows=block_rows,
+                interpret=interpret)
+            p = jnp.where(ok, mixed, p)
+            v = jnp.where(ok, v_new, v)
+            sq = jnp.where(ok, sq_new, sq)
+            return (p, v, sq), (vnorm_pre, w)
+
+        (p2, v2, sq), (vnorms, ws) = jax.lax.scan(
+            push_step, (p2, v2, sumsq0), (t2, valid, lags, uids))
+
+        def unflat(f2):
+            f = f2.reshape(-1)[:n_tot]
+            out, off = [], 0
+            for shp, sz in zip(shapes, sizes):
+                out.append(f[off:off + sz].reshape(shp))
+                off += sz
+            return treedef.unflatten(out)
+
+        return unflat(p2), unflat(v2), vnorms, ws, jnp.sqrt(sq)
+
+    return finish
+
+
+class ImageClassifierBackend(BatchedMLBackend):
+    """Model-agnostic batched backend: any image classifier on cifarlike
+    shards. Subclasses bind three module-level model functions
+    (``model_init`` / ``model_loss`` / ``model_logits``) and a registry
+    ``name`` — everything else (cohort batching, permutation banks, the
+    fused train+push scan, kernel dispatch) lives here once. The model
+    functions are staticmethods of MODULE-LEVEL functions on purpose:
+    their identity is the jit static-arg and finish-cache key, so every
+    instance of a subclass shares one set of compiled executables.
 
     Per-client pulled parameters are pytree REFERENCES (``_inflight``),
     so a pull costs zero device work; at train time a cohort whose lanes
@@ -368,14 +500,16 @@ class LeNetBackend(BatchedMLBackend):
     rules: replace, fedasync_poly, gap_aware, hetero_aware —
     core/aggregation.py), the weights mixed inside the push scan with no
     per-push host round-trips; only custom numpy-only rules fall back to
-    per-push server calls.
-
-    noise=8.0 calibrates cifarlike difficulty so LeNet accuracy climbs
-    gradually over many local epochs (CIFAR-10-like convergence dynamics)
-    rather than saturating after one epoch.
+    per-push server calls. ``kernel="pallas"`` routes every push apply —
+    the server's and the fused scan's — through the single-HBM-pass
+    Pallas kernel (``kernels/fused_update``); the default ``"auto"``
+    keeps the bit-stable reference path off-TPU.
     """
 
-    name = "lenet"
+    # bound by subclasses: module-level (init, loss, logits) functions
+    model_init: staticmethod
+    model_loss: staticmethod
+    model_logits: staticmethod
 
     def __init__(self, n_users: int, *, sync: bool = False,
                  eta: float = 0.01, beta: float = 0.9,
@@ -384,7 +518,8 @@ class LeNetBackend(BatchedMLBackend):
                  aggregation: Union[str, AggregationRule] = "replace",
                  noise: float = 8.0,
                  seed: int = 0, eval_every: int = 600,
-                 cohort_pad: int = 16, partition: str = "dirichlet"):
+                 cohort_pad: int = 16, partition: str = "dirichlet",
+                 kernel: str = "auto"):
         # construction order (data -> shards -> clients -> params -> server)
         # is pinned: it is the historical make_ml_hooks rng stream, and the
         # loop-oracle golden (tests/data/real_mode_golden.json) depends on it
@@ -405,15 +540,18 @@ class LeNetBackend(BatchedMLBackend):
                              "'dirichlet' or 'uniform'")
         self.clients = [
             Client(i, jnp.asarray(images[s]), jnp.asarray(labels[s]),
-                   lenet_loss, batch_size=batch_size, eta=eta, beta=beta)
+                   self.model_loss, batch_size=batch_size, eta=eta,
+                   beta=beta)
             for i, s in enumerate(shards)]
-        params0 = init_lenet(jax.random.PRNGKey(seed))
+        params0 = self.model_init(jax.random.PRNGKey(seed))
         self.server: object
         if sync:
             self.server = SyncServer(params0)
         else:
             self.server = AsyncParameterServer(params0, eta=eta, beta=beta,
-                                               aggregation=aggregation)
+                                               aggregation=aggregation,
+                                               kernel=kernel)
+        self.kernel = resolve_kernel_mode(kernel)
         self.n_users = n_users
         self.sync = sync
         self.eta = eta
@@ -458,10 +596,11 @@ class LeNetBackend(BatchedMLBackend):
 
         test_x_j = jnp.asarray(test_x)
         test_y_j = jnp.asarray(test_y)
+        logits_fn = self.model_logits
 
         @jax.jit
         def _acc(params):
-            logits = lenet_logits(params, test_x_j)
+            logits = logits_fn(params, test_x_j)
             return jnp.mean((jnp.argmax(logits, -1) == test_y_j)
                             .astype(jnp.float32))
 
@@ -587,7 +726,8 @@ class LeNetBackend(BatchedMLBackend):
         for params, shared, idx, mask, valid, k in self._cohort_chunks(uids):
             out = _train_chunk(params, idx, mask,
                                self._flat_x, self._flat_y,
-                               self.eta, self.beta, shared)
+                               self.eta, self.beta, shared,
+                               self.model_loss)
             parts.append(jax.tree.map(lambda a: a[:k], out))
         if len(parts) == 1:
             return parts[0]
@@ -628,7 +768,7 @@ class LeNetBackend(BatchedMLBackend):
             uid_c[:k] = uids[pos:pos + k]
             pos += k
             fn = _finish_chunk_fn(rule, self.eta, self.beta, shared,
-                                  need_gaps)
+                                  need_gaps, self.model_loss, self.kernel)
             p, v, vn, ws, vn_out = fn(
                 params, idx, mask, valid, jnp.asarray(lag_c),
                 jnp.asarray(uid_c), self._agg_carry, agg_ops, p, v,
@@ -682,6 +822,38 @@ class LeNetBackend(BatchedMLBackend):
 
     def evaluate(self) -> float:
         return float(self._acc(self.server.params))
+
+
+@register_ml_backend
+class LeNetBackend(ImageClassifierBackend):
+    """The paper's workload: LeNet-5 (Sec. VI, ~62k params) on cifarlike
+    shards. Construction order and rng stream are pinned by the loop
+    oracle's golden (tests/data/real_mode_golden.json) — the model
+    functions are the only thing this subclass adds.
+
+    noise=8.0 calibrates cifarlike difficulty so LeNet accuracy climbs
+    gradually over many local epochs (CIFAR-10-like convergence dynamics)
+    rather than saturating after one epoch.
+    """
+
+    name = "lenet"
+    model_init = staticmethod(init_lenet)
+    model_loss = staticmethod(lenet_loss)
+    model_logits = staticmethod(lenet_logits)
+
+
+@register_ml_backend
+class MLPBackend(ImageClassifierBackend):
+    """Second real model (``Scenario(ml="mlp")``): a dense MLP
+    (models/mlp.py) with a different pytree structure than LeNet (no conv
+    leaves) through the identical fused train+push scan — the proof that
+    the batched protocol and the Pallas apply path are not LeNet-shaped.
+    Pinned by its own golden (tests/data/mlp_golden.json)."""
+
+    name = "mlp"
+    model_init = staticmethod(init_mlp)
+    model_loss = staticmethod(mlp_loss)
+    model_logits = staticmethod(mlp_logits)
 
 
 def make_ml_hooks(n_users: int, *, sync: bool = False, eta: float = 0.01,

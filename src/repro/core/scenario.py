@@ -128,6 +128,12 @@ class Scenario:
             if resolve_aggregation(self.config.aggregation).name \
                     != "replace":
                 kw.setdefault("aggregation", self.config.aggregation)
+            # same guard for the apply-kernel knob: the default "auto"
+            # is the backend's own default, so only explicit requests
+            # are threaded (and custom backends without the kwarg keep
+            # building)
+            if self.config.kernel != "auto":
+                kw.setdefault("kernel", self.config.kernel)
             backend = make_backend(self.ml, self.config.n_users,
                                    sync=self.policy.sync_rounds, **kw)
         return FederatedSim(self.config, ml_hooks=ml_hooks,

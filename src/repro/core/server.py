@@ -14,6 +14,12 @@ The server also maintains the global momentum-norm estimate that drives the
 Eq. (4) gradient-gap predictions: v <- beta * v + (1-beta) * s with
 s = (theta_old - theta_new) / eta, so only ||v||2 (a scalar) ever travels to
 clients — the paper's O(1)-per-client distributed implementation.
+
+``kernel="pallas"`` routes the entire apply (mix + momentum + post-update
+norm) through the single-HBM-pass Pallas kernel
+(``kernels/fused_update.fused_weighted_apply_pallas``) instead of the
+three-traversal reference; ``"auto"`` (the default) picks Pallas on TPU and
+the bit-stable reference elsewhere.
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.fused_update import (fused_weighted_apply_pallas,
+                                    kernel_interpret, resolve_kernel_mode)
 from .aggregation import AggregationRule, configure_aggregation
 from .staleness import LagTracker, gradient_gap, tree_l2_norm
 
@@ -53,14 +61,18 @@ class AsyncParameterServer:
     def __init__(self, params: Any, eta: float, beta: float,
                  aggregation: Union[str, AggregationRule] = "replace",
                  fedasync_alpha: float = 0.6, fedasync_a: float = 0.5,
-                 gap_ref: float = 1.0, fleet=None):
+                 gap_ref: float = 1.0, fleet=None, kernel: str = "auto"):
         """``aggregation`` is a registry name or ``AggregationRule``
         instance (core/aggregation.py). The legacy knob kwargs
         (``fedasync_alpha``/``fedasync_a``/``gap_ref``) still construct
         the matching rule when a name is given with non-default values;
         new code should pass a configured rule instance. ``fleet`` binds
         the run's ``FleetSpec`` for fleet-conditioned rules
-        (``hetero_aware``) — ``FederatedSim`` binds it automatically."""
+        (``hetero_aware``) — ``FederatedSim`` binds it automatically.
+        ``kernel`` selects the push-apply implementation:
+        ``"pallas"`` fuses mix + momentum + norm into one kernel pass,
+        ``"reference"`` keeps the multi-traversal jnp path (bit-stable),
+        ``"auto"`` = Pallas on TPU, reference elsewhere."""
         self.params = params
         self.eta = eta
         self.beta = beta
@@ -69,6 +81,7 @@ class AsyncParameterServer:
             fedasync_a=fedasync_a, gap_ref=gap_ref)
         self.aggregation = self.rule.name
         self.fleet_spec = fleet
+        self.kernel = resolve_kernel_mode(kernel)
         self.lag_tracker = LagTracker()
         self._v = jax.tree.map(jnp.zeros_like, params)
         self.v_norm = 0.0
@@ -98,13 +111,24 @@ class AsyncParameterServer:
         weight = float(self.rule.weight(lag, gap, self.v_norm,
                                         fleet=self.fleet_spec,
                                         users=client_id))
-        self.params = _tree_mix(new_params, old, weight)
+        if self.kernel == "pallas":
+            # one fused dispatch over the whole model: mix, server momentum,
+            # and ||v'||_2 come out of a single HBM pass — no tree_l2_norm
+            # re-traversal
+            self.params, self._v, v_norm = fused_weighted_apply_pallas(
+                old, self._v, new_params, w=weight, eta=self.eta,
+                beta=self.beta, interpret=kernel_interpret())
+            self.v_norm = float(v_norm)
+        else:
+            self.params = _tree_mix(new_params, old, weight)
 
-        # server momentum for Eq. (4): s = (theta_old - theta_new)/eta
-        s = jax.tree.map(lambda o, n: (o - n) / max(self.eta, 1e-12), old, self.params)
-        self._v = jax.tree.map(lambda v, g_: self.beta * v + (1 - self.beta) * g_,
-                               self._v, s)
-        self.v_norm = tree_l2_norm(self._v)
+            # server momentum for Eq. (4): s = (theta_old - theta_new)/eta
+            s = jax.tree.map(lambda o, n: (o - n) / max(self.eta, 1e-12),
+                             old, self.params)
+            self._v = jax.tree.map(
+                lambda v, g_: self.beta * v + (1 - self.beta) * g_,
+                self._v, s)
+            self.v_norm = tree_l2_norm(self._v)
         return PushResult(lag=lag, gap_estimate=gap, applied_weight=weight,
                           version=self.lag_tracker.version)
 

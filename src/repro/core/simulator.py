@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+from ..kernels.fused_update import KERNEL_MODES
 from .aggregation import (AggregationRule, aggregation_support,
                           resolve_aggregation)
 from .arrivals import ArrivalProcess, resolve_arrival_or_default
@@ -80,6 +81,12 @@ class SimConfig:
     # Every engine logs the applied weight per push (push_log "weight"
     # column); in real mode the weight actually mixes the global model.
     aggregation: Union[str, AggregationRule] = "replace"
+    # how the apply is COMPUTED (kernels/fused_update): "pallas" fuses
+    # mix + momentum + Eq. 4 norm into one HBM pass, "reference" keeps
+    # the multi-dispatch jnp path (bit-stable with the goldens), "auto"
+    # picks Pallas on TPU and reference elsewhere. Only real-ML mode
+    # touches parameter pytrees, so the knob is a no-op in trace mode.
+    kernel: str = "auto"
     ready_delay: int = 5            # slots between push and re-arrival
     trace_every: int = 30           # slots between trace samples
     include_scheduler_overhead: bool = False
@@ -129,6 +136,9 @@ class SimConfig:
                 "which falls back to the loop oracle)")
         if self.ml_mode not in ("trace", "real"):
             raise ValueError(f"unknown ml_mode {self.ml_mode!r}")
+        if self.kernel not in KERNEL_MODES:
+            raise ValueError(f"unknown kernel {self.kernel!r}; "
+                             f"expected one of {KERNEL_MODES}")
         # Aggregation-rule validation mirrors the policy validation: the
         # name must resolve, and a rule whose supports_jax flag claims a
         # traced path must actually implement scan_weight (rules without

@@ -1,2 +1,5 @@
-from .ops import fused_momentum_gap_update_pallas, fused_update_flat
-from .ref import fused_update_flat_ref
+from .ops import (KERNEL_MODES, clamp_block_rows, fused_apply_flat,
+                  fused_momentum_gap_update_pallas, fused_update_flat,
+                  fused_weighted_apply_pallas, kernel_interpret,
+                  resolve_kernel_mode)
+from .ref import fused_apply_flat_ref, fused_update_flat_ref

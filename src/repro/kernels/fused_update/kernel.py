@@ -1,17 +1,31 @@
-"""Pallas TPU kernel: fused momentum update + gradient-gap partial norm.
+"""Pallas TPU kernels: fused momentum update / server apply + gap norm.
 
-The paper's per-push work over every parameter (Eq. 1 + Eq. 4) is three
-HBM-bound passes when written naively:
+Two kernels share one layout and one motivation. The paper's per-push
+work over every parameter is HBM-bound either way — the arithmetic
+intensity is so low (~4 FLOPs / 20 bytes) that memory traffic IS the
+cost — so each fuses its multi-pass naive schedule into ONE pass with
+the sum-of-squares reduction accumulated on-chip.
+
+``_kernel`` (the CLIENT step, Eq. 1 + Eq. 4):
 
     v'     = beta * v + (1 - beta) * g          (read v, g; write v')
     theta' = theta - eta * v'                   (read theta, v'; write theta')
     gap    = scale * ||v'||_2                   (read v')
 
-i.e. 5 reads + 2 writes of N floats. This kernel fuses them into ONE pass:
-3 reads (theta, v, g) + 2 writes (theta', v') and the sum-of-squares
-reduction accumulated on-chip — the arithmetic intensity is so low
-(~4 FLOPs / 20 bytes) that HBM traffic IS the cost, so the fusion is a
-~7/5 = 1.4x traffic cut vs. the best 2-pass schedule and ~2x vs. naive.
+i.e. 5 reads + 2 writes of N floats naively; fused: 3 reads + 2 writes —
+a ~7/5 = 1.4x traffic cut vs. the best 2-pass schedule, ~2x vs. naive.
+
+``_apply_kernel`` (the SERVER push apply — the aggregation hot path of
+``core/server.py`` / ``serve/server.py`` / the fused real-ML push scan):
+
+    mixed = w * new + (1 - w) * cur             (read new, cur; write mixed)
+    s     = (cur - mixed) / eta                 (re-read cur, mixed)
+    v'    = beta * v + (1 - beta) * s           (read v; write v')
+    norm  = ||v'||_2                            (re-read v')
+
+i.e. 7 array passes naively (what ``AsyncParameterServer.push`` +
+``tree_l2_norm`` dispatch); fused: 3 reads (cur, v, new) + 2 writes
+(mixed, v') = the same 1.4x/2x traffic cut, per push.
 
 Layout: the parameter pytree is flattened and concatenated to a single f32
 vector, padded and viewed as (rows, 128) — the last dim matches the TPU
@@ -72,3 +86,52 @@ def fused_update_2d(theta, v, g, eta, beta, *, block_rows: int = DEFAULT_BLOCK_R
         name="fused_momentum_gap_update",
     )(theta, v, g, eta, beta)
     return theta_o, v_o, jnp.sum(partials)
+
+
+def _apply_kernel(cur_ref, v_ref, new_ref, w_ref, inv_eta_ref, beta_ref,
+                  mixed_ref, v_out_ref, partial_ref):
+    w = w_ref[0]
+    inv_eta = inv_eta_ref[0]
+    beta = beta_ref[0]
+    mixed = w * new_ref[...] + (1.0 - w) * cur_ref[...]
+    s = (cur_ref[...] - mixed) * inv_eta
+    v_new = beta * v_ref[...] + (1.0 - beta) * s
+    mixed_ref[...] = mixed
+    v_out_ref[...] = v_new
+    partial_ref[0, 0] = jnp.sum(v_new * v_new)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_apply_2d(cur, v, new, w, inv_eta, beta, *,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False):
+    """Server push apply. cur/v/new: (rows, 128) f32, rows % block_rows == 0;
+    ``w``/``inv_eta``/``beta`` are traced scalars (SMEM operands), so every
+    push of a given shape shares one executable regardless of rule/knobs.
+
+    Returns (mixed, v', sumsq) with sumsq = Sum(v'^2) (f32 scalar)."""
+    rows, lanes = cur.shape
+    assert lanes == LANES and rows % block_rows == 0, (rows, lanes)
+    nblk = rows // block_rows
+    w = jnp.asarray(w, jnp.float32).reshape(1)
+    inv_eta = jnp.asarray(inv_eta, jnp.float32).reshape(1)
+    beta = jnp.asarray(beta, jnp.float32).reshape(1)
+
+    block = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec(memory_space=pltpu.SMEM)
+    mixed, v_o, partials = pl.pallas_call(
+        _apply_kernel,
+        grid=(nblk,),
+        in_specs=[block, block, block, scalar, scalar, scalar],
+        out_specs=[block, block,
+                   pl.BlockSpec((1, 1), lambda i: (i, 0),
+                                memory_space=pltpu.SMEM)],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="fused_weighted_apply",
+    )(cur, v, new, w, inv_eta, beta)
+    return mixed, v_o, jnp.sum(partials)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused momentum + gap-norm update."""
+"""Pure-jnp oracles for the fused momentum update and the server apply."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -15,3 +15,19 @@ def fused_update_flat_ref(theta, v, g, eta, beta):
     v_new = beta * v + (1.0 - beta) * g
     theta_new = theta - eta * v_new
     return theta_new, v_new, jnp.sum(jnp.square(v_new))
+
+
+def fused_apply_flat_ref(cur, v, new, w, inv_eta, beta):
+    """cur/v/new: flat (or 2-D) f32 arrays; the server push-apply contract
+    (``AsyncParameterServer.push`` / ``serve.server._apply_shard``).
+
+    Returns (mixed, v', sumsq):
+        mixed = w * new + (1 - w) * cur
+        s     = (cur - mixed) * inv_eta
+        v'    = beta * v + (1 - beta) * s
+        sumsq = Sum(v'^2)
+    """
+    mixed = w * new + (1.0 - w) * cur
+    s = (cur - mixed) * inv_eta
+    v_new = beta * v + (1.0 - beta) * s
+    return mixed, v_new, jnp.sum(jnp.square(v_new))

@@ -62,6 +62,7 @@ class IslandConfig:
     train_slots: int = 8             # slots one local epoch occupies
     compress_ratio: float = 0.0      # 0 = off; else top-k ratio w/ EF
     aggregation: str = "replace"
+    kernel: str = "auto"             # push-apply impl: pallas|reference|auto
     n_shards: int = 0                # >0: sharded serving-tier server
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50             # slots
@@ -115,10 +116,12 @@ def run(cfg_model, icfg: IslandConfig, *, log=print):
         from repro.serve import ShardedAsyncParameterServer
         server = ShardedAsyncParameterServer(
             params, eta=icfg.eta, beta=icfg.beta,
-            aggregation=icfg.aggregation, n_shards=icfg.n_shards)
+            aggregation=icfg.aggregation, n_shards=icfg.n_shards,
+            kernel=icfg.kernel)
     else:
         server = AsyncParameterServer(params, eta=icfg.eta, beta=icfg.beta,
-                                      aggregation=icfg.aggregation)
+                                      aggregation=icfg.aggregation,
+                                      kernel=icfg.kernel)
     sched = OnlineScheduler(icfg.V, icfg.L_b, icfg.eta, icfg.beta,
                             icfg.epsilon, icfg.slot_seconds)
     islands = [Island(i, cfg_model, icfg, mesh)
@@ -285,6 +288,10 @@ def main():
                     choices=["replace", "fedasync_poly", "gap_aware"])
     ap.add_argument("--shards", type=int, default=0,
                     help=">0: serve from the sharded parameter store")
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "pallas", "reference"],
+                    help="push-apply implementation (Pallas fused vs "
+                         "reference; auto = Pallas on TPU)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -293,6 +300,7 @@ def main():
                         local_steps=args.steps_per_epoch,
                         compress_ratio=args.compress,
                         aggregation=args.aggregation,
+                        kernel=args.kernel,
                         n_shards=args.shards,
                         ckpt_dir=args.ckpt_dir)
     t0 = time.time()

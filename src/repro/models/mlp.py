@@ -1,0 +1,49 @@
+"""A plain MLP image classifier — the second real federated workload.
+
+Same input/output contract as models/lenet.py (cifarlike (B, 32, 32, C)
+images -> logits), but pure dense layers over the flattened pixels, with
+the hidden widths of LeNet-5's FC head (120, 84). Exists to prove the
+``BatchedMLBackend`` fused train+push path is model-agnostic: a different
+pytree structure (3 dense layers, no conv leaves) through the same jitted
+cohort programs and the same Pallas apply kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, num_classes: int = 10, in_channels: int = 3,
+             image_hw: int = 32, hidden=(120, 84)):
+    d_in = image_hw * image_hw * in_channels
+    dims = (d_in,) + tuple(hidden) + (num_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+
+    def fc_init(k, din, dout):
+        return din ** -0.5 * jax.random.truncated_normal(k, -3, 3, (din, dout))
+
+    return {
+        f"fc{i + 1}": {"w": fc_init(ks[i], dims[i], dims[i + 1]),
+                       "b": jnp.zeros(dims[i + 1])}
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_logits(params, images):
+    """images: (B, H, W, C) float32 -> logits (B, num_classes)."""
+    x = images.reshape(images.shape[0], -1)
+    n = len(params)
+    for i in range(1, n):
+        p = params[f"fc{i}"]
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    p = params[f"fc{n}"]
+    return x @ p["w"] + p["b"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_logits(params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, {"loss": nll, "accuracy": acc}

@@ -1,13 +1,15 @@
 from .optimizers import (OptState, adamw, momentum_sgd, apply_updates,
                          global_norm, clip_by_global_norm)
-from .gap import fused_momentum_gap_update, gap_aware_scale, delay_compensate
+from .gap import (fused_momentum_gap_update, fused_weighted_apply,
+                  gap_aware_scale, delay_compensate)
 from .compression import (topk_compress, topk_decompress, int8_quantize,
                           int8_dequantize, ErrorFeedback)
 
 __all__ = [
     "OptState", "adamw", "momentum_sgd", "apply_updates", "global_norm",
     "clip_by_global_norm",
-    "fused_momentum_gap_update", "gap_aware_scale", "delay_compensate",
+    "fused_momentum_gap_update", "fused_weighted_apply", "gap_aware_scale",
+    "delay_compensate",
     "topk_compress", "topk_decompress", "int8_quantize", "int8_dequantize",
     "ErrorFeedback",
 ]

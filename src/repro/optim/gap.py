@@ -36,6 +36,37 @@ def fused_momentum_gap_update(params: Any, v: Any, grads: Any, *,
     return new_p, new_v, scale * jnp.sqrt(sq)
 
 
+def fused_weighted_apply(params: Any, v: Any, new_params: Any, *,
+                         w, eta: float, beta: float):
+    """The server push apply (``AsyncParameterServer.push`` contract) as one
+    pytree traversal: weighted mix toward the pushed params, server momentum
+    recursion on the implied step, and the post-update ||v'||_2 — the XLA
+    path (and oracle) of ``fused_weighted_apply_pallas``.
+
+    Returns (mixed_params, new_v, v_norm):
+        mixed = w * new + (1 - w) * params
+        s     = (params - mixed) / eta
+        v'    = beta * v + (1 - beta) * s
+        v_norm = ||v'||_2
+    """
+    inv_eta = 1.0 / max(eta, 1e-12)
+
+    def leaf(p, vv, n):
+        p32 = p.astype(jnp.float32)
+        mixed = w * n.astype(jnp.float32) + (1.0 - w) * p32
+        s = (p32 - mixed) * inv_eta
+        v_new = beta * vv.astype(jnp.float32) + (1.0 - beta) * s
+        return mixed.astype(p.dtype), v_new, jnp.sum(jnp.square(v_new))
+
+    out = jax.tree.map(leaf, params, v, new_params)
+    treedef = jax.tree.structure(params)
+    leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    mixed = treedef.unflatten([l[0] for l in leaves])
+    new_v = treedef.unflatten([l[1] for l in leaves])
+    sq = sum(l[2] for l in leaves)
+    return mixed, new_v, jnp.sqrt(sq)
+
+
 def gap_aware_scale(gap: jnp.ndarray, gap_ref: jnp.ndarray):
     """Gap-aware staleness dampening [31]: scale update by 1/(1+gap/ref)."""
     return 1.0 / (1.0 + gap / jnp.maximum(gap_ref, 1e-9))

@@ -31,6 +31,10 @@ The momentum bookkeeping matches the core server leaf-for-leaf:
 ``s = (theta_old - theta_new) / eta``, ``v <- beta v + (1-beta) s``,
 ``v_norm = ||v||_2`` — computed per shard and reduced, so the serving
 tier's gap estimates agree with the simulator's to float tolerance.
+
+``kernel="pallas"`` swaps the jitted jnp shard apply for the Pallas
+single-HBM-pass kernel (``fused_apply_flat`` — shard slices are already
+its natural flat-f32 layout); ``"auto"`` picks Pallas on TPU only.
 """
 from __future__ import annotations
 
@@ -46,6 +50,8 @@ import numpy as np
 from repro.core.aggregation import AggregationRule, configure_aggregation
 from repro.core.server import PushResult
 from repro.core.staleness import LagTracker, gradient_gap
+from repro.kernels.fused_update import (fused_apply_flat, kernel_interpret,
+                                        resolve_kernel_mode)
 
 from .sharding import ShardSpec
 
@@ -89,7 +95,7 @@ class ShardedAsyncParameterServer:
                  aggregation: Union[str, AggregationRule] = "replace",
                  n_shards: int = 1, *, mesh=None, history_depth: int = 64,
                  fedasync_alpha: float = 0.6, fedasync_a: float = 0.5,
-                 gap_ref: float = 1.0, fleet=None):
+                 gap_ref: float = 1.0, fleet=None, kernel: str = "auto"):
         if history_depth < 1:
             raise ValueError(
                 f"history_depth must be >= 1, got {history_depth}")
@@ -100,6 +106,9 @@ class ShardedAsyncParameterServer:
             fedasync_a=fedasync_a, gap_ref=gap_ref)
         self.aggregation = self.rule.name
         self.fleet_spec = fleet
+        # shard slices are already flat contiguous f32 vectors — the Pallas
+        # kernel's natural layout; "reference" keeps the jitted jnp apply
+        self.kernel = resolve_kernel_mode(kernel)
         self.spec = ShardSpec(params, n_shards, mesh=mesh)
         flat = self.spec.flatten(params)
         self._shards: List[_ShardState] = [
@@ -236,8 +245,13 @@ class ShardedAsyncParameterServer:
                 new = jnp.asarray(new, jnp.float32)
                 if self.spec.devices is not None:
                     new = jax.device_put(new, self.spec.devices[i])
-                mixed, mom2, sq = _apply_shard(st.params, st.momentum, new,
-                                               w, inv_eta, beta)
+                if self.kernel == "pallas":
+                    mixed, mom2, sq = fused_apply_flat(
+                        st.params, st.momentum, new, w, inv_eta, beta,
+                        interpret=kernel_interpret())
+                else:
+                    mixed, mom2, sq = _apply_shard(st.params, st.momentum,
+                                                   new, w, inv_eta, beta)
                 st.params, st.momentum = mixed, mom2
                 sqs.append(sq)
             # cross-shard norm reduction on the host: the per-shard sq

@@ -124,13 +124,23 @@ class TestRegistry:
         of retracing the most expensive jit in the repo; ad-hoc
         instance-keyed rules never share."""
         from repro.core.realml import _finish_chunk_fn
+        from repro.models.lenet import lenet_loss
         a = _finish_chunk_fn(FedAsyncPolyRule(0.6, 0.5), 0.01, 0.9,
-                             True, True)
+                             True, True, lenet_loss, "reference")
         b = _finish_chunk_fn(FedAsyncPolyRule(0.9, 1.0), 0.01, 0.9,
-                             True, True)
+                             True, True, lenet_loss, "reference")
         assert a is b
-        c = _finish_chunk_fn(GapAwareRule(1.0), 0.01, 0.9, True, True)
+        c = _finish_chunk_fn(GapAwareRule(1.0), 0.01, 0.9, True, True,
+                             lenet_loss, "reference")
         assert c is not a
+        # a different model or kernel mode is a different executable
+        from repro.models.mlp import mlp_loss
+        d = _finish_chunk_fn(FedAsyncPolyRule(0.6, 0.5), 0.01, 0.9,
+                             True, True, mlp_loss, "reference")
+        assert d is not a
+        e = _finish_chunk_fn(FedAsyncPolyRule(0.6, 0.5), 0.01, 0.9,
+                             True, True, lenet_loss, "pallas")
+        assert e is not a
         # cache keys follow the policy convention: class-keyed only when
         # provably safe (paramless, or knobs declared via scan_operands)
         assert FedAsyncPolyRule(0.6, 0.5).jax_cache_key() is \

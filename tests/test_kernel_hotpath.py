@@ -1,0 +1,291 @@
+"""Kernel-mode parity across every apply site: the Pallas fused apply
+(interpret mode on CPU) against the reference path in the core server,
+the sharded serving tier, and the fused real-ML push scan — for all four
+registered aggregation rules — plus the ``SimConfig.kernel`` knob
+threading and the MLP backend's golden pin.
+
+Regenerate the MLP golden (after an intentional schedule change):
+
+    PYTHONPATH=src python tests/test_kernel_hotpath.py
+"""
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PaperFleet, Scenario, SimConfig
+from repro.core.realml import MLPBackend, ImageClassifierBackend
+from repro.core.server import AsyncParameterServer
+from repro.core.simulator import FederatedSim
+from repro.serve import ShardedAsyncParameterServer
+
+ALL_RULES = ("replace", "fedasync_poly", "gap_aware", "hetero_aware")
+
+MLP_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                               "mlp_golden.json")
+
+# the real_mode_golden.json regime (see tests/test_real_mode.py): small V
+# so schedules fire within the horizon, H pinned at 0
+SIM_KW = dict(n_users=4, horizon_s=900, app_arrival_p=0.004, seed=0,
+              ml_mode="real", V=5.0)
+ML_KW = dict(n_train=256, n_test=128, seed=0, eval_every=300)
+
+
+def tiny_params(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"w": jax.random.normal(ks[0], (13, 7)),
+            "b": jax.random.normal(ks[1], (7,)),
+            "head": {"w": jax.random.normal(ks[2], (7, 3))}}
+
+
+def paper_spec(n=8, seed=0):
+    return PaperFleet().build(np.random.default_rng(seed), n)
+
+
+def push_stream(server, seed=1, steps=12, n_clients=3):
+    """Interleaved pull/push stream (the test_serve parity shape);
+    returns (weights, gaps, v_norms) observed per push."""
+    rng = np.random.default_rng(seed)
+    pulled = {}
+    out = []
+    for step in range(steps):
+        cid = step % n_clients
+        if cid not in pulled:
+            p, _ = server.pull(cid)
+            pulled[cid] = jax.tree.map(
+                lambda x: x + jnp.asarray(
+                    rng.normal(0, 0.1, x.shape).astype(np.float32)), p)
+        if step % 2 == 1:
+            res = server.push(cid, pulled.pop(cid))
+            out.append((res.applied_weight, res.gap_estimate,
+                        float(server.v_norm)))
+    return out
+
+
+class TestServerKernelParity:
+    """AsyncParameterServer: kernel="pallas" applies mix + momentum +
+    norm in one fused dispatch; results pin to the reference at rtol
+    1e-6 for every registered rule."""
+
+    @pytest.mark.parametrize("aggregation", ALL_RULES)
+    def test_push_stream_parity(self, aggregation):
+        fleet = paper_spec(8) if aggregation == "hetero_aware" else None
+        kw = dict(eta=0.05, beta=0.9, aggregation=aggregation, fleet=fleet)
+        ref = AsyncParameterServer(tiny_params(), kernel="reference", **kw)
+        pal = AsyncParameterServer(tiny_params(), kernel="pallas", **kw)
+        obs_ref = push_stream(ref)
+        obs_pal = push_stream(pal)
+        assert len(obs_ref) == len(obs_pal) > 0
+        for (wr, gr, nr), (wp, gp, np_) in zip(obs_ref, obs_pal):
+            assert wp == pytest.approx(wr, rel=1e-6, abs=1e-9)
+            assert gp == pytest.approx(gr, rel=1e-5, abs=1e-9)
+            assert np_ == pytest.approx(nr, rel=1e-5, abs=1e-9)
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(pal.params)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-6, atol=1e-7)
+        for a, b in zip(jax.tree.leaves(ref._v), jax.tree.leaves(pal._v)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_pallas_v_norm_is_plain_float(self):
+        """The fused path must leave the same host-float bookkeeping the
+        reference leaves (policies read server.v_norm every slot)."""
+        s = AsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                 kernel="pallas")
+        s.pull(0)
+        s.push(0, tiny_params(1))
+        assert isinstance(s.v_norm, float) and s.v_norm > 0.0
+
+    def test_auto_resolves_by_backend(self):
+        s = AsyncParameterServer(tiny_params(), eta=0.05, beta=0.9)
+        expected = "pallas" if jax.default_backend() == "tpu" \
+            else "reference"
+        assert s.kernel == expected
+
+    def test_unknown_kernel_rejected(self):
+        with pytest.raises(ValueError, match="unknown kernel mode"):
+            AsyncParameterServer(tiny_params(), eta=0.05, beta=0.9,
+                                 kernel="bogus")
+
+
+class TestServeKernelParity:
+    """ShardedAsyncParameterServer: the flat-vector kernel entry per
+    shard vs the jitted jnp apply."""
+
+    @pytest.mark.parametrize("aggregation",
+                             ["replace", "fedasync_poly", "gap_aware"])
+    @pytest.mark.parametrize("n_shards", [1, 4])
+    def test_push_stream_parity(self, aggregation, n_shards):
+        kw = dict(eta=0.05, beta=0.9, aggregation=aggregation,
+                  n_shards=n_shards)
+        ref = ShardedAsyncParameterServer(tiny_params(),
+                                          kernel="reference", **kw)
+        pal = ShardedAsyncParameterServer(tiny_params(), kernel="pallas",
+                                          **kw)
+        obs_ref = push_stream(ref)
+        obs_pal = push_stream(pal)
+        assert len(obs_ref) == len(obs_pal) > 0
+        for (wr, gr, nr), (wp, gp, np_) in zip(obs_ref, obs_pal):
+            assert wp == pytest.approx(wr, rel=1e-6, abs=1e-9)
+            assert np_ == pytest.approx(nr, rel=1e-5, abs=1e-9)
+        pal.assert_consistent()
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(pal.params)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_sub_block_shards_clamp(self):
+        """Tiny shards (a few hundred floats) must run the clamped-block
+        path without error and still agree with the reference."""
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (40, 10))}
+        ref = ShardedAsyncParameterServer(params, eta=0.05, beta=0.9,
+                                          n_shards=4, kernel="reference")
+        pal = ShardedAsyncParameterServer(params, eta=0.05, beta=0.9,
+                                          n_shards=4, kernel="pallas")
+        obs_ref = push_stream(ref, steps=6, n_clients=2)
+        obs_pal = push_stream(pal, steps=6, n_clients=2)
+        for (_, _, nr), (_, _, np_) in zip(obs_ref, obs_pal):
+            assert np_ == pytest.approx(nr, rel=1e-5, abs=1e-9)
+
+
+def run_real(kernel, ml="lenet", aggregation="replace", policy="online"):
+    cfg = SimConfig(policy=policy, engine="vectorized",
+                    aggregation=aggregation, kernel=kernel, **SIM_KW)
+    return Scenario(config=cfg, ml=ml, ml_kwargs=dict(ML_KW)).run()
+
+
+def schedule_digest(push_log) -> str:
+    payload = json.dumps([(e["t"], e["user"], e["lag"], e["corun"])
+                          for e in push_log]).encode()
+    return hashlib.sha256(payload).hexdigest()
+
+
+class TestRealMLKernelParity:
+    """The fused train+push scan with the Pallas apply vs the reference
+    scan, end-to-end through the vectorized engine."""
+
+    @pytest.mark.parametrize("ml,aggregation", [
+        ("lenet", "replace"),
+        ("lenet", "gap_aware"),
+        ("mlp", "fedasync_poly"),
+    ])
+    def test_end_to_end_parity(self, ml, aggregation):
+        r_ref = run_real("reference", ml, aggregation)
+        r_pal = run_real("pallas", ml, aggregation)
+        # schedule identical (push decisions are momentum-norm
+        # independent in this regime), floats to kernel tolerance
+        assert schedule_digest(r_ref.push_log) == \
+            schedule_digest(r_pal.push_log)
+        g_ref = np.array([p["gap"] for p in r_ref.push_log])
+        g_pal = np.array([p["gap"] for p in r_pal.push_log])
+        assert len(g_ref) > 0
+        np.testing.assert_allclose(g_pal, g_ref, rtol=2e-5, atol=1e-6)
+        w_ref = np.array([p["weight"] for p in r_ref.push_log])
+        w_pal = np.array([p["weight"] for p in r_pal.push_log])
+        np.testing.assert_allclose(w_pal, w_ref, rtol=2e-5, atol=1e-7)
+        np.testing.assert_allclose(
+            [a for _, a in r_pal.accuracy],
+            [a for _, a in r_ref.accuracy], atol=0.03)
+
+
+class TestKnobThreading:
+    def test_simconfig_validates_kernel(self):
+        SimConfig(kernel="pallas")
+        SimConfig(kernel="reference")
+        with pytest.raises(ValueError, match="unknown kernel"):
+            SimConfig(kernel="fused")
+
+    def test_scenario_threads_kernel_to_backend(self):
+        sc = Scenario(config=SimConfig(kernel="reference", ml_mode="real",
+                                       n_users=2),
+                      ml="mlp", ml_kwargs=dict(n_train=64, n_test=32))
+        sim = sc.build()
+        assert sim.ml_backend.kernel == "reference"
+        assert sim.ml_backend.server.kernel == "reference"
+
+    def test_default_auto_left_to_backend(self):
+        """kernel="auto" is NOT forced into ml_kwargs (custom backends
+        without the kwarg must keep constructing)."""
+        sc = Scenario(config=SimConfig(ml_mode="real", n_users=2),
+                      ml="mlp", ml_kwargs=dict(n_train=64, n_test=32))
+        sim = sc.build()
+        expected = "pallas" if jax.default_backend() == "tpu" \
+            else "reference"
+        assert sim.ml_backend.kernel == expected
+
+    def test_backend_registry_has_mlp(self):
+        from repro.core.realml import registered_ml_backends
+        assert {"lenet", "mlp"} <= set(registered_ml_backends())
+        assert issubclass(MLPBackend, ImageClassifierBackend)
+
+
+def run_mlp_golden():
+    """The pinned MLP run: Scenario(ml="mlp") through the vectorized
+    engine on the reference kernel (bit-stable on CPU)."""
+    cfg = SimConfig(policy="online", engine="vectorized",
+                    kernel="reference", **SIM_KW)
+    return Scenario(config=cfg, ml="mlp", ml_kwargs=dict(ML_KW)).run()
+
+
+def summarize_mlp(r) -> dict:
+    return {
+        "updates": r.updates,
+        "energy_j": r.energy_j,
+        "n_push": len(r.push_log),
+        "schedule_sha256": schedule_digest(r.push_log),
+        "accuracy": [[int(t), float(a)] for t, a in r.accuracy],
+    }
+
+
+class TestMLPGolden:
+    """``Scenario(ml="mlp")`` runs the fused train+push scan end-to-end
+    with its own golden pin (the second-model acceptance criterion)."""
+
+    @pytest.fixture(scope="class")
+    def golden(self):
+        with open(MLP_GOLDEN_PATH) as f:
+            return json.load(f)
+
+    @pytest.fixture(scope="class")
+    def run(self):
+        return run_mlp_golden()
+
+    def test_matches_golden(self, golden, run):
+        s = summarize_mlp(run)
+        assert s["updates"] == golden["updates"]
+        assert s["n_push"] == golden["n_push"]
+        assert s["schedule_sha256"] == golden["schedule_sha256"]
+        assert s["energy_j"] == pytest.approx(golden["energy_j"],
+                                              rel=1e-9)
+        assert [t for t, _ in s["accuracy"]] == \
+            [t for t, _ in golden["accuracy"]]
+        np.testing.assert_allclose([a for _, a in s["accuracy"]],
+                                   [a for _, a in golden["accuracy"]],
+                                   atol=0.03)
+
+    def test_mlp_differs_from_lenet_pytree(self, run):
+        """Sanity: the MLP really is a different model shape (no conv
+        leaves) going through the same machinery."""
+        backend = MLPBackend(2, n_train=64, n_test=32)
+        assert "conv1" not in backend.server.params
+        assert {"fc1", "fc2", "fc3"} <= set(backend.server.params)
+
+
+def regenerate():
+    r = run_mlp_golden()
+    golden = summarize_mlp(r)
+    print(f"mlp: updates={r.updates} energy={r.energy_j:.3f} "
+          f"acc={golden['accuracy']}")
+    with open(MLP_GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {MLP_GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    regenerate()

@@ -4,14 +4,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.fused_update import (fused_update_flat,
-                                        fused_update_flat_ref)
-from repro.kernels.fused_update.ops import fused_momentum_gap_update_pallas
+from repro.kernels.fused_update import (fused_apply_flat,
+                                        fused_apply_flat_ref,
+                                        fused_update_flat,
+                                        fused_update_flat_ref,
+                                        fused_weighted_apply_pallas,
+                                        clamp_block_rows, kernel_interpret,
+                                        resolve_kernel_mode)
+from repro.kernels.fused_update.kernel import LANES
+from repro.kernels.fused_update.ops import (DEFAULT_BLOCK_ROWS,
+                                            MIN_BLOCK_ROWS,
+                                            fused_momentum_gap_update_pallas)
 from repro.kernels.ssd_scan import ssd_chunked_pallas, ssd_chunked_ref
 from repro.models.ssm import ssd_chunked
-from repro.optim.gap import fused_momentum_gap_update
+from repro.optim.gap import fused_momentum_gap_update, fused_weighted_apply
 
 
 class TestFusedUpdate:
@@ -61,6 +70,176 @@ class TestFusedUpdate:
             np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                        rtol=3e-5, atol=3e-5)
         assert float(gap1) == pytest.approx(float(gap2), rel=1e-4)
+
+
+class TestFusedApply:
+    """The server-push apply kernel (mix + momentum + sq-norm) vs its
+    pure-jnp oracle."""
+
+    @pytest.mark.parametrize("n", [1, 100, 4096, 128 * 128 + 17, 777_777])
+    def test_matches_ref(self, n):
+        k = jax.random.PRNGKey(n)
+        cur, v, new = (jax.random.normal(kk, (n,))
+                       for kk in jax.random.split(k, 3))
+        a = fused_apply_flat(cur, v, new, 0.6, 1.0 / 0.01, 0.9,
+                             block_rows=128, interpret=True)
+        b = fused_apply_flat_ref(cur, v, new, 0.6, 1.0 / 0.01, 0.9)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("w,eta,beta", [
+        (1.0, 0.1, 0.0),     # replace degenerates to w=1
+        (0.6, 0.01, 0.9),
+        (0.05, 1e-3, 0.99),
+        (0.0, 0.05, 0.5),    # fully-stale push: model unchanged
+    ])
+    def test_knob_sweep(self, w, eta, beta):
+        k = jax.random.PRNGKey(7)
+        cur, v, new = (jax.random.normal(kk, (5000,))
+                       for kk in jax.random.split(k, 3))
+        a = fused_apply_flat(cur, v, new, w, 1.0 / eta, beta,
+                             block_rows=128, interpret=True)
+        b = fused_apply_flat_ref(cur, v, new, w, 1.0 / eta, beta)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=3e-5, atol=3e-5)
+
+    def test_pytree_wrapper_matches_xla_fused(self):
+        """fused_weighted_apply_pallas == optim.gap.fused_weighted_apply
+        (the server apply contract) at rtol 1e-6."""
+        k = jax.random.PRNGKey(1)
+        ks = jax.random.split(k, 6)
+        shape = {"a": (33, 7), "b": {"c": (129,)}}
+        mk = lambda kk: {"a": jax.random.normal(kk[0], (33, 7)),
+                         "b": {"c": jax.random.normal(kk[1], (129,))}}
+        params, v, new = (mk(ks[2 * i:2 * i + 2]) for i in range(3))
+        p1, v1, n1 = fused_weighted_apply(params, v, new, w=0.4, eta=0.05,
+                                          beta=0.9)
+        p2, v2, n2 = fused_weighted_apply_pallas(params, v, new, w=0.4,
+                                                 eta=0.05, beta=0.9,
+                                                 block_rows=128,
+                                                 interpret=True)
+        for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-7)
+        for x, y in zip(jax.tree.leaves(v1), jax.tree.leaves(v2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+        assert float(n1) == pytest.approx(float(n2), rel=1e-5)
+
+    def test_padding_contributes_nothing(self):
+        """A size straddling a block boundary by one element: the padded
+        lanes must add 0 to the norm (mixed/v' padding stays zero)."""
+        n = 128 * 128 + 1
+        k = jax.random.PRNGKey(n)
+        cur, v, new = (jax.random.normal(kk, (n,))
+                       for kk in jax.random.split(k, 3))
+        _, _, sq = fused_apply_flat(cur, v, new, 0.3, 10.0, 0.9,
+                                    block_rows=128, interpret=True)
+        _, _, sq_ref = fused_apply_flat_ref(cur, v, new, 0.3, 10.0, 0.9)
+        assert float(sq) == pytest.approx(float(sq_ref), rel=1e-5)
+
+
+class TestBlockRowsClamp:
+    """Satellite: block_rows auto-clamp for tiny params + empty guard
+    (mirrors the topk k-clamp fix)."""
+
+    def test_tiny_payload_shrinks_block(self):
+        # a few hundred params should not pad to a 512 KiB block
+        assert clamp_block_rows(300) == MIN_BLOCK_ROWS
+        assert clamp_block_rows(LANES * MIN_BLOCK_ROWS) == MIN_BLOCK_ROWS
+
+    def test_large_payload_keeps_requested_block(self):
+        n = DEFAULT_BLOCK_ROWS * LANES * 4
+        assert clamp_block_rows(n) == DEFAULT_BLOCK_ROWS
+
+    def test_clamp_is_power_of_two_and_bounded(self):
+        for n in (1, 7, 129, 1000, 10_000, 65_536, 10 ** 6):
+            br = clamp_block_rows(n)
+            assert MIN_BLOCK_ROWS <= br <= DEFAULT_BLOCK_ROWS
+            assert br & (br - 1) == 0
+            # pad waste bounded by one block
+            rows = -(-n // LANES)
+            padded_rows = -(-rows // br) * br
+            assert padded_rows - rows < br or rows < MIN_BLOCK_ROWS
+
+    def test_tiny_update_matches_ref(self):
+        """The clamped path produces correct results for sub-block sizes."""
+        for n in (1, 5, 129, 1025):
+            k = jax.random.PRNGKey(n)
+            t, v, g = (jax.random.normal(kk, (n,))
+                       for kk in jax.random.split(k, 3))
+            a = fused_update_flat(t, v, g, 0.01, 0.9, interpret=True)
+            b = fused_update_flat_ref(t, v, g, 0.01, 0.9)
+            for x, y in zip(a, b):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=3e-5, atol=3e-5)
+
+    def test_empty_arrays_short_circuit(self):
+        z = jnp.zeros((0,), jnp.float32)
+        t, v, sq = fused_update_flat(z, z, z, 0.01, 0.9, interpret=True)
+        assert t.shape == (0,) and v.shape == (0,) and float(sq) == 0.0
+        m, v2, sq2 = fused_apply_flat(z, z, z, 0.5, 10.0, 0.9,
+                                      interpret=True)
+        assert m.shape == (0,) and v2.shape == (0,) and float(sq2) == 0.0
+
+    def test_mode_dispatch(self):
+        assert resolve_kernel_mode("pallas") == "pallas"
+        assert resolve_kernel_mode("reference") == "reference"
+        auto = resolve_kernel_mode("auto")
+        on_tpu = jax.default_backend() == "tpu"
+        assert auto == ("pallas" if on_tpu else "reference")
+        assert kernel_interpret() == (not on_tpu)
+        with pytest.raises(ValueError, match="unknown kernel mode"):
+            resolve_kernel_mode("bogus")
+
+
+class TestFusedKernelProperties:
+    """Hypothesis parity suite: both kernels (interpret mode) vs the
+    optim/gap oracles over shapes x padding remainders x (eta, beta)."""
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=HealthCheck.all())
+    @given(rows=st.integers(1, 40), rem=st.integers(0, LANES - 1),
+           eta=st.floats(1e-4, 0.5), beta=st.floats(0.0, 0.99),
+           seed=st.integers(0, 2 ** 16))
+    def test_update_parity(self, rows, rem, eta, beta, seed):
+        n = (rows - 1) * LANES + rem + 1   # spans rows, any lane remainder
+        k = jax.random.PRNGKey(seed)
+        t, v, g = (jax.random.normal(kk, (n,))
+                   for kk in jax.random.split(k, 3))
+        t2, v2, sq = fused_update_flat(t, v, g, eta, beta, interpret=True)
+        tr, vr, sqr = fused_update_flat_ref(t, v, g, eta, beta)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(tr),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(vr),
+                                   rtol=1e-6, atol=1e-6)
+        assert float(sq) == pytest.approx(float(sqr), rel=1e-5, abs=1e-10)
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=HealthCheck.all())
+    @given(rows=st.integers(1, 40), rem=st.integers(0, LANES - 1),
+           w=st.floats(0.0, 1.0), eta=st.floats(1e-4, 0.5),
+           beta=st.floats(0.0, 0.99), seed=st.integers(0, 2 ** 16))
+    def test_apply_parity(self, rows, rem, w, eta, beta, seed):
+        n = (rows - 1) * LANES + rem + 1   # spans rows, any lane remainder
+        k = jax.random.PRNGKey(seed)
+        cur, v, new = (jax.random.normal(kk, (n,))
+                       for kk in jax.random.split(k, 3))
+        inv_eta = 1.0 / eta
+        m2, v2, sq = fused_apply_flat(cur, v, new, w, inv_eta, beta,
+                                      interpret=True)
+        mr, vr, sqr = fused_apply_flat_ref(cur, v, new, w, inv_eta, beta)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(mr),
+                                   rtol=1e-6, atol=1e-6)
+        # v' suffers catastrophic cancellation scaled by inv_eta: a few
+        # ulps of the LARGEST intermediate, not of the (near-zero) result
+        # — so the absolute floor tracks the array scale
+        v_scale = float(np.max(np.abs(np.asarray(vr)))) + 1.0
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(vr),
+                                   rtol=1e-6, atol=1e-6 * v_scale)
+        assert float(sq) == pytest.approx(float(sqr), rel=1e-5, abs=1e-10)
 
 
 class TestFlashAttention:
