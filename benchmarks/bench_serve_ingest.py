@@ -17,6 +17,12 @@ monitor rides along (every packet heartbeats, every commit is a cadence
 sample, a periodic sweep runs) so the measured path is the production
 one, fault machinery included.
 
+A contended-applier sweep follows the matrix: N threads, each with its
+own pipeline and client, commit against ONE shared server, so every
+``push_flat`` serializes on the applier lock. The ``threads`` column
+(1 on the single-pipeline matrix rows) makes lock contention a tracked
+quantity across PRs.
+
 Fast mode (CI) runs the small model; ``--full`` adds the ~1M-param model
 and a deeper shard sweep. Every run persists ``BENCH_serve_ingest.json``
 (see ``common.write_json``) so the ingest-throughput trajectory is
@@ -113,6 +119,7 @@ def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
         "n_shards": n_shards,
         "codec": codec,
         "kernel": kernel,
+        "threads": 1,
         "n_pushes": committed,
         "pushes_per_sec": round(committed / wall, 2),
         "apply_p50_ms": round(_percentile(lat_ms, 50), 3),
@@ -121,6 +128,85 @@ def _bench_one(n_params: int, n_shards: int, codec: str, n_pushes: int,
         "raw_kb_per_push": round(4.0 * n_params / 1024.0, 1),
         "rejected": pipe.stats.rejected,
         "evicted": pipe.stats.evicted,
+    }
+
+
+def _bench_contended(n_params: int, n_shards: int, codec: str,
+                     n_pushes: int, warmup: int, kernel: str,
+                     threads: int):
+    """Contended appliers: ``threads`` ingest pipelines share ONE server,
+    so every commit serializes on the server's applier lock
+    (``push_flat``). Each thread owns its pipeline and client (the
+    pipeline is single-threaded by design; the SERVER is the shared
+    resource), pushes ``n_pushes`` times and drains inline — aggregate
+    committed pushes/sec across the fleet of appliers is the headline,
+    and the thread sweep prices the lock + GIL against the 1-thread
+    baseline."""
+    import threading as _threading
+
+    from repro.fault.monitor import FleetMonitor
+    from repro.serve import (IngestPipeline, ServeClient,
+                             ShardedAsyncParameterServer)
+
+    server = ShardedAsyncParameterServer(
+        _params(n_params), eta=0.05, beta=0.9, n_shards=n_shards,
+        history_depth=4 * max(threads, N_CLIENTS), kernel=kernel)
+    pipes = [IngestPipeline(server, capacity=8 * n_shards * N_CLIENTS,
+                            codec=codec,
+                            monitor=FleetMonitor(timeout_slots=10 ** 6))
+             for _ in range(threads)]
+    clients = [ServeClient(tid, pipes[tid]) for tid in range(threads)]
+    rng = np.random.default_rng(1)
+    delta = rng.normal(0, 0.01, server.spec.total).astype(np.float32)
+
+    def pushes(tid: int, count: int, t_base: int) -> None:
+        c, pipe = clients[tid], pipes[tid]
+        for t in range(t_base, t_base + count):
+            base, _ = c.pull()
+            sign = 1.0 if t % 2 == 0 else -1.0
+            _, accepted = c.push(np.asarray(base) + sign * delta, slot=t)
+            assert accepted == n_shards, "bench must not shed its own load"
+            pipe.drain()
+
+    for tid in range(threads):          # warm caches + compile per pipe
+        pushes(tid, warmup, 0)
+    for p in pipes:
+        p.latencies.clear()
+    applied0 = sum(p.stats.applied for p in pipes)
+
+    barrier = _threading.Barrier(threads + 1)
+
+    def timed(tid: int) -> None:
+        barrier.wait()
+        pushes(tid, n_pushes, warmup)
+
+    workers = [_threading.Thread(target=timed, args=(tid,))
+               for tid in range(threads)]
+    for w in workers:
+        w.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for w in workers:
+        w.join()
+    wall = time.perf_counter() - t0
+
+    committed = sum(p.stats.applied for p in pipes) - applied0
+    lat_ms = [1e3 * l for p in pipes for l in p.latencies]
+    return {
+        "bench": "serve_ingest",
+        "model_params": n_params,
+        "n_shards": n_shards,
+        "codec": codec,
+        "kernel": kernel,
+        "threads": threads,
+        "n_pushes": committed,
+        "pushes_per_sec": round(committed / wall, 2),
+        "apply_p50_ms": round(_percentile(lat_ms, 50), 3),
+        "apply_p99_ms": round(_percentile(lat_ms, 99), 3),
+        "wire_kb_per_push": None,       # matrix rows price the codecs
+        "raw_kb_per_push": round(4.0 * n_params / 1024.0, 1),
+        "rejected": sum(p.stats.rejected for p in pipes),
+        "evicted": sum(p.stats.evicted for p in pipes),
     }
 
 
@@ -142,6 +228,15 @@ def run(fast: bool = True, kernel: str = "reference"):
     other = "pallas" if kernel == "reference" else "reference"
     rows.append(_bench_one(sizes[0], shard_counts[-1], "none", n_pushes,
                            warmup, kernel=other))
+
+    # contended appliers: the same commit path from N threads against ONE
+    # server — the thread sweep prices the applier lock (threads=1 is the
+    # like-for-like baseline; the single-pipeline matrix rows above keep
+    # their historical numbers)
+    for threads in ((1, 2, 4) if fast else (1, 2, 4, 8)):
+        rows.append(_bench_contended(sizes[0], shard_counts[-1], "none",
+                                     n_pushes // 2, warmup, kernel,
+                                     threads))
 
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,

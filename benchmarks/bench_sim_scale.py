@@ -23,7 +23,15 @@ acceptance floor is 10x). Two sweeps:
   and a warmed per-point jax loop. ``sweep_speedup`` on the batched row
   is scenarios/sec vs the per-point loop (the status quo); the
   per-point-jax row's own ``scenarios_per_s`` prices the
-  warm-jax-vs-warm-jax ratio (compile measured separately, as usual).
+  warm-jax-vs-warm-jax ratio (compile measured separately, as usual);
+* sharded sweep: the chunked scan partitioned over the ``("users",)``
+  device mesh (``SimConfig.n_devices``, forced host devices locally via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) vs the same
+  auto-tuned run on one device, at n=100k and n=1M (10M in full mode).
+  Rows carry ``n_devices`` and the tuner's modeled ``mem_per_device_mb``
+  (``core.autotune.estimate_device_bytes``) so CPU-host numbers transfer
+  to accelerator meshes by arithmetic. ``--sharded-smoke`` runs ONLY the
+  n=100k sharded rows — the CI job's fast regression gate.
 
 The loop engine is skipped at cohort sizes where it would dominate the
 suite's wall-clock; the jax engine reports compile and steady-state times
@@ -49,13 +57,16 @@ JSON_PATH = "BENCH_sim_scale.json"
 
 
 def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
-              collect_push_log: bool = False, dynamics="none"):
+              collect_push_log: bool = False, dynamics="none",
+              n_devices: int = 0, jax_chunk=None):
     # push-log collection off by default so the engine comparison measures
     # engine speed, not log-building; the fleet sweep flips it on to price
     # the streamed event buffer
+    kw = {} if jax_chunk is None else {"jax_chunk": jax_chunk}
     cfg = SimConfig(policy=policy, n_users=n, horizon_s=horizon,
                     engine=engine, seed=seed,
-                    collect_push_log=collect_push_log, dynamics=dynamics)
+                    collect_push_log=collect_push_log, dynamics=dynamics,
+                    n_devices=n_devices, **kw)
     sim = FederatedSim(cfg)
     t0 = time.perf_counter()
     r = sim.run()
@@ -64,7 +75,8 @@ def _time_run(policy: str, engine: str, n: int, horizon: int, seed: int = 0,
 
 def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
          push_log=False, dynamics="none", scenarios=None,
-         scenarios_per_s=None, sweep_speedup=None):
+         scenarios_per_s=None, sweep_speedup=None, n_devices=None,
+         mem_per_device_mb=None):
     # absent knobs are None, never "" — every column stays singly-typed
     # for JSON/CSV consumers
     return {
@@ -79,6 +91,8 @@ def _row(sweep, policy, engine, n, horizon, wall, r, compile_s, loop_wall,
         "scenarios": scenarios,
         "scenarios_per_s": scenarios_per_s,
         "sweep_speedup": sweep_speedup,
+        "n_devices": n_devices,
+        "mem_per_device_mb": mem_per_device_mb,
         "updates": r.updates,
         "n_push": len(r.push_log),
         "energy_kj": round(r.energy_j / 1e3, 2),
@@ -95,7 +109,54 @@ def _engines_for(policy: str):
     return engines
 
 
-def run(fast: bool = True):
+def _sharded_rows(fast: bool, smoke: bool = False):
+    """The sharded sweep: auto-tuned (``jax_chunk=0``) runs on the full
+    ``("users",)`` mesh vs one device, same seed/horizon, so the row pair
+    prices the mesh itself. ``smoke`` keeps only the n=100k pair — the CI
+    regression gate under 8 forced host devices."""
+    import jax
+
+    from repro.core.autotune import (autotune_scan_params,
+                                     estimate_device_bytes)
+    from repro.core.simulator import n_slots
+
+    D = len(jax.devices())
+    rows = []
+    sizes = [FLEET_N] if smoke else \
+        ([FLEET_N, 1_000_000] if fast else
+         [FLEET_N, 1_000_000, 10_000_000])
+    for n in sizes:
+        # the paper fleet's fastest training cycle is ~250 slots, so
+        # anything shorter logs zero updates; <=1M keeps a full cycle,
+        # the 10M row is a throughput/memory-partitioning probe only
+        horizon = 300 if n <= 1_000_000 else 60
+        # both arms auto-tune (jax_chunk=0): the single-device arm is the
+        # oracle baseline, not a straw man with a mistuned chunk
+        for nd in ([1, D] if D > 1 else [1]):
+            t_first, _ = _time_run("online", "jax", n, horizon,
+                                   n_devices=nd, jax_chunk=0)
+            wall, r = _time_run("online", "jax", n, horizon,
+                                n_devices=nd, jax_chunk=0)
+            cfg = SimConfig(policy="online", n_users=n, horizon_s=horizon,
+                            engine="jax", n_devices=nd, jax_chunk=0)
+            tune = autotune_scan_params(FederatedSim(cfg), n_devices=nd)
+            est = estimate_device_bytes(n, n_slots(cfg), tune.jax_chunk, 0,
+                                        n_devices=nd)
+            rows.append(_row("sharded", "online", "jax", n, horizon, wall,
+                             r, round(t_first - wall, 2), None,
+                             n_devices=nd,
+                             mem_per_device_mb=round(est / 2 ** 20, 1)))
+    return rows
+
+
+def run(fast: bool = True, sharded_smoke: bool = False):
+    if sharded_smoke:       # CI gate: only the n=100k sharded pair
+        rows = _sharded_rows(fast=True, smoke=True)
+        from benchmarks.common import write_json
+        write_json(rows, JSON_PATH,
+                   meta={"bench": "sim_scale", "fast": True,
+                         "sharded_smoke": True})
+        return rows
     horizon = 600 if fast else 3600
     loop_cap = 2500 if fast else max(SIZES)
     rows = []
@@ -213,6 +274,9 @@ def run(fast: bool = True):
                      wall_p, r_pp, round(cold_p - wall_p, 2), None,
                      scenarios=B, scenarios_per_s=round(B / wall_p, 1)))
 
+    # --- sharded sweep: the ("users",) mesh at fleet scale ----------------
+    rows.extend(_sharded_rows(fast))
+
     from benchmarks.common import write_json
     write_json(rows, JSON_PATH,
                meta={"bench": "sim_scale", "fast": fast,
@@ -221,5 +285,7 @@ def run(fast: bool = True):
 
 
 if __name__ == "__main__":
+    import sys
+
     from benchmarks.common import emit
-    emit(run())
+    emit(run(sharded_smoke="--sharded-smoke" in sys.argv[1:]))

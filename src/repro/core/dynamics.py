@@ -111,6 +111,13 @@ class DeviceDynamics:
     - ``supports_jax``: a traced ``scan_step`` exists. ``SimConfig``
       validates the flag against the actual hook at construction; active
       dynamics without it degrade the jax engine to the numpy path.
+    - ``supports_shard``: ``scan_step`` may run with the user axis
+      sharded over a device mesh (``SimConfig.n_devices``). The engine's
+      slot view then carries ``dv.n`` (LIVE user count), ``dv.n_arr``
+      (padded array length) and ``dv.pad_users(x, fill)`` — per-user
+      draws must happen at ``dv.n`` and pad with a fill that keeps pad
+      lanes inert (threefry draws are shape-dependent; drawing at
+      ``n_arr`` would fork the stream from the unsharded engines).
 
     ``dropout`` is the instance's ``DropoutRule`` — ``"lose"`` or
     ``"resume"`` — a STATIC behavioral branch (engines compile/apply it
@@ -120,6 +127,7 @@ class DeviceDynamics:
     name: str = ""
     active: bool = True
     supports_jax: bool = True
+    supports_shard: bool = True
     dropout: str = "lose"
 
     # ------------------------------------------------------------- state
@@ -134,6 +142,18 @@ class DeviceDynamics:
         """Scalar instance knobs the traced hook needs (traced operands
         — ``dv.consts`` — so knob sweeps share one compiled scan)."""
         return ()
+
+    def pad_state(self, k: int):
+        """``(k,)``-leading INERT rows matching ``init_state``'s pytree
+        structure, appended when the sharded scan pads the user axis to a
+        multiple of the mesh size (``SimConfig.n_devices`` with a
+        non-divisible ``n_users``; core/vector_engine.py). Inert means:
+        the rows must keep their users permanently up under the engine's
+        fill-1.0 padded draws — no ``went_up``/``went_down`` edges ever,
+        so a pad user parked in MODE_OFF stays there. The base returns
+        None ("no recipe"), which makes a padded sharded run fail fast
+        with instructions; see ``MarkovChurnDynamics.pad_state``."""
+        return None
 
     def jax_cache_key(self):
         """Hashable token identifying this dynamics' ``scan_step`` AND
@@ -372,6 +392,22 @@ class MarkovChurnDynamics(DeviceDynamics):
                 self.p_net_recover, self.net_delay_slots,
                 self.resume_penalty_s)
 
+    def pad_state(self, k):
+        # permanently-up rows: full battery (> battery_min, validated),
+        # p_off=0 keeps the availability chain on under the engine's
+        # fill-1.0 padded draws (1.0 >= 0), the net chain never turns bad
+        # (1.0 < p_net_bad is false), and `up` never edges — so pad users
+        # parked in MODE_OFF draw nothing and stay parked forever
+        return {
+            "on": np.ones(k, dtype=bool),
+            "up": np.ones(k, dtype=bool),
+            "battery": np.full(k, self.capacity),
+            "net_bad": np.zeros(k, dtype=bool),
+            "drops": np.zeros(k, dtype=np.int64),
+            "p_off": np.zeros(k),
+            "p_on": np.zeros(k),
+        }
+
     def total_drops(self, dyn) -> int:
         return 0 if dyn is None else int(np.asarray(dyn["drops"]).sum())
 
@@ -393,6 +429,10 @@ class MarkovChurnDynamics(DeviceDynamics):
         jax, jnp = dv.jax, dv.jnp
         k2, sub = jax.random.split(dv.rng_key)
         u = jax.random.uniform(sub, (2, dv.n), jnp.float32)
+        # live-n draw + fill-1.0 pad (identity unsharded): the threefry
+        # stream matches the host engines, and 1.0 keeps pad lanes' chains
+        # pinned on/never-bad (see pad_state)
+        u = dv.pad_users(u, 1.0)
         dv.rng_key = k2
         (capacity, drain_train, drain_corun, charge_rate, battery_min,
          p_net_bad, p_net_recover, net_delay_slots,

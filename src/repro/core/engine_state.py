@@ -202,6 +202,146 @@ def _check_shapes(state: "EngineState", n: int, only=None) -> None:
                     "dynamics init_state must return (n,)-leading arrays")
 
 
+# ---------------------------------------------------------------------------
+# Sharded-scan support (core/vector_engine.py, ``SimConfig.n_devices``): pad
+# the user axis to a multiple of the mesh size with INERT rows and build the
+# matching pytree of shardings for ``jax.device_put``. Padded users park in
+# MODE_OFF with no app and a zeroed catalog row (the driver zero-pads the
+# table gathers), so they draw no energy, never enter the waiting queue and
+# never push — the scheduler scalars evolve exactly as at the live n.
+# ---------------------------------------------------------------------------
+def pad_to_devices(n: int, n_devices: int) -> int:
+    """Smallest multiple of ``n_devices`` >= ``n`` (the padded user-axis
+    length ``n_arr`` of a sharded run)."""
+    d = max(int(n_devices), 1)
+    return -(-int(n) // d) * d
+
+
+def _map_tree(fn, tree):
+    """Structure-preserving map without requiring jax (carries are
+    dict/list/tuple/array pytrees; ``None`` passes through)."""
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {k: _map_tree(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_tree(fn, v) for v in tree)
+    return fn(tree)
+
+
+def _map_tree2(fn, tree, other):
+    """Two-tree ``_map_tree`` (leaf-wise zip; structures must match)."""
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {k: _map_tree2(fn, v, other[k]) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_tree2(fn, v, o)
+                          for v, o in zip(tree, other))
+    return fn(tree, other)
+
+
+# inert fill values of the per-user fields; everything not named is 0/False
+_PAD_FILLS = {"mode": MODE_OFF, "app": -1, "plan": PLAN_HOLD}
+
+
+def pad_state_per_user(state: EngineState, n_arr: int,
+                       dyn_rows=None) -> EngineState:
+    """Host-side copy of ``state`` with every per-user leaf extended to
+    ``n_arr`` rows of INERT users: MODE_OFF, no app, zero
+    energy/updates/cooldown. Policy and aggregation carries zero-pad
+    their ``(n,)``-leading leaves (the registry carries — greedy wait
+    counters, hetero scales — initialize pad-equivalently at any n).
+    ``dyn_rows`` is the dynamics' ``pad_state(k)`` pytree of inert rows
+    (required when ``state.dyn`` is populated); its leaves are cast to
+    the state leaf dtypes. Shape-checked at ``n_arr`` on the way out."""
+    n = int(np.shape(state.mode)[0])
+    k = int(n_arr) - n
+    if k < 0:
+        raise ValueError(f"n_arr={n_arr} is below the live n={n}")
+    if k == 0:
+        return state
+
+    def pad(x, fill=0):
+        x = np.asarray(x)
+        return np.concatenate(
+            [x, np.full((k,) + x.shape[1:], fill, dtype=x.dtype)])
+
+    def pad_carry_leaf(x):
+        a = np.asarray(x)
+        if a.ndim >= 1 and a.shape[0] == n:
+            return pad(a)
+        return x
+
+    kw = {f: pad(getattr(state, f), _PAD_FILLS.get(f, 0))
+          for f in _PER_USER_FIELDS}
+    kw["carry"] = _map_tree(pad_carry_leaf, state.carry)
+    kw["agg_carry"] = _map_tree(pad_carry_leaf, state.agg_carry)
+    if state.dyn is not None:
+        if dyn_rows is None:
+            raise ValueError(
+                "pad_state_per_user needs the dynamics' pad_state(k) rows "
+                "to pad a populated EngineState.dyn")
+        kw["dyn"] = _map_tree2(
+            lambda leaf, rows: np.concatenate(
+                [np.asarray(leaf),
+                 np.asarray(rows, np.asarray(leaf).dtype)])
+            if np.ndim(leaf) >= 1 and np.shape(leaf)[0] == n else leaf,
+            state.dyn, dyn_rows)
+    new = dataclasses.replace(state, **kw)
+    _check_shapes(new, int(n_arr))
+    return new
+
+
+def unpad_state_per_user(state: EngineState, n: int) -> EngineState:
+    """Drop the pad rows again: every ``(n_arr,)``-leading per-user /
+    carry / dyn leaf sliced back to the live ``n`` (numpy or device
+    arrays — slicing works on both)."""
+    n_arr = int(np.shape(state.mode)[0])
+    if n_arr == n:
+        return state
+
+    def cut(x):
+        if np.ndim(x) >= 1 and np.shape(x)[0] == n_arr:
+            return x[:n]
+        return x
+
+    kw = {f: cut(getattr(state, f)) for f in _PER_USER_FIELDS}
+    kw["carry"] = _map_tree(cut, state.carry)
+    kw["agg_carry"] = _map_tree(cut, state.agg_carry)
+    kw["dyn"] = _map_tree(cut, state.dyn)
+    return dataclasses.replace(state, **kw)
+
+
+def state_shardings(state: EngineState, mesh, n_arr: int) -> EngineState:
+    """EngineState-shaped pytree of ``NamedSharding``s for
+    ``jax.device_put``: per-user leaves (and any ``(n_arr,)``-leading
+    carry/dyn leaf) partitioned over the mesh's ``users`` axis,
+    scheduler scalars / rng key / scalar carry leaves replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sh_u = NamedSharding(mesh, PartitionSpec("users"))
+    sh_r = NamedSharding(mesh, PartitionSpec())
+
+    def leaf_sharding(x):
+        if np.ndim(x) >= 1 and np.shape(x)[0] == int(n_arr):
+            return sh_u
+        return sh_r
+
+    kw = {}
+    for f in _FIELDS:
+        v = getattr(state, f)
+        if f in _PER_USER_FIELDS:
+            kw[f] = sh_u
+        elif f in ("carry", "agg_carry", "dyn"):
+            kw[f] = _map_tree(leaf_sharding, v)
+        elif f == "events":
+            kw[f] = None        # the driver builds the buffer separately
+        else:
+            kw[f] = sh_r
+    return EngineState(**kw)
+
+
 _FIELDS = tuple(f.name for f in dataclasses.fields(EngineState))
 
 

@@ -100,6 +100,17 @@ class Policy:
       for hooks with host side effects — under vmap ``lax.cond`` evaluates
       both branches per config, so e.g. a ``pure_callback`` guarded by a
       plan-slot cond would fire for every config at every slot.
+    - ``supports_shard``: whether ``scan_step`` may run with the user axis
+      sharded over a device mesh (``SimConfig.n_devices``,
+      core/vector_engine.py). The engine hands the hook REPLICATED
+      per-user inputs (so cross-user reductions like Eq. 16's gap sum
+      keep the single-device float order) plus padding helpers:
+      ``sv.n`` is always the LIVE user count, ``sv.n_arr`` the padded
+      array length (== ``sv.n`` unsharded), and hooks drawing per-user
+      randomness must draw at ``sv.n`` and extend via
+      ``sv.pad_users(x, fill)`` — threefry draws are shape-dependent, so
+      drawing at ``n_arr`` would fork the stream from the unsharded
+      engines. Set False for hooks with host callbacks in the step.
     """
 
     name: str = ""
@@ -108,6 +119,7 @@ class Policy:
     supports_vectorized: bool = False
     supports_jax: bool = False
     supports_vmap: bool = True
+    supports_shard: bool = True
 
     # ------------------------------------------------------------ carry
     def init_carry(self, n: int, cfg):
@@ -473,11 +485,21 @@ class OnlinePolicy(Policy):
         gap_vec = _jax_gradient_gap(vn, lag_idx, sv.eta, sv.beta)
 
         def fast(_):
-            # H == 0: the gap term adds exactly 0 to both branches
-            sched = waiting & (base <= rhs)
+            # H == 0: the gap term adds exactly 0 to both branches.
+            # sv.repl pins `sched` replicated: it has a sharded consumer
+            # in the engine (begin-training), and without the pin GSPMD
+            # propagates that layout back through cumsum/gather/where and
+            # turns the gap_sum below into reassociated shard-local
+            # partials + AllReduce (the reduce(all-gather) -> all-reduce
+            # rewrite), flipping low bits of the Eq. 16 H update
+            sched = sv.repl(waiting & (base <= rhs))
             before = jnp.cumsum(sched) - sched
             gaps = jnp.where(sched, gap_vec[before], gap_idle_v)
-            return sched, jnp.sum(jnp.where(waiting, gaps, 0.0))
+            # sum the LIVE lanes only ([:sv.n] folds to a no-op when the
+            # sharded scan hasn't padded the user axis): pad lanes never
+            # wait, and excluding their zeros keeps the reduction tree —
+            # hence the Eq. 16 H update — bit-identical to unsharded
+            return sched, jnp.sum(jnp.where(waiting, gaps, 0.0)[:sv.n])
 
         def slow(_):
             # sequential in-slot lag coupling, user-index order
@@ -520,6 +542,9 @@ class OfflinePolicy(Policy):
     # runs both branches per config, consulting the host every slot for
     # every config — keep this policy on the per-point scan path
     supports_vmap = False
+    # ... and the callback cannot run inside a GSPMD-partitioned step
+    # either: keep it off the sharded scan (SimConfig.n_devices)
+    supports_shard = False
 
     def init_carry(self, n, cfg):
         return {"next_plan": 0.0}
@@ -813,6 +838,10 @@ class EpsGreedyPolicy(Policy):
         eps, theta = sv.consts
         k2, sub = jax.random.split(sv.rng_key)
         u = jax.random.uniform(sub, (sv.n,), jnp.float32)
+        # live-n draw + fill-1.0 pad: keeps the threefry stream identical
+        # to the unsharded engines when the sharded scan pads the user
+        # axis (1.0 is never < eps, so pad lanes never explore)
+        u = sv.pad_users(u, 1.0)
         sv.rng_key = k2
         delta = jnp.where(sv.has_app, sv.pcor_g - sv.papp_g, sv.PT - sv.PI)
         go = sv.waiting & ((u < eps) | (delta <= theta))

@@ -93,10 +93,18 @@ class SimConfig:
     v_norm0: float = 1.0            # trace-mode momentum-norm model scale
     engine: str = "auto"            # auto | loop | vectorized | jax
     collect_push_log: bool = True   # push events; streamed on every engine
-    jax_chunk: int = 1024           # slots per compiled scan chunk (jax)
+    jax_chunk: int = 1024           # slots per compiled scan chunk (jax);
+    #                                 0 = auto-tune from per-device memory
+    #                                 (core/autotune.py)
     push_log_capacity: int = 0      # initial per-chunk event buffer slots
     #                                 for the jax engine (0 = auto-sized;
     #                                 doubled + chunk retried on overflow)
+    # Shard the user axis (jax engine): partition every per-user
+    # EngineState leaf over a 1-D ("users",) mesh of
+    # min(n_devices, available) devices (launch/mesh.py make_sim_mesh),
+    # scheduler scalars replicated — Alg. 2 decisions stay bit-identical
+    # to the single-device scan (core/vector_engine.py). 0 = unsharded.
+    n_devices: int = 0
     # Device dynamics (core/dynamics.py): availability / battery / network
     # churn as per-user state machines. Registry name or DeviceDynamics
     # instance; "none" (the paper's always-on fleet) is bit-identical to
@@ -220,13 +228,51 @@ class SimConfig:
         if self.trace_every <= 0:
             raise ValueError(
                 f"trace_every must be positive, got {self.trace_every}")
-        if self.jax_chunk <= 0:
+        if self.jax_chunk < 0:
             raise ValueError(
-                f"jax_chunk must be positive, got {self.jax_chunk}")
+                f"jax_chunk must be positive (or 0 = auto-tune from "
+                f"device memory), got {self.jax_chunk}")
         if self.push_log_capacity < 0:
             raise ValueError(
                 f"push_log_capacity must be non-negative, got "
                 f"{self.push_log_capacity}")
+        if self.n_devices < 0:
+            raise ValueError(
+                f"n_devices must be >= 0 (0 = unsharded), got "
+                f"{self.n_devices}")
+        if self.n_devices:
+            # The sharded scan only exists on the jax engine and has no
+            # silent degrade path (falling back to one device would make
+            # the knob lie about what ran) — reject ineligible configs
+            # here with the reason, not mid-run.
+            if self.engine in ("loop", "vectorized"):
+                raise ValueError(
+                    f"n_devices={self.n_devices} shards the jax chunked "
+                    f"scan; it cannot run under engine={self.engine!r} — "
+                    "use engine='jax' or 'auto'")
+            for what, obj in (("policy", pol), ("dynamics", dyn)):
+                if (what == "dynamics" and not dyn.active):
+                    continue
+                if not getattr(obj, "supports_jax", False):
+                    raise ValueError(
+                        f"n_devices={self.n_devices} needs a jax-capable "
+                        f"{what}; {obj.name!r} has supports_jax=False")
+                if not getattr(obj, "supports_shard", True):
+                    raise ValueError(
+                        f"{what} {obj.name!r} does not support the "
+                        "sharded scan (supports_shard=False, e.g. host "
+                        "callbacks inside the step); run with n_devices=0")
+            if self.collect_push_log:
+                if not asup["jax"]:
+                    raise ValueError(
+                        f"n_devices={self.n_devices} with a push log "
+                        f"needs a jax-capable aggregation rule; "
+                        f"{agg.name!r} implements no scan_weight hook")
+                if not getattr(agg, "supports_shard", True):
+                    raise ValueError(
+                        f"aggregation rule {agg.name!r} does not support "
+                        "the sharded scan (supports_shard=False); run "
+                        "with n_devices=0")
 
 
 @dataclasses.dataclass
@@ -503,6 +549,17 @@ class FederatedSim:
         vec_ok = (cfg.ml_mode == "trace" and set(self.ml) <= {"v_norm"}) \
             or (cfg.ml_mode == "real" and self.ml_backend is not None)
         engine = cfg.engine
+        if cfg.n_devices:
+            # the sharded scan (SimConfig validated policy/agg/dynamics
+            # shard support at construction) runs only on the jax engine
+            # and never degrades silently — remaining blockers are the
+            # per-slot host callbacks the scan cannot shard
+            if self.ml or self.ml_backend is not None:
+                raise ValueError(
+                    f"n_devices={cfg.n_devices} shards the jax chunked "
+                    "scan, which cannot run per-user ML hooks or a "
+                    "real-ML backend; set n_devices=0 for those runs")
+            return "jax"
         if engine == "auto":
             return "vectorized" if (vec_ok and pol.supports_vectorized) \
                 else "loop"

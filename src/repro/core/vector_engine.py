@@ -55,6 +55,29 @@ re-run with a doubled buffer (``count`` always records the true push
 total) — so ``collect_push_log=True`` costs O(chunk) memory at any fleet
 size, never O(T * n). Enable jax x64 for f64 parity with the numpy
 engines; in f32, user ids stay exact up to 2**24.
+
+``SimConfig.n_devices`` > 0 shards the SAME chunked scan over a 1-D
+``("users",)`` mesh (launch/mesh.py ``make_sim_mesh``) via GSPMD
+constraint steering: per-user EngineState leaves, catalog gathers and
+arrival columns carry ``PartitionSpec("users")`` constraints, scheduler
+scalars stay replicated, and XLA's SPMD partitioner inserts the
+collectives. Bit-consistency with the single-device scan is by
+construction, not luck: every input of the POLICY DECISION phase is
+constrained replicated before the ``scan_step`` hook runs, so Alg. 2's
+float reductions (Eq. 16's gap sum feeding H) compile to the exact
+single-device reduction order — a shard-local partial sum + AllReduce
+would reassociate them and could flip a decision. The surrounding
+per-user phases (arrivals, training progression, Eq. 10 energy, churn)
+stay sharded; their cross-user reductions are integer counts, which
+psum exactly. A non-divisible ``n_users`` pads the axis with INERT rows
+(``engine_state.pad_state_per_user``: MODE_OFF, zeroed catalog rows,
+arrival columns that never fire, dynamics rows pinned up) and
+stochastic hooks draw at the LIVE n, padding draws with fill 1.0
+(threefry output is shape-dependent) — so push logs, queue traces and
+decisions are digest-identical to the unsharded engine at any
+(n, mesh) combination; only energy sums differ by float reduction
+order. ``jax_chunk=0`` / ``push_log_capacity=0`` auto-tune from the
+per-device memory budget (core/autotune.py).
 """
 from __future__ import annotations
 
@@ -66,7 +89,9 @@ import numpy as np
 
 from .engine_state import (EngineState, PushBuffer, PushLog, MODE_COOL,
                            MODE_OFF, MODE_TRAIN, MODE_WAIT, PLAN_CORUN,
-                           PLAN_HOLD, PLAN_SEP)
+                           PLAN_HOLD, PLAN_SEP, _PER_USER_FIELDS,
+                           pad_state_per_user, pad_to_devices,
+                           state_shardings, unpad_state_per_user)
 from .policies import _jax_gradient_gap, _jax_trace_v_norm
 from .simulator import SimResult, n_slots, trace_v_norm
 from .staleness import gradient_gap
@@ -410,9 +435,22 @@ def reserve_jax_cache_capacity(k: int) -> None:
     _JAX_FN_CACHE_MAX = max(_JAX_FN_CACHE_MAX, int(k))
 
 
+def _mesh_key(mesh):
+    """Hashable signature of a sharding mesh for the executable caches:
+    axis names, axis sizes AND the concrete device ids — two meshes over
+    different devices must never alias one executable (their compiled
+    collectives bake in device assignments). ``None`` = unsharded."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
+
+
 def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                   collect: bool, capacity: int, statics: tuple = (),
-                  agg=None, dynamics=None, batch: int = 0):
+                  agg=None, dynamics=None, batch: int = 0,
+                  mesh=None, n_arr: int = 0):
     """Build + jit one scan chunk, memoized on (shapes,
     ``policy.jax_cache_key()``, overhead/collect flags, event-buffer
     capacity, the policy's ``scan_statics``, and — when the push log is
@@ -424,11 +462,15 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
     once. With ``batch`` > 0 the chunk is ``jax.vmap``-ped over a
     leading config axis on every operand except ``t0`` — one program
     advances ``batch`` stacked scenarios a chunk at a time (the sweep
-    path). The policy's ``scan_step`` hook supplies the decision block
-    and the rule's ``scan_weight`` the push-log weight column;
-    everything else — arrivals, cooldowns, training progression, Eq. 10
-    energy, Eq. 15/16 queues, the push-event scatter — is engine code
-    shared by every policy."""
+    path). With ``mesh`` set the chunk is built with GSPMD sharding
+    constraints over the mesh's ``users`` axis at the padded length
+    ``n_arr`` — the mesh signature (axes, sizes, device ids) and
+    ``n_arr`` join the memo key so sharded and unsharded executables of
+    the same shape NEVER alias. The policy's ``scan_step`` hook supplies
+    the decision block and the rule's ``scan_weight`` the push-log
+    weight column; everything else — arrivals, cooldowns, training
+    progression, Eq. 10 energy, Eq. 15/16 queues, the push-event scatter
+    — is engine code shared by every policy."""
     if agg is None:
         from .aggregation import resolve_aggregation
         agg = resolve_aggregation("replace")
@@ -437,12 +479,14 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
         dynamics = resolve_dynamics("none")
     key = (n, chunk, T, policy.jax_cache_key(), overhead, collect, capacity,
            statics, agg.jax_cache_key() if collect else None,
-           dynamics.jax_cache_key() if dynamics.active else None, batch)
+           dynamics.jax_cache_key() if dynamics.active else None, batch,
+           _mesh_key(mesh), n_arr or n)
     fn = _JAX_FN_CACHE.pop(key, None)   # pop+reinsert = LRU order
     if fn is None:
         _JAX_CACHE_STATS["misses"] += 1
         fn = _build_jax_chunk_fn(n, chunk, T, policy, overhead, collect,
-                                 capacity, statics, agg, dynamics, batch)
+                                 capacity, statics, agg, dynamics, batch,
+                                 mesh, n_arr)
         while _JAX_FN_CACHE and len(_JAX_FN_CACHE) >= _JAX_FN_CACHE_MAX:
             old = next(iter(_JAX_FN_CACHE))
             _JAX_FN_CACHE.pop(old)      # evict LRU
@@ -457,7 +501,8 @@ def _jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
 
 def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                         collect: bool, capacity: int, statics: tuple = (),
-                        agg=None, dynamics=None, batch: int = 0):
+                        agg=None, dynamics=None, batch: int = 0,
+                        mesh=None, n_arr: int = 0):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -472,6 +517,49 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
     # chunks and the scan skips slots past T, so the tail chunk reuses
     # THIS executable instead of compiling a second one per horizon
     pad = chunk > 0 and (T % chunk) != 0
+    # sharded build (see module docstring): n_arr is the padded user-axis
+    # length, shard/repl insert the GSPMD constraints, place dispatches
+    # per leaf — all identity on the unsharded build, whose traced graph
+    # stays byte-identical to the historical one
+    n_arr = int(n_arr) or n
+    if mesh is not None:
+        if batch:
+            raise ValueError("sharded chunks never batch: the mesh IS the "
+                             "parallelism (sweep_bucket_key returns None)")
+        from jax.sharding import NamedSharding, PartitionSpec
+        _sh_users = NamedSharding(mesh, PartitionSpec("users"))
+        _sh_repl = NamedSharding(mesh, PartitionSpec())
+
+        def shard(x):
+            return lax.with_sharding_constraint(x, _sh_users)
+
+        def repl(x):
+            return lax.with_sharding_constraint(x, _sh_repl)
+
+        def place(x):       # carry/dyn leaves: per-user iff (n_arr,)-led
+            if getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_arr:
+                return shard(x)
+            return repl(x)
+
+        def constrain_state(s2):
+            # pin the scan carry's layout at the end of every slot so
+            # GSPMD keeps per-user leaves sharded and the scheduler
+            # scalars replicated across chunks — without this the
+            # partitioner may pick a gather-heavy layout for the carry
+            kw = {fld: shard(getattr(s2, fld)) for fld in _PER_USER_FIELDS}
+            for fld in ("version", "in_flight", "round_open", "Q", "H",
+                        "sum_Q", "sum_H", "corun_updates", "rng_key"):
+                kw[fld] = repl(getattr(s2, fld))
+            kw["carry"] = jax.tree.map(place, s2.carry)
+            kw["agg_carry"] = jax.tree.map(place, s2.agg_carry)
+            kw["dyn"] = jax.tree.map(place, s2.dyn)
+            ev = s2.events
+            if ev is not None:
+                ev = PushBuffer(repl(ev.rows), repl(ev.count))
+            kw["events"] = ev
+            return EngineState(**kw)
+    else:
+        shard = repl = place = None
 
     def simulate(tables, app_sched, app_choice, scalars, pol_ops, agg_ops,
                  dyn_ops, t0, state):
@@ -480,10 +568,25 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
          offline_window, offline_resolution, fp_zero) = scalars
         f = PT.dtype
         i = jnp.asarray(0).dtype     # default int dtype (honors x64)
-        ar = jnp.arange(n)
-        sched_c = lax.dynamic_slice(app_sched, (t0, 0), (chunk, n))
-        choice_c = lax.dynamic_slice(app_choice, (t0, 0), (chunk, n))
+        ar = jnp.arange(n_arr)
+        sched_c = lax.dynamic_slice(app_sched, (t0, 0), (chunk, n_arr))
+        choice_c = lax.dynamic_slice(app_choice, (t0, 0), (chunk, n_arr))
         ts = t0 + jnp.arange(chunk)
+
+        if n_arr == n:
+            def pad_users(x, fill):
+                return x
+        else:
+            def pad_users(x, fill):
+                ext = jnp.full(x.shape[:-1] + (n_arr - n,), fill, x.dtype)
+                return jnp.concatenate([x, ext], axis=-1)
+
+        # sv.repl / dv.repl: hooks pin a float-reduction OPERAND with
+        # this before summing it, so GSPMD cannot pull the reduction
+        # sharded through a downstream sharded consumer (a shard-local
+        # partial sum + AllReduce reassociates the floats and flips
+        # low bits of e.g. Eq. 16's gap_sum). Identity when unsharded.
+        repl_pin = repl if mesh is not None else (lambda x: x)
 
         def step(s, xs):
             srow, crow, t = xs
@@ -512,7 +615,12 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             # dynamics rng draw precedes the policy's so the key chain
             # matches the host engines bit for bit
             if dyn_active:
+                # dv.n is the LIVE user count — hooks draw at it and pad
+                # via dv.pad_users so the threefry stream matches the
+                # host engines at any padding (dv.n_arr == n unsharded)
                 dv = SimpleNamespace(jnp=jnp, jax=jax, lax=lax, n=n,
+                                     n_arr=n_arr, pad_users=pad_users,
+                                     repl=repl_pin,
                                      float_dtype=f, int_dtype=i,
                                      rng_key=rng_key, mode=mode,
                                      corun=corun, t_d=t_d, fp_zero=fp_zero,
@@ -565,15 +673,42 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             waiting = mode == MODE_WAIT
             has_app = app >= 0
 
-            # decisions: the policy's carry hook, on a mutable slot view
+            # decisions: the policy's carry hook, on a mutable slot view.
+            # Under a mesh every hook input (and the carry) is constrained
+            # REPLICATED first: the hook's cross-user float reductions —
+            # Eq. 16's gap_sum driving H, the online slow path's in-slot
+            # replay — then compile to the single-device reduction order,
+            # so Alg. 2 decisions are bit-identical to the unsharded scan
+            # (a shard-local partial sum + AllReduce would reassociate
+            # them). The engine keeps its own sharded views of the same
+            # arrays for the surrounding per-user phases.
+            if mesh is None:
+                pol_carry = s.carry
+                sv_waiting, sv_has_app, sv_app = waiting, has_app, app
+                sv_updates, sv_plan, sv_idle = updates, plan, idle_gap
+                sv_pcor, sv_papp, sv_tcor = pcor_g, papp_g, tcor_g
+                sv_PT, sv_TT, sv_PI, sv_PS = PT, TT, PI, PS
+            else:
+                pol_carry = jax.tree.map(repl, s.carry)
+                sv_waiting, sv_has_app, sv_app = \
+                    repl(waiting), repl(has_app), repl(app)
+                sv_updates, sv_plan, sv_idle = \
+                    repl(updates), repl(plan), repl(idle_gap)
+                sv_pcor, sv_papp, sv_tcor = \
+                    repl(pcor_g), repl(papp_g), repl(tcor_g)
+                sv_PT, sv_TT, sv_PI, sv_PS = \
+                    repl(PT), repl(TT), repl(PI), repl(PS)
             sv = SimpleNamespace(
                 jnp=jnp, lax=lax, jax=jax, n=n, T=T,
+                n_arr=n_arr, pad_users=pad_users, repl=repl_pin,
                 float_dtype=f, int_dtype=i, t=t,
-                waiting=waiting, has_app=has_app, app=app, updates=updates,
-                pcor_g=pcor_g, papp_g=papp_g, tcor_g=tcor_g,
-                PT=PT, TT=TT, PI=PI, PS=PS, T_COR=T_COR, SRATE=SRATE,
+                waiting=sv_waiting, has_app=sv_has_app, app=sv_app,
+                updates=sv_updates,
+                pcor_g=sv_pcor, papp_g=sv_papp, tcor_g=sv_tcor,
+                PT=sv_PT, TT=sv_TT, PI=sv_PI, PS=sv_PS,
+                T_COR=T_COR, SRATE=SRATE,
                 app_sched=app_sched, app_choice=app_choice,
-                plan=plan, idle_gap=idle_gap, in_flight=in_flight,
+                plan=sv_plan, idle_gap=sv_idle, in_flight=in_flight,
                 version=version, round_open=s.round_open, Q=Q, H=H,
                 rng_key=rng_key,
                 V=V, L_b=L_b, epsilon=epsilon, eta=eta, beta=beta,
@@ -581,11 +716,23 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 offline_window=offline_window,
                 offline_resolution=offline_resolution,
                 consts=pol_ops, statics=statics)
-            carry, (start, gap_sum) = policy.scan_step(s.carry, sv)
+            carry, (start, gap_sum) = policy.scan_step(pol_carry, sv)
             idle_gap = sv.idle_gap
             round_open = sv.round_open
             plan = sv.plan
             rng_key = sv.rng_key
+            if mesh is not None:
+                # hook outputs return to the sharded layout for the
+                # per-user phases below. The inner repl() pin is load-
+                # bearing: without it GSPMD back-propagates the sharded
+                # consumer layout INTO the hook graph, reassociating its
+                # float reductions (Eq. 16's gap_sum) and partitioning
+                # its lax.scan bodies — the hook must compute fully
+                # replicated to stay bit-identical to the unsharded scan
+                start = shard(repl(start))
+                idle_gap = shard(repl(idle_gap))
+                plan = shard(repl(plan))
+                carry = jax.tree.map(lambda x: place(repl(x)), carry)
             served = jnp.sum(start)
 
             # begin training
@@ -617,31 +764,47 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
             events = s.events
             agg_carry = s.agg_carry
             if collect:
-                rank = jnp.cumsum(fin) - fin
+                # the scatter runs REPLICATED under a mesh (pads never
+                # finish, so the cumsum ranks and the buffer cursor match
+                # the unsharded scan; the buffer itself is a replicated
+                # carry leaf) — cheap, since only (n,) vectors and the
+                # O(capacity) buffer are involved, never the big state
+                if mesh is None:
+                    fin_e, corun_e, pulled_e, ar_e = fin, corun, \
+                        pulled_at, ar
+                else:
+                    fin_e, corun_e, pulled_e, ar_e = \
+                        repl(fin), repl(corun), repl(pulled_at), repl(ar)
+                rank = jnp.cumsum(fin_e) - fin_e
                 if policy.sync_rounds:
-                    lag = version - pulled_at
+                    lag = version - pulled_e
                     vn = _jax_trace_v_norm(v_norm0, version, jnp, fp_zero)
                 else:
                     vers = version + rank
-                    lag = vers - pulled_at
+                    lag = vers - pulled_e
                     vn = _jax_trace_v_norm(v_norm0, vers, jnp, fp_zero)
                 gap = _jax_gradient_gap(vn, lag, eta, beta)
                 if policy.sync_rounds:
                     # FedAvg rounds average; no per-push weight
-                    w = jnp.ones((n,), f)
+                    w = jnp.ones((n_arr,), f)
                 else:
                     pv = SimpleNamespace(
                         jnp=jnp, lax=lax, jax=jax, float_dtype=f,
-                        lag=lag, gap=gap, v_norm=vn, users=ar,
+                        lag=lag, gap=gap, v_norm=vn, users=ar_e,
                         consts=agg_ops)
+                    if mesh is not None:
+                        agg_carry = jax.tree.map(repl, agg_carry)
                     agg_carry, w = agg.scan_weight(agg_carry, pv)
-                    w = jnp.broadcast_to(w, (n,))
+                    if mesh is not None:
+                        agg_carry = jax.tree.map(place, agg_carry)
+                    w = jnp.broadcast_to(w, (n_arr,))
                 rows = jnp.stack(
-                    [jnp.broadcast_to(t, (n,)).astype(f), ar.astype(f),
-                     lag.astype(f), gap.astype(f), corun.astype(f),
+                    [jnp.broadcast_to(t, (n_arr,)).astype(f),
+                     ar_e.astype(f),
+                     lag.astype(f), gap.astype(f), corun_e.astype(f),
                      w.astype(f)],
                     axis=1)
-                pos = jnp.where(fin, events.count + rank, capacity)
+                pos = jnp.where(fin_e, events.count + rank, capacity)
                 events = PushBuffer(
                     events.rows.at[pos].set(rows, mode="drop"),
                     events.count + kfin)
@@ -681,6 +844,8 @@ def _build_jax_chunk_fn(n: int, chunk: int, T: int, policy, overhead: bool,
                 sum_Q=s.sum_Q + Q, sum_H=s.sum_H + H,
                 corun_updates=corun_updates, rng_key=rng_key,
                 carry=carry, agg_carry=agg_carry, dyn=dyn, events=events)
+            if mesh is not None:
+                s2 = constrain_state(s2)
             return s2, (Q, H, jnp.sum(energy))
 
         return lax.scan(step, state, (sched_c, choice_c, ts))
@@ -754,7 +919,7 @@ def _next_pow2(k: int) -> int:
     return c
 
 
-def _jax_run_setup(sim, jax, jnp):
+def _jax_run_setup(sim, jax, jnp, n_devices: int = 1):
     """HOST (numpy) operands + engine-dtype state for one sim, shared by
     the per-point path (`_run_jax`) and the batched sweep path
     (`run_jax_sweep`). Everything stays numpy here on purpose: the
@@ -764,7 +929,11 @@ def _jax_run_setup(sim, jax, jnp):
     not B (host->device dispatch, not the vmapped scan, dominated sweep
     wall-clock before this). Arrivals are padded host-side to a whole
     number of ``jax_chunk`` chunks so an uneven horizon reuses the
-    full-chunk executable — the scan skips padded slots (t >= T)."""
+    full-chunk executable — the scan skips padded slots (t >= T).
+    ``jax_chunk=0`` resolves the chunk (and, for a sharded run without
+    an explicit ``push_log_capacity``, the push-buffer size) against the
+    per-device memory budget (core/autotune.py); ``n_devices`` is the
+    LIVE mesh size the caller resolved, 1 for unsharded runs."""
     cfg = sim.cfg
     n = cfg.n_users
     T = n_slots(cfg)
@@ -772,7 +941,15 @@ def _jax_run_setup(sim, jax, jnp):
     f = jnp.zeros(0).dtype          # honors jax_enable_x64
     i = jnp.asarray(0).dtype        # (jax dtypes ARE numpy dtypes)
     tables = tuple(np.asarray(a, f) for a in _user_tables(sim))
-    chunk = min(cfg.jax_chunk, T) if T else 0
+    tune = None
+    jax_chunk = cfg.jax_chunk
+    if jax_chunk == 0 or (n_devices > 1 and collect
+                          and not cfg.push_log_capacity):
+        from .autotune import autotune_scan_params
+        tune = autotune_scan_params(sim, n_devices=n_devices)
+        if jax_chunk == 0:
+            jax_chunk = tune.jax_chunk
+    chunk = min(jax_chunk, T) if T else 0
     n_chunks = -(-T // chunk) if T else 0
     sched = np.asarray(sim.app_sched[:T])
     choice = np.asarray(sim.app_choice[:T], np.int32)
@@ -801,9 +978,18 @@ def _jax_run_setup(sim, jax, jnp):
         if sim.dynamics.active else ()
     # initial per-chunk event capacity; an overflowing chunk is re-run
     # from its saved entry state with a doubled buffer, so the guess
-    # only costs (rare) recompiles, never correctness
-    cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n)) \
-        if collect else 0
+    # only costs (rare) recompiles, never correctness. The legacy
+    # max(1024, 2n) guess is a ~960 MB replicated buffer at n=10M, so
+    # sharded runs (and jax_chunk=0 runs) take the tuner's rate-based
+    # capacity instead.
+    if not collect:
+        cap = 0
+    elif cfg.push_log_capacity:
+        cap = _next_pow2(cfg.push_log_capacity)
+    elif tune is not None:
+        cap = tune.push_capacity
+    else:
+        cap = _next_pow2(max(1024, 2 * n))
     return SimpleNamespace(
         n=n, T=T, chunk=chunk, n_chunks=n_chunks, collect=collect,
         f=f, i=i, tables=tables, app_sched=sched,
@@ -832,6 +1018,83 @@ def _ops_to_device(rs, jax, jnp):
     return rs
 
 
+def _pad_setup(rs, n_arr, sim):
+    """Host-pad a `_jax_run_setup` namespace from ``n`` to ``n_arr``
+    users (a multiple of the mesh size) with INERT rows: zero catalog
+    rows (zero idle power -> zero energy), all-False arrival columns,
+    MODE_OFF state rows, and the dynamics' own ``pad_state`` rows
+    (pinned up/on forever, so pads never enter the queues, never push,
+    never draw energy — property-tested in tests/test_sharded_sim.py)."""
+    n = rs.n
+    if n_arr == n:
+        return rs
+    k = n_arr - n
+
+    def pad_rows(a):
+        a = np.asarray(a)
+        return np.concatenate([a, np.zeros((k,) + a.shape[1:], a.dtype)])
+
+    def pad_cols(a):
+        a = np.asarray(a)
+        return np.concatenate(
+            [a, np.zeros(a.shape[:1] + (k,), a.dtype)], axis=1)
+
+    rs.tables = tuple(pad_rows(t) for t in rs.tables)
+    rs.app_sched = pad_cols(rs.app_sched)
+    rs.app_choice = pad_cols(rs.app_choice)
+    dyn_rows = sim.dynamics.pad_state(k) if sim.dynamics.active else None
+    if sim.dynamics.active and dyn_rows is None:
+        raise ValueError(
+            f"{type(sim.dynamics).__name__} has no pad_state recipe; "
+            "sharded runs need one when n_users is not a multiple of the "
+            "mesh size (or pick n_users divisible by n_devices)")
+    rs.state = pad_state_per_user(rs.state, n_arr, dyn_rows=dyn_rows)
+    return rs
+
+
+def _mesh_ops_to_device(rs, mesh, n_arr, jax, jnp):
+    """Device-put a (padded) `_jax_run_setup` namespace onto the
+    ``("users",)`` mesh: catalog tables shard along their leading user
+    axis, arrival operands along their user COLUMN (axis 1), scheduler
+    scalars and hook operand tuples replicate, and the EngineState
+    pytree lands leaf-wise per ``state_shardings`` — one sharded
+    transfer per leaf, so the first chunk starts with every operand
+    already laid out and XLA inserts no resharding prologue."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    x64 = jax.config.jax_enable_x64
+
+    def canon(x):       # jnp.asarray's dtype canonicalization, host-side
+        a = np.asarray(x)
+        if not x64 and a.dtype.itemsize == 8 and a.dtype.kind in "fiu":
+            a = a.astype({"f": np.float32, "i": np.int32,
+                          "u": np.uint32}[a.dtype.kind])
+        return a
+
+    sh_users = NamedSharding(mesh, PartitionSpec("users"))
+    sh_cols = NamedSharding(mesh, PartitionSpec(None, "users"))
+    sh_repl = NamedSharding(mesh, PartitionSpec())
+
+    def put(x, sh):
+        return jax.device_put(canon(x), sh)
+
+    def repl_tree(tree):
+        return jax.tree.map(lambda x: put(x, sh_repl), tree)
+
+    rs.tables = tuple(put(t, sh_users) for t in rs.tables)
+    rs.app_sched = put(rs.app_sched, sh_cols)
+    rs.app_choice = put(rs.app_choice, sh_cols)
+    rs.scalars = repl_tree(rs.scalars)
+    rs.pol_ops = repl_tree(rs.pol_ops)
+    rs.agg_ops = repl_tree(rs.agg_ops)
+    rs.dyn_ops = repl_tree(rs.dyn_ops)
+    shardings = state_shardings(rs.state, mesh, n_arr)
+    rs.state = jax.tree.map(lambda x, sh: put(x, sh),
+                            rs.state, shardings)
+    rs.repl_sharding = sh_repl
+    return rs
+
+
 def _run_jax(sim) -> SimResult:
     import jax
     import jax.numpy as jnp
@@ -846,13 +1109,38 @@ def _run_jax(sim) -> SimResult:
             not dynamics_support(dynamics)["jax"] or \
             (cfg.collect_push_log and not aggregation_support(agg)["jax"]):
         return _NumpyEngine(sim).run()  # resolve_engine reroutes; be safe
-    rs = _ops_to_device(_jax_run_setup(sim, jax, jnp), jax, jnp)
+    # sharded run: resolve the ("users",) mesh first — the auto-tuner and
+    # the user-axis padding both need the LIVE device count. A 1-device
+    # mesh degenerates to the plain path (identical graph, no constraint
+    # ops to trace through).
+    mesh = None
+    n_arr = 0
+    if cfg.n_devices:
+        from ..launch.mesh import make_sim_mesh
+        mesh = make_sim_mesh(cfg.n_devices)
+        if mesh.devices.size == 1:
+            mesh = None
+    rs = _jax_run_setup(sim, jax, jnp,
+                        n_devices=mesh.devices.size if mesh else 1)
+    if mesh is not None:
+        n_arr = pad_to_devices(rs.n, mesh.devices.size)
+        rs = _mesh_ops_to_device(_pad_setup(rs, n_arr, sim), mesh, n_arr,
+                                 jax, jnp)
+    else:
+        rs = _ops_to_device(rs, jax, jnp)
     n, T, chunk, collect, f, i = rs.n, rs.T, rs.chunk, rs.collect, rs.f, rs.i
     cap = rs.cap
     state = rs.state
+
+    def fresh_events(c):
+        ev = PushBuffer(jnp.zeros((c, 6), f), jnp.asarray(0, i))
+        if mesh is not None:    # the buffer is a replicated carry leaf
+            ev = PushBuffer(jax.device_put(ev.rows, rs.repl_sharding),
+                            jax.device_put(ev.count, rs.repl_sharding))
+        return ev
+
     if collect:
-        state = state.replace(events=PushBuffer(
-            jnp.zeros((cap, 6), f), jnp.asarray(0, i)))
+        state = state.replace(events=fresh_events(cap))
 
     log = PushLog()
     qs_parts, hs_parts, e_parts = [], [], []
@@ -860,7 +1148,8 @@ def _run_jax(sim) -> SimResult:
     while ci < rs.n_chunks:
         t0 = ci * chunk
         fn = _jax_chunk_fn(n, chunk, T, policy, rs.overhead, collect, cap,
-                           rs.statics, agg, dynamics)
+                           rs.statics, agg, dynamics, mesh=mesh,
+                           n_arr=n_arr)
         prev = state
         state, (qs, hs, esum) = fn(rs.tables, rs.app_sched, rs.app_choice,
                                    rs.scalars, rs.pol_ops, rs.agg_ops,
@@ -871,13 +1160,15 @@ def _run_jax(sim) -> SimResult:
                 # buffer overflow: double and re-run this chunk from its
                 # saved entry state (count is exact, rows past cap dropped)
                 cap = _next_pow2(cnt)
-                state = prev.replace(events=PushBuffer(
-                    jnp.zeros((cap, 6), f), jnp.asarray(0, i)))
+                state = prev.replace(events=fresh_events(cap))
                 continue
             if cnt:
                 log.extend_rows(np.asarray(state.events.rows[:cnt]))
-            state = state.replace(events=PushBuffer(
-                state.events.rows, jnp.asarray(0, i)))
+            cnt0 = jnp.asarray(0, i)
+            if mesh is not None:
+                cnt0 = jax.device_put(cnt0, rs.repl_sharding)
+            state = state.replace(events=PushBuffer(state.events.rows,
+                                                    cnt0))
         m = min(chunk, T - t0)          # live slots (tail chunk is padded)
         qs_parts.append(np.asarray(qs, dtype=float)[:m])
         hs_parts.append(np.asarray(hs, dtype=float)[:m])
@@ -885,9 +1176,17 @@ def _run_jax(sim) -> SimResult:
         ci += 1
 
     # the run's final state, readable on the host like the other engines'
-    sim.state = _state_to_host(state, jax)
-    energy_total = float(jnp.sum(state.energy))
-    updates_total = int(jnp.sum(state.updates))
+    host = _state_to_host(state, jax)
+    if mesh is not None and n_arr != n:
+        host = unpad_state_per_user(host, n)     # pad rows are all-zero
+    sim.state = host
+    if mesh is None:
+        energy_total = float(jnp.sum(state.energy))
+    else:
+        # device reduction order differs across shards anyway; sum the
+        # unpadded host rows (pads contribute exact 0.0 either way)
+        energy_total = float(np.sum(host.energy))
+    updates_total = int(np.sum(host.updates))
     sum_Q, sum_H = float(state.sum_Q), float(state.sum_H)
     corun_updates = int(state.corun_updates)
     idx = np.arange(0, T, cfg.trace_every)
@@ -928,6 +1227,11 @@ def sweep_bucket_key(sim):
     policy, agg, dynamics = sim.policy, sim.agg, sim.dynamics
     if sim.ml or sim.ml_backend is not None or cfg.engine == "loop":
         return None
+    if cfg.n_devices or cfg.jax_chunk == 0:
+        # sharded sims run per-point — the mesh IS the parallelism, and
+        # an auto-tuned chunk (jax_chunk=0) resolves against the live
+        # device set at run time, not against a bucket
+        return None
     if not (policy.supports_jax and getattr(policy, "supports_vmap", True)):
         return None
     if not (dynamics_support(dynamics)["jax"]
@@ -943,7 +1247,8 @@ def sweep_bucket_key(sim):
         return None
     cap = _next_pow2(cfg.push_log_capacity or max(1024, 2 * n)) \
         if collect else 0
-    return (n, min(cfg.jax_chunk, T), T, policy.jax_cache_key(),
+    return (n, min(cfg.jax_chunk, T), T, cfg.n_devices,
+            policy.jax_cache_key(),
             cfg.include_scheduler_overhead, collect, cap,
             tuple(policy.scan_statics(cfg)),
             agg.jax_cache_key() if collect else None,

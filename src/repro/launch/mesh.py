@@ -137,6 +137,25 @@ def make_serving_mesh(n_shards: int):
     return make_mesh((min(int(n_shards), n),), ("shard",))
 
 
+def make_sim_mesh(n_devices: int = 0):
+    """1-D ``("users",)`` mesh for the simulator's sharded chunked scan
+    (``core/vector_engine.py``): the per-user ``EngineState`` axis is
+    partitioned over it while the scheduler scalars stay replicated.
+    Sized to ``min(n_devices, available)`` like :func:`make_serving_mesh`
+    so an over-asked host still gets a valid mesh; ``n_devices=0`` (the
+    ``SimConfig`` default's sentinel) means "all local devices". On a
+    CPU-only host, force multiple devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* the
+    first jax import — the scan's collectives then run as host memcpys,
+    and the measured partitioning transfers directly to accelerator
+    meshes."""
+    if n_devices < 0:
+        raise ValueError(f"n_devices must be >= 0, got {n_devices}")
+    n = len(jax.devices())
+    d = n if n_devices == 0 else min(int(n_devices), n)
+    return make_mesh((d,), ("users",))
+
+
 def shard_placement(n_shards: int, mesh=None) -> list:
     """Device owning each of ``n_shards`` logical shards: round-robin
     over the mesh's ``shard`` axis (or all host devices when ``mesh`` is

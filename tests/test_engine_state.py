@@ -311,7 +311,9 @@ class TestPushBufferStreaming:
 class TestConfigKnobs:
     def test_jax_chunk_validation(self):
         with pytest.raises(ValueError, match="jax_chunk"):
-            SimConfig(jax_chunk=0)
+            SimConfig(jax_chunk=-1)
+        # 0 is the auto-tune sentinel (core/autotune.py), not an error
+        assert SimConfig(jax_chunk=0).jax_chunk == 0
 
     def test_push_log_capacity_validation(self):
         with pytest.raises(ValueError, match="push_log_capacity"):

@@ -195,6 +195,29 @@ class TestSweepCompileCost:
                        seed=0).build()
         assert ve.sweep_bucket_key(sim) is None
 
+    def test_sharded_run_never_aliases_unsharded(self):
+        # the memo key carries the mesh signature + padded user-axis
+        # length: an n_devices run must trace its OWN executable (the
+        # sharded program bakes in collectives and device assignments),
+        # never reuse — or poison — the unsharded entry of the same
+        # shape, and it opts out of the batched-sweep path entirely
+        import jax
+        kw = dict(policy="online", n_users=8, horizon_s=600, seed=3,
+                  engine="jax", jax_chunk=128)
+        run_experiment(Scenario(**kw))                  # warm unsharded
+        sharded = dict(kw, n_devices=len(jax.devices()))
+        assert ve.sweep_bucket_key(Scenario(**sharded).build()) is None
+        before = set(ve._JAX_FN_CACHE)
+        stats0 = ve.jax_cache_stats()
+        run_experiment(Scenario(**sharded))
+        assert len(set(ve._JAX_FN_CACHE) - before) == 1  # distinct key
+        stats1 = ve.jax_cache_stats()
+        assert stats1["misses"] == stats0["misses"] + 1
+        # repeats of either flavor are pure cache hits
+        run_experiment(Scenario(**sharded))
+        run_experiment(Scenario(**kw))
+        assert ve.jax_cache_stats()["misses"] == stats1["misses"]
+
     def test_run_jax_sweep_rejects_mixed_keys(self):
         sims = [Scenario(policy="online", n_users=n, horizon_s=600,
                          seed=0).build() for n in (8, 12)]
